@@ -1,0 +1,49 @@
+"""Fig. 10: system-load knobs — (a) the update cycle F; (b) server response
+latency vs. client count (M/D/1-style queueing over ACA service times)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import row, world
+from repro.core import aca as aca_mod
+
+
+def run(quick: bool = False):
+    w = world(quick)
+    s = w.s
+    rows = []
+    # (a) update cycle F
+    for F in ([80, 150] if quick else [75, 150, 300, 600]):
+        import dataclasses
+        w2 = type(w)(dataclasses.replace(w.s, frames=F,
+                                         rounds=max(2, s.rounds * s.frames // F)))
+        labels = w2.client_labels()
+        res = w2.coca(labels)
+        rows.append(row(f"fig10a/F={F}", res.avg_latency,
+                        accuracy=res.accuracy))
+    # (b) server response latency vs clients: measure one ACA allocation,
+    # then model request queueing at l = N/F requests per frame-time.
+    req = aca_mod.AllocationRequest(
+        phi_global=np.random.default_rng(0).uniform(0, 100, s.num_classes),
+        tau=np.random.default_rng(1).integers(0, 900, s.num_classes),
+        r_est=np.linspace(0.1, 0.9, s.num_layers),
+        upsilon=np.linspace(3.0, 0.1, s.num_layers),
+        entry_sizes=np.full(s.num_layers, s.sem_dim * 4.0),
+        mem_budget=s.mem_budget, round_frames=s.frames)
+    t0 = time.perf_counter()
+    n_trials = 200
+    for _ in range(n_trials):
+        aca_mod.aca_allocate(req)
+    service_s = (time.perf_counter() - t0) / n_trials
+    frame_time = w.cm.full_latency() / 1e3          # ms -> s scale factor
+    for n in ([60, 160] if quick else [20, 60, 100, 160]):
+        lam = n / (s.frames * frame_time)           # requests/s at the server
+        mu = 1.0 / max(service_s, 1e-9)
+        rho = min(lam / mu, 0.95)
+        wait = service_s + rho / (mu * max(1 - rho, 1e-6)) / 2  # M/D/1
+        rows.append(row(f"fig10b/clients={n}", wait * 1e3,
+                        service_us=service_s * 1e6, utilisation=rho))
+    return rows

@@ -1,0 +1,45 @@
+"""Fig. 1(a): latency/accuracy vs. cache size; Fig. 1(b): per-layer profile.
+
+Cache size is controlled as in the paper: activate k of the L cache layers at
+regular intervals with the full class set, sweep k.  The sweet-spot shape —
+latency drops steeply, bottoms out around a small fraction, then creeps back
+up as lookup overhead dominates — is the motivation for ACA.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, world
+
+
+def run(quick: bool = False):
+    w = world(quick)
+    L = w.s.num_layers
+    labels = w.client_labels()
+    rows = []
+    full_lat, edge_acc = w.cm.full_latency(), None
+    fracs = [0.0, 1 / L, 0.25, 0.5, 0.75, 1.0]
+    for frac in fracs:
+        k = int(round(frac * L))
+        if frac == 0.0:
+            lat, acc = w.edge_only(labels)
+            rows.append(row("fig1a/cache=0%", lat, accuracy=acc, reduction=0.0))
+            edge_acc = acc
+            continue
+        layers = tuple(np.linspace(0, L - 1, k).round().astype(int))
+        res = w.coca(labels, dynamic_allocation=False, static_layers=layers,
+                     mem_budget=1e12)
+        rows.append(row(f"fig1a/cache={frac:.0%}", res.avg_latency,
+                        accuracy=res.accuracy,
+                        reduction=1 - res.avg_latency / full_lat,
+                        hit=res.hit_ratio))
+    # Fig 1(b): per-layer first-hit ratio + hit accuracy with all layers on
+    res = w.coca(labels, dynamic_allocation=False,
+                 static_layers=tuple(range(L)), mem_budget=1e12)
+    hist = res.exit_histogram[:-1].astype(float)
+    ratio = hist / max(res.exit_histogram.sum(), 1)
+    for j in range(L):
+        rows.append(row(f"fig1b/layer{j:02d}", 0.0,
+                        first_hit_ratio=float(ratio[j])))
+    return rows

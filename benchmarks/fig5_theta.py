@@ -1,0 +1,20 @@
+"""Fig. 5: the Θ sweep — hit ratio falls, hit accuracy / overall accuracy /
+latency all rise as the hit criterion tightens."""
+
+from __future__ import annotations
+
+from benchmarks.common import row, world
+
+
+def run(quick: bool = False):
+    w = world(quick)
+    labels = w.client_labels()
+    thetas = [0.04, 0.08, 0.16] if quick else [0.04, 0.06, 0.08, 0.10,
+                                               0.14, 0.20]
+    rows = []
+    for t in thetas:
+        res = w.coca(labels, theta=t)
+        rows.append(row(f"fig5/theta={t}", res.avg_latency,
+                        hit=res.hit_ratio, hit_acc=res.hit_accuracy,
+                        accuracy=res.accuracy))
+    return rows

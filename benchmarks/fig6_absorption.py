@@ -1,0 +1,53 @@
+"""Fig. 6: absorption ratio and absorption accuracy vs. the Γ (hit) and Δ
+(miss) sample-selection thresholds."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import world, row
+from repro.core import CacheConfig, CacheTable, lookup_all_layers
+from repro.core.semantic_cache import l2_normalize
+
+
+def run(quick: bool = False):
+    w = world(quick)
+    s = w.s
+    rng = np.random.default_rng(1)
+    labels = w.client_labels(rounds=1)[0, 0]
+    sems, logits = w.tap_fn()(0, 0, labels)
+    sems, logits = np.asarray(sems), np.asarray(logits)
+    model_pred = np.argmax(logits, 1)
+
+    from repro.core.server import profile_initial_cache
+    cal, _ = w.tap_shared(w.shared_labels)
+    entries, _ = profile_initial_cache(cal, jnp.asarray(w.shared_labels),
+                                       s.num_classes)
+    table = CacheTable(entries=entries,
+                       class_mask=jnp.ones(s.num_classes, bool),
+                       layer_mask=jnp.ones(s.num_layers, bool))
+    cfg = CacheConfig(num_classes=s.num_classes, num_layers=s.num_layers,
+                      sem_dim=s.sem_dim, theta=s.theta)
+    look = lookup_all_layers(table, jnp.asarray(sems), cfg)
+    hit = np.asarray(look.hit)
+    pred = np.asarray(look.pred)
+    el = np.minimum(np.asarray(look.exit_layer), s.num_layers - 1)
+    d_exit = np.asarray(look.scores)[np.arange(len(labels)), el]
+
+    rows = []
+    for g in ([0.15, 0.3] if quick else [0.12, 0.15, 0.2, 0.3, 0.4]):
+        sel = hit & (d_exit > g)
+        acc = (pred[sel] == labels[sel]).mean() if sel.any() else 1.0
+        rows.append(row(f"fig6/gamma={g}", 0.0, absorb=float(sel.mean()),
+                        acc=float(acc)))
+    probs = np.exp(logits - logits.max(1, keepdims=True))
+    probs /= probs.sum(1, keepdims=True)
+    marg = np.sort(probs, 1)[:, -1] - np.sort(probs, 1)[:, -2]
+    for d in ([0.25, 0.5] if quick else [0.15, 0.25, 0.35, 0.5, 0.7]):
+        sel = (~hit) & (marg > d)
+        acc = (model_pred[sel] == labels[sel]).mean() if sel.any() else 1.0
+        rows.append(row(f"fig6/delta={d}", 0.0, absorb=float(sel.mean()),
+                        acc=float(acc)))
+    return rows

@@ -1,0 +1,58 @@
+"""Fig. 8: ACA vs LRU / FIFO / RAND replacement at matched memory budgets,
+on a long-tail 100-class-style stream."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, world
+from repro.core import (CacheConfig, SimulationConfig, bootstrap_server,
+                        run_simulation)
+from repro.core.policies import PolicyCache, run_policy_round
+from repro.core.server import profile_initial_cache
+from repro.data import longtail_prior
+
+
+def run(quick: bool = False):
+    w = world(quick)
+    s = w.s
+    L = s.num_layers
+    labels = w.client_labels(prior=longtail_prior(s.num_classes, 90.0))
+    entry_bytes = float(s.sem_dim * 4)
+    sizes = [5, 15] if quick else [5, 15, 30, 45]
+    layers = list(np.linspace(0, L - 1, max(L // 3, 2)).round().astype(int))
+    cal, _ = w.tap_shared(w.shared_labels)
+    entries, _ = profile_initial_cache(cal, jnp.asarray(w.shared_labels),
+                                       s.num_classes)
+    entries_np = np.asarray(entries)
+    cache = CacheConfig(num_classes=s.num_classes, num_layers=L,
+                        sem_dim=s.sem_dim, theta=s.theta)
+    rows = []
+    R, K, F = labels.shape
+    for cap in sizes:
+        budget = cap * len(layers) * entry_bytes
+        res = w.coca(labels, mem_budget=budget)
+        rows.append(row(f"fig8/size={cap}/aca", res.avg_latency,
+                        accuracy=res.accuracy, hit=res.hit_ratio))
+        for pol in ("lru", "fifo", "rand"):
+            rng = np.random.default_rng(7)
+            lat = correct = total = 0.0
+            caches = {k: [PolicyCache(capacity=cap, policy=pol)
+                          for _ in layers] for k in range(K)}
+            tables = {k: entries_np.copy() for k in range(K)}
+            fn = w.tap_fn()
+            for r in range(R):
+                for k in range(K):
+                    sems, logits = fn(r, k, labels[r, k])
+                    out = run_policy_round(caches[k], layers, tables[k],
+                                           np.asarray(sems),
+                                           np.asarray(logits), cache, w.cm,
+                                           rng)
+                    lat += out.latency.sum()
+                    correct += (out.pred == labels[r, k]).sum()
+                    total += len(out.pred)
+            rows.append(row(f"fig8/size={cap}/{pol}", lat / total,
+                            accuracy=correct / total))
+    return rows

@@ -1,0 +1,26 @@
+"""Fig. 9: component ablation — Normal / DCA-only / GCU-only / DCA+GCU."""
+
+from __future__ import annotations
+
+from benchmarks.common import row, world
+
+
+def run(quick: bool = False):
+    w = world(quick)
+    labels = w.client_labels()
+    L = w.s.num_layers
+    all_layers = tuple(range(L))
+    variants = {
+        "normal": dict(dynamic_allocation=False, static_layers=all_layers,
+                       global_updates=False),
+        "dca": dict(dynamic_allocation=True, global_updates=False),
+        "gcu": dict(dynamic_allocation=False, static_layers=all_layers,
+                    global_updates=True),
+        "dca+gcu": dict(dynamic_allocation=True, global_updates=True),
+    }
+    rows = []
+    for name, kw in variants.items():
+        res = w.coca(labels, **kw)
+        rows.append(row(f"fig9/{name}", res.avg_latency,
+                        accuracy=res.accuracy, hit=res.hit_ratio))
+    return rows

@@ -1,0 +1,69 @@
+"""Kernel micro-benchmarks: wall time of the fused cache_lookup vs. the
+unfused jnp pipeline, plus call times for the other kernels.
+
+Caveat (documented in EXPERIMENTS.md): interpret-mode timings on this CPU
+container measure the *emulated* kernel, not TPU performance; the meaningful
+number here is the fused-vs-unfused op count and the correctness-at-scale of
+the harness.  TPU wall-time comes from the roofline terms instead.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                                   # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6   # us
+
+
+def run(quick: bool = False):
+    k = jax.random.PRNGKey(0)
+    B, I, d = (64, 100, 64) if quick else (128, 100, 256)
+    sem = jnp.abs(jax.random.normal(k, (B, d)))
+    entries = jnp.abs(jax.random.normal(jax.random.fold_in(k, 1), (I, d)))
+    entries = entries / jnp.linalg.norm(entries, axis=1, keepdims=True)
+    mask = jnp.ones((I,), bool)
+    a_prev = jnp.zeros((B, I))
+
+    rows = []
+    t_kernel = _time(lambda *a: ops.cache_lookup_layer(*a), sem, entries,
+                     mask, a_prev)
+    t_ref = _time(lambda *a: ref.cache_lookup_layer_ref(*a), sem, entries,
+                  mask, a_prev)
+    rows.append(("kernels/cache_lookup_fused", t_kernel,
+                 f"interpret_mode=1;ref_us={t_ref:.0f}"))
+
+    S = 128 if quick else 256
+    q = jax.random.normal(jax.random.fold_in(k, 2), (1, S, 2, 64))
+    kk = jax.random.normal(jax.random.fold_in(k, 3), (1, S, 2, 64))
+    v = jax.random.normal(jax.random.fold_in(k, 4), (1, S, 2, 64))
+    rows.append(("kernels/flash_attention", _time(
+        lambda *a: ops.flash_attention(*a), q, kk, v), f"S={S}"))
+
+    T = 256
+    qd = jax.random.normal(jax.random.fold_in(k, 5), (2, 8, 64))
+    kc = jax.random.normal(jax.random.fold_in(k, 6), (2, T, 2, 64))
+    vc = jax.random.normal(jax.random.fold_in(k, 7), (2, T, 2, 64))
+    ln = jnp.full((2,), T, jnp.int32)
+    rows.append(("kernels/decode_attention", _time(
+        lambda *a: ops.decode_attention(*a), qd, kc, vc, ln), f"T={T}"))
+
+    x = jax.random.normal(jax.random.fold_in(k, 8), (1, 128, 2, 16))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 9),
+                                           (1, 128, 2)))
+    a = jnp.exp(-dt)
+    Bm = jax.random.normal(jax.random.fold_in(k, 10), (1, 128, 8))
+    Cm = jax.random.normal(jax.random.fold_in(k, 11), (1, 128, 8))
+    rows.append(("kernels/ssd_scan", _time(
+        lambda *aa: ops.ssd_scan(*aa, chunk=32), x, dt, a, Bm, Cm), "S=128"))
+    return rows

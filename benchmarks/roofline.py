@@ -1,0 +1,98 @@
+"""Roofline aggregation: reads the dry-run JSONs and renders the per-(arch ×
+shape × mesh) table for EXPERIMENTS.md §Roofline.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+                                                 [--markdown] [--mesh pod1]
+
+Terms (per chip, TPU v5e): compute = flops/197e12, memory = bytes/819e9,
+collective = collective_bytes/50e9.  ``useful`` = 6·N·D (or 2·N·D) divided by
+global HLO FLOPs — the remat/redundancy-waste detector.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def load(dirpath: str, mesh: str | None = None):
+    rows = []
+    for fp in sorted(Path(dirpath).glob("*.json")):
+        d = json.loads(fp.read_text())
+        d["_file"] = fp.name
+        if mesh and f"__{mesh}" not in fp.stem:
+            continue
+        if "__serve_seqkv" in fp.stem:
+            d["policy"] = "serve_seqkv"
+        rows.append(d)
+    return rows
+
+
+def fmt_seconds(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def render(rows, markdown=False):
+    hdr = ["arch", "shape", "mesh", "policy", "compute", "memory",
+           "collective", "dominant", "useful", "params(B)"]
+    out = []
+    for d in rows:
+        pol = d.get("policy", "auto")
+        pol = "baseline" if pol == "auto" else pol
+        if "skipped" in d:
+            out.append([d["arch"], d["shape"], d.get("mesh", "-"), "-",
+                        "-", "-", "-", d["skipped"][:20], "-", "-"])
+            continue
+        if "error" in d:
+            out.append([d["arch"], d["shape"], d.get("mesh", "-"), pol,
+                        "ERR", "ERR", "ERR", d["error"][:20], "-", "-"])
+            continue
+        out.append([
+            d["arch"], d["shape"], d["mesh"], pol,
+            fmt_seconds(d["t_compute_s"]), fmt_seconds(d["t_memory_s"]),
+            fmt_seconds(d["t_collective_s"]), d["dominant"],
+            f"{d['useful_flop_ratio']:.2f}", f"{d['params_b']:.1f}"])
+    if markdown:
+        lines = ["| " + " | ".join(hdr) + " |",
+                 "|" + "---|" * len(hdr)]
+        lines += ["| " + " | ".join(str(c) for c in r) + " |" for r in out]
+        return "\n".join(lines)
+    w = [max(len(str(r[i])) for r in out + [hdr]) for i in range(len(hdr))]
+    lines = ["  ".join(h.ljust(w[i]) for i, h in enumerate(hdr))]
+    lines += ["  ".join(str(c).ljust(w[i]) for i, c in enumerate(r))
+              for r in out]
+    return "\n".join(lines)
+
+
+def run(quick: bool = False):
+    """benchmarks.run hook: emit one row per completed dry-run cell."""
+    rows = []
+    for d in load("results/dryrun", mesh="pod1"):
+        if "skipped" in d or "error" in d:
+            continue
+        dom = {"compute": d["t_compute_s"], "memory": d["t_memory_s"],
+               "collective": d["t_collective_s"]}[d["dominant"]]
+        step = max(d["t_compute_s"], d["t_memory_s"], d["t_collective_s"])
+        frac = d["t_compute_s"] / step if step else 0.0
+        rows.append((f"roofline/{d['arch']}/{d['shape']}", dom * 1e6,
+                     f"dominant={d['dominant']};compute_frac={frac:.2f};"
+                     f"useful={d['useful_flop_ratio']:.2f}"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    print(render(load(args.dir, args.mesh), markdown=args.markdown))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Benchmark aggregator: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Default is the quick profile
+(CPU-friendly); ``--full`` runs the paper-scale sweeps used for
+EXPERIMENTS.md.  ``--only fig5`` filters modules.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+
+MODULES = [
+    "fig1_cache_size",
+    "table1_hotspot",
+    "table2_slo",
+    "fig5_theta",
+    "fig6_absorption",
+    "fig7_noniid",
+    "table3_longtail",
+    "fig8_aca",
+    "fig9_ablation",
+    "fig10_load",
+    "theta_schedule",
+    "kernels_bench",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweeps (slow)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in MODULES:
+        if args.only and args.only not in name:
+            continue
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.time()
+        try:
+            rows = mod.run(quick=not args.full)
+        except Exception as e:  # pragma: no cover
+            print(f"{name},0,ERROR={e!r}", flush=True)
+            failures += 1
+            continue
+        for r in rows:
+            print(f"{r[0]},{r[1]:.1f},{r[2]}", flush=True)
+        print(f"# {name} done in {time.time() - t0:.0f}s", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

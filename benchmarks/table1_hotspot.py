@@ -1,0 +1,49 @@
+"""Table I: latency/accuracy vs. number of hot-spot classes in the cache.
+
+Fixed high-benefit layer subset; the hot-spot set is the top-n classes by
+global frequency (the server's Φ is truncated to the top n, so ACA stage-1
+can only ever select those).  Reproduces the paper's trade-off: few classes
+-> fast but inaccurate (wrong-class hits); ~half the classes -> accuracy
+plateau; more -> lookup bloat creeps latency back up.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, world
+from repro.core import (CacheConfig, SimulationConfig, bootstrap_server,
+                        run_simulation)
+
+
+def run(quick: bool = False):
+    w = world(quick)
+    s = w.s
+    L = s.num_layers
+    labels = w.client_labels()
+    lat0, acc0 = w.edge_only(labels)
+    rows = [row("table1/n=0(edge-only)", lat0, accuracy=acc0)]
+    layers = tuple(np.linspace(0, L - 1, max(L // 3, 2)).round().astype(int))
+    counts = ([max(2, s.num_classes // 5), s.num_classes * 3 // 5,
+               s.num_classes] if quick else [5, 15, 25, 35, 50])
+    for n in counts:
+        n = min(n, s.num_classes)
+        cache = CacheConfig(num_classes=s.num_classes, num_layers=L,
+                            sem_dim=s.sem_dim, theta=s.theta)
+        sim = SimulationConfig(cache=cache, round_frames=s.frames,
+                               mem_budget=1e12, dynamic_allocation=False,
+                               static_layers=layers)
+        server = bootstrap_server(jax.random.PRNGKey(0), sim, w.tap_shared,
+                                  w.shared_labels, w.cm)
+        phi = np.asarray(server.phi_global)
+        keep = np.zeros_like(phi)
+        top = np.argsort(-phi)[:n]
+        keep[top] = phi[top]
+        server = server._replace(phi_global=jnp.asarray(keep))
+        res = run_simulation(sim, server, w.tap_fn(), labels, w.cm,
+                             labels.shape[0], labels.shape[1])
+        rows.append(row(f"table1/n={n}", res.avg_latency,
+                        accuracy=res.accuracy, hit=res.hit_ratio))
+    return rows

@@ -1,0 +1,42 @@
+"""Table II: average latency under accuracy-loss SLOs (<3 %, <5 %) —
+CoCa vs Edge-Only / LearnedCache / FoggyCache / SMTM.
+
+θ (CoCa/SMTM) and the exit margin (LearnedCache) are picked per-SLO from a
+small calibration sweep, exactly the paper's §VI.D procedure.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, world
+
+
+def run(quick: bool = False):
+    w = world(quick)
+    labels = w.client_labels()
+    lat0, acc0 = w.edge_only(labels)
+    rows = [row("table2/edge-only", lat0, accuracy=acc0, reduction=0.0)]
+
+    thetas = [0.06, 0.08, 0.10, 0.14, 0.2]
+    coca_runs = {t: w.coca(labels, theta=t) for t in thetas}
+    for slo, loss in (("<3%", 0.03), ("<5%", 0.05)):
+        ok = {t: r for t, r in coca_runs.items() if r.accuracy >= acc0 - loss}
+        if ok:
+            t_best, res = min(ok.items(), key=lambda kv: kv[1].avg_latency)
+            rows.append(row(f"table2/coca{slo}", res.avg_latency,
+                            accuracy=res.accuracy, theta=t_best,
+                            reduction=1 - res.avg_latency / lat0))
+    for method in ("learned", "foggy", "smtm"):
+        best = None
+        for theta, margin in ((0.08, 0.3), (0.12, 0.5), (0.2, 0.7)):
+            out = w.run_baseline(method, labels, theta=theta, margin=margin)
+            if out["accuracy"] >= acc0 - 0.03 and (
+                    best is None or out["latency"] < best["latency"]):
+                best = out
+        if best is None:   # no config met the SLO; report the most accurate
+            best = w.run_baseline(method, labels, theta=0.2, margin=0.7)
+        rows.append(row(f"table2/{method}<3%", best["latency"],
+                        accuracy=best["accuracy"],
+                        reduction=1 - best["latency"] / lat0))
+    return rows

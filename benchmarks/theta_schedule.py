@@ -1,0 +1,39 @@
+"""Beyond-paper: per-layer Θ schedules.
+
+The paper uses one global Θ.  Fig. 1b says shallow taps are weakly
+discriminative — their hits are cheap but error-prone — so a depth-decaying
+threshold (strict shallow, permissive deep) should trade the same accuracy
+for more early exits.  This sweep compares scalar Θ against linear schedules
+at matched accuracy-loss SLO.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, world
+
+
+def run(quick: bool = False):
+    w = world(quick)
+    L = w.s.num_layers
+    labels = w.client_labels()
+    lat0, acc0 = w.edge_only(labels)
+    rows = []
+
+    def lin(th_shallow, th_deep):
+        return tuple(float(t) for t in np.linspace(th_shallow, th_deep, L))
+
+    candidates = {
+        "scalar" + str(w.s.theta): w.s.theta,
+        "sched_2x..0.5x": lin(2.0 * w.s.theta, 0.5 * w.s.theta),
+        "sched_1.5x..0.7x": lin(1.5 * w.s.theta, 0.7 * w.s.theta),
+        "sched_3x..0.4x": lin(3.0 * w.s.theta, 0.4 * w.s.theta),
+    }
+    for name, theta in candidates.items():
+        res = w.coca(labels, theta=theta)
+        rows.append(row(f"theta_sched/{name}", res.avg_latency,
+                        accuracy=res.accuracy,
+                        reduction=1 - res.avg_latency / lat0,
+                        hit=res.hit_ratio, hit_acc=res.hit_accuracy))
+    return rows

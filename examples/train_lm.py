@@ -1,0 +1,21 @@
+"""Train a language-model backbone with the full distributed substrate
+(pjit train_step + AdamW + checkpoint/restart) at CPU-smoke scale — the same
+artifact the dry-run lowers for the production mesh.
+
+    PYTHONPATH=src python examples/train_lm.py [--arch glm4-9b] [--steps 120]
+"""
+
+import argparse
+import sys
+
+from repro.launch import train as train_launcher
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--steps", type=int, default=120)
+    args = ap.parse_args()
+    sys.argv = ["train", "--arch", args.arch, "--smoke",
+                "--steps", str(args.steps), "--batch", "8", "--seq", "64",
+                "--ckpt-every", "40", "--ckpt-dir", "results/ckpt_example"]
+    train_launcher.main()

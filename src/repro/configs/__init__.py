@@ -1,0 +1,48 @@
+"""Architecture registry: ``--arch <id>`` resolution for launchers/benchmarks."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.shapes import (  # noqa: F401
+    SHAPES, ShapeSpec, cache_specs, cell_supported, input_specs, param_specs,
+)
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "mamba2-780m": "mamba2_780m",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "glm4-9b": "glm4_9b",
+    "qwen1.5-110b": "qwen15_110b",
+    "starcoder2-7b": "starcoder2_7b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "phi-3-vision-4.2b": "phi3_vision_42b",
+    "jamba-v0.1-52b": "jamba_v01_52b",
+    # the paper's own backbone (not part of the assigned grid)
+    "coca-ast": "coca_ast",
+}
+
+ASSIGNED_ARCHS: tuple[str, ...] = tuple(k for k in _MODULES if k != "coca-ast")
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def list_archs() -> list[str]:
+    return list(_MODULES)
+
+
+def grid_cells(include_skipped: bool = False):
+    """Yield (arch, shape_name, supported, reason) over the 40-cell grid."""
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for sname, sspec in SHAPES.items():
+            ok, reason = cell_supported(cfg, sspec)
+            if ok or include_skipped:
+                yield arch, sname, ok, reason

@@ -1,0 +1,20 @@
+"""Paper's own backbone: AST-Base (Audio Spectrogram Transformer, §VI.A.2).
+
+12 transformer blocks, d_model=768, 12H, d_ff=3072 — the ViT-for-audio the
+paper runs CoCa on.  The spectrogram patchifier is a stub (precomputed patch
+embeddings), matching how the paper treats it as a fixed frontend.  This is
+the 11th config: it anchors the paper-validation benchmarks to a backbone the
+paper actually used.
+"""
+from repro.configs.common import NUM_CLASSES, SEM_DIM, reduced
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="coca-ast", family="vlm",
+    num_layers=12, d_model=768, num_heads=12, kv_heads=12, d_ff=3072,
+    vocab_size=512, frontend="audio", frontend_len=512,
+    norm="layernorm", act="gelu",
+    tap_every=1, sem_dim=SEM_DIM, num_classes=50,   # ESC-50
+    max_seq_len=2_048)
+
+SMOKE = reduced(CONFIG, tap_every=1)

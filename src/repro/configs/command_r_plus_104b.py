@@ -1,0 +1,16 @@
+"""command-r-plus-104b [dense]  (hf:CohereForAI/c4ai-command-r; unverified)
+
+64L, d_model=12288, 96H (GQA kv=8, head_dim=128), d_ff=33792, vocab=256000,
+no biases, parallel attention+FFN block.
+"""
+from repro.configs.common import NUM_CLASSES, SEM_DIM, TAP_EVERY, reduced
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b", family="dense",
+    num_layers=64, d_model=12288, num_heads=96, kv_heads=8, head_dim=128,
+    d_ff=33792, vocab_size=256000, parallel_block=True,
+    tap_every=TAP_EVERY, sem_dim=SEM_DIM, num_classes=NUM_CLASSES,
+    max_seq_len=32_768)
+
+SMOKE = reduced(CONFIG)

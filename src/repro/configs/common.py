@@ -1,0 +1,57 @@
+"""Helpers shared by the per-architecture config modules."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ModelConfig, MoEConfig, SSMConfig
+
+# CoCa integration defaults for serving cells: a semantic tap every 4 blocks,
+# ImageNet-100-scale stream label space (the paper's evaluation regime).
+TAP_EVERY = 4
+SEM_DIM = 256
+NUM_CLASSES = 100
+
+
+def reduced(cfg: ModelConfig, **over) -> ModelConfig:
+    """Shrink a full config to a CPU-smoke variant of the same family.
+
+    Keeps the family topology (period structure, MoE/ssm-ness, enc-dec,
+    frontend) while cutting width/depth/vocab to laptop scale.
+    """
+    period = cfg.attn_every if cfg.attn_every > 0 else 1
+    layers = max(2 * period, period)       # two periods
+    d_model = 64
+    heads = 4
+    kv = min(cfg.kv_heads, heads) or heads
+    # keep kv ratio flavour: full-MHA stays MHA, GQA stays grouped
+    if cfg.kv_heads == cfg.num_heads:
+        kv = heads
+    elif cfg.kv_heads < cfg.num_heads:
+        kv = 2
+    changes = dict(
+        num_layers=layers,
+        d_model=d_model,
+        num_heads=heads,
+        kv_heads=kv,
+        head_dim=None,
+        d_ff=0 if cfg.d_ff == 0 else 128,
+        vocab_size=512,
+        enc_layers=2 if cfg.is_encdec else 0,
+        frontend_len=8 if cfg.frontend != "none" else 0,
+        # capacity_factor 4.0: smoke tests verify exact prefill/decode
+        # consistency, which token dropping would (legitimately) break
+        moe=None if cfg.moe is None else dataclasses.replace(
+            cfg.moe, num_experts=4, top_k=2, d_expert=64,
+            capacity_factor=4.0),
+        ssm=None if cfg.ssm is None else dataclasses.replace(
+            cfg.ssm, d_state=16, head_dim=16, chunk=8),
+        tap_every=2 if cfg.tap_every else 0,
+        sem_dim=32,
+        num_classes=10 if cfg.num_classes else 0,
+        dtype="float32",
+        max_seq_len=64,
+        name=cfg.name + "-smoke",
+    )
+    changes.update(over)
+    return dataclasses.replace(cfg, **changes)

@@ -1,0 +1,17 @@
+"""glm4-9b [dense]  (hf:THUDM/glm-4-9b; hf)
+
+40L, d_model=4096, 32H (GQA kv=2), d_ff=13696, vocab=151552, half-dim RoPE.
+kv=2 < model-axis size => the decode KV path exercises the sequence-sharded
+flash-decode combine (DESIGN.md §5).
+"""
+from repro.configs.common import NUM_CLASSES, SEM_DIM, TAP_EVERY, reduced
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="glm4-9b", family="dense",
+    num_layers=40, d_model=4096, num_heads=32, kv_heads=2, d_ff=13696,
+    vocab_size=151552, partial_rotary=0.5,
+    tap_every=TAP_EVERY, sem_dim=SEM_DIM, num_classes=NUM_CLASSES,
+    max_seq_len=32_768)
+
+SMOKE = reduced(CONFIG)

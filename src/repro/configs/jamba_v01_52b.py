@@ -1,0 +1,19 @@
+"""jamba-v0.1-52b [hybrid]  (arXiv:2403.19887; hf)
+
+32L, d_model=4096, 32H (GQA kv=8), d_ff=14336, vocab=65536; Mamba:attention
+1:7 interleave (period 8, attention at offset 4), MoE 16 experts top-2 on
+every other layer.  Sub-quadratic in aggregate: runs long_500k.
+"""
+from repro.configs.common import NUM_CLASSES, SEM_DIM, TAP_EVERY, reduced
+from repro.models.config import ModelConfig, MoEConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b", family="hybrid",
+    num_layers=32, d_model=4096, num_heads=32, kv_heads=8, d_ff=14336,
+    vocab_size=65536, attn_every=8, attn_offset=4,
+    moe=MoEConfig(num_experts=16, top_k=2, d_expert=14336, moe_every=2),
+    ssm=SSMConfig(d_state=16, head_dim=64, expand=2),
+    tap_every=TAP_EVERY, sem_dim=SEM_DIM, num_classes=NUM_CLASSES,
+    max_seq_len=1_048_576)
+
+SMOKE = reduced(CONFIG)

@@ -1,0 +1,17 @@
+"""mamba2-780m [ssm]  (arXiv:2405.21060)
+
+48L, d_model=1536, attention-free (SSD), d_ff=0, vocab=50280, ssm_state=128.
+Sub-quadratic: runs the long_500k cell.
+"""
+from repro.configs.common import NUM_CLASSES, SEM_DIM, TAP_EVERY, reduced
+from repro.models.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m", family="ssm",
+    num_layers=48, d_model=1536, num_heads=1, kv_heads=1, d_ff=0,
+    vocab_size=50280, ssm=SSMConfig(d_state=128, head_dim=64, expand=2),
+    tie_embeddings=True,
+    tap_every=TAP_EVERY, sem_dim=SEM_DIM, num_classes=NUM_CLASSES,
+    max_seq_len=1_048_576)
+
+SMOKE = reduced(CONFIG)

@@ -1,0 +1,16 @@
+"""olmoe-1b-7b [moe]  (arXiv:2409.02060; hf)
+
+16L, d_model=2048, 16H MHA (kv=16), MoE 64 experts top-8, d_expert=1024,
+vocab=50304, every layer MoE.
+"""
+from repro.configs.common import NUM_CLASSES, SEM_DIM, TAP_EVERY, reduced
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b", family="moe",
+    num_layers=16, d_model=2048, num_heads=16, kv_heads=16, d_ff=0,
+    vocab_size=50304, moe=MoEConfig(num_experts=64, top_k=8, d_expert=1024),
+    tap_every=TAP_EVERY, sem_dim=SEM_DIM, num_classes=NUM_CLASSES,
+    max_seq_len=32_768)
+
+SMOKE = reduced(CONFIG)

@@ -1,0 +1,17 @@
+"""phi-3-vision-4.2b [vlm]  (hf:microsoft/Phi-3-vision-128k-instruct; hf)
+
+32L, d_model=3072, 32H MHA (kv=32), d_ff=8192, vocab=32064.  CLIP frontend is
+a STUB: ``input_specs`` provides 256 precomputed patch embeddings prepended to
+the token sequence.
+"""
+from repro.configs.common import NUM_CLASSES, SEM_DIM, TAP_EVERY, reduced
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b", family="vlm",
+    num_layers=32, d_model=3072, num_heads=32, kv_heads=32, d_ff=8192,
+    vocab_size=32064, frontend="vision", frontend_len=256,
+    tap_every=TAP_EVERY, sem_dim=SEM_DIM, num_classes=NUM_CLASSES,
+    max_seq_len=131_072)
+
+SMOKE = reduced(CONFIG)

@@ -1,0 +1,15 @@
+"""qwen1.5-110b [dense]  (hf:Qwen/Qwen1.5 family; hf)
+
+80L, d_model=8192, 64H (GQA kv=8), d_ff=49152, vocab=152064, QKV bias.
+"""
+from repro.configs.common import NUM_CLASSES, SEM_DIM, TAP_EVERY, reduced
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-110b", family="dense",
+    num_layers=80, d_model=8192, num_heads=64, kv_heads=8, d_ff=49152,
+    vocab_size=152064, qkv_bias=True,
+    tap_every=TAP_EVERY, sem_dim=SEM_DIM, num_classes=NUM_CLASSES,
+    max_seq_len=32_768)
+
+SMOKE = reduced(CONFIG)

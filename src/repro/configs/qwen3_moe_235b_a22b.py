@@ -1,0 +1,17 @@
+"""qwen3-moe-235b-a22b [moe]  (hf:Qwen/Qwen3-30B-A3B family scaling; hf)
+
+94L, d_model=4096, 64H (GQA kv=4, head_dim=128), MoE 128 experts top-8 with
+d_expert=1536 on every layer (no dense FFN).
+"""
+from repro.configs.common import NUM_CLASSES, SEM_DIM, TAP_EVERY, reduced
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b", family="moe",
+    num_layers=94, d_model=4096, num_heads=64, kv_heads=4, head_dim=128,
+    d_ff=0, vocab_size=151936,
+    moe=MoEConfig(num_experts=128, top_k=8, d_expert=1536),
+    tap_every=TAP_EVERY, sem_dim=SEM_DIM, num_classes=NUM_CLASSES,
+    max_seq_len=32_768)
+
+SMOKE = reduced(CONFIG)

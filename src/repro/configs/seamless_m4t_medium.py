@@ -1,0 +1,18 @@
+"""seamless-m4t-medium [audio, enc-dec]  (arXiv:2308.11596; hf)
+
+12L encoder + 12L decoder, d_model=1024, 16H MHA (kv=16), d_ff=4096,
+vocab=256206.  The audio frontend is a STUB per the assignment:
+``input_specs`` supplies precomputed frame embeddings to the encoder.
+"""
+from repro.configs.common import NUM_CLASSES, SEM_DIM, TAP_EVERY, reduced
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium", family="encdec",
+    num_layers=12, enc_layers=12, d_model=1024, num_heads=16, kv_heads=16,
+    d_ff=4096, vocab_size=256206, frontend="audio",
+    norm="layernorm", act="gelu",
+    tap_every=TAP_EVERY, sem_dim=SEM_DIM, num_classes=NUM_CLASSES,
+    max_seq_len=32_768)
+
+SMOKE = reduced(CONFIG)

@@ -1,0 +1,126 @@
+"""Input-shape registry for the assigned (architecture × shape) grid.
+
+Four LM-family shapes (assignment):
+    train_4k     seq 4 096,   global_batch 256   -> train_step
+    prefill_32k  seq 32 768,  global_batch 32    -> serve prefill
+    decode_32k   seq 32 768,  global_batch 128   -> serve_step (1 new token,
+                                                    KV cache of seq_len)
+    long_500k    seq 524 288, global_batch 1     -> long-context decode;
+                 sub-quadratic archs only (ssm / hybrid) — pure full-attention
+                 archs SKIP this cell (DESIGN.md §4).
+
+``input_specs`` returns ``jax.ShapeDtypeStruct`` stand-ins for every model
+input of a given (config, shape) cell — weak-type-correct, shardable, no
+device allocation — exactly what ``jax.jit(...).lower()`` needs for the
+multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig, SSMConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(supported, reason).  Encodes the assignment's skip rules."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "SKIP(full-attn): 500k decode needs sub-quadratic attention"
+    return True, ""
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), jnp.dtype(dtype))
+
+
+def _counts(cfg: ModelConfig) -> tuple[int, int]:
+    """(n_attn_layers, n_ssm_layers) of the decoder stack."""
+    kinds = [cfg.layer_kind(i) for i in range(cfg.num_layers)]
+    n_attn = sum(k == "attn" for k in kinds)
+    return n_attn, cfg.num_layers - n_attn
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int):
+    """ShapeDtypeStructs for the decode-state pytree (models.Caches)."""
+    from repro.models.transformer import Caches
+    from repro.models.attention import KVCache
+    from repro.models.mamba2 import SSMState
+
+    n_attn, n_ssm = _counts(cfg)
+    hd = cfg.resolved_head_dim
+    dt = cfg.dtype
+    kv = (KVCache(
+        k=_struct((n_attn, batch, seq_len, cfg.kv_heads, hd), dt),
+        v=_struct((n_attn, batch, seq_len, cfg.kv_heads, hd), dt))
+        if n_attn else None)
+    ssm = None
+    if n_ssm:
+        s = cfg.ssm or SSMConfig()
+        d_in = s.expand * cfg.d_model
+        nheads = d_in // s.head_dim
+        ssm = SSMState(
+            h=_struct((n_ssm, batch, nheads, s.d_state, s.head_dim), "float32"),
+            conv_x=_struct((n_ssm, batch, s.d_conv - 1, d_in), dt),
+            conv_b=_struct((n_ssm, batch, s.d_conv - 1, s.d_state), dt),
+            conv_c=_struct((n_ssm, batch, s.d_conv - 1, s.d_state), dt))
+    cross = None
+    if cfg.is_encdec:
+        cross = (_struct((cfg.num_layers, batch, seq_len, cfg.kv_heads, hd), dt),
+                 _struct((cfg.num_layers, batch, seq_len, cfg.kv_heads, hd), dt))
+    return Caches(kv=kv, ssm=ssm, cross_kv=cross,
+                  pos=_struct((batch,), "int32"))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """All inputs of the step function for this cell, as ShapeDtypeStructs."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs = {"tokens": _struct((B, S), "int32"),
+                 "labels": _struct((B, S), "int32")}
+        if cfg.is_encdec:
+            specs["enc_embeds"] = _struct((B, S, cfg.d_model), cfg.dtype)
+        elif cfg.frontend != "none":
+            fl = cfg.frontend_len
+            specs["tokens"] = _struct((B, S - fl), "int32")
+            specs["labels"] = _struct((B, S - fl), "int32")
+            specs["frontend"] = _struct((B, fl, cfg.d_model), cfg.dtype)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": _struct((B, S), "int32")}
+        if cfg.is_encdec:
+            specs["enc_embeds"] = _struct((B, S, cfg.d_model), cfg.dtype)
+        elif cfg.frontend != "none":
+            fl = cfg.frontend_len
+            specs["tokens"] = _struct((B, S - fl), "int32")
+            specs["frontend"] = _struct((B, fl, cfg.d_model), cfg.dtype)
+        return specs
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": _struct((B, 1), "int32"),
+            "caches": cache_specs(cfg, B, S)}
+
+
+def param_specs(cfg: ModelConfig):
+    """ShapeDtypeStructs of the parameter pytree via eval_shape (no alloc)."""
+    from repro.models.transformer import init_params
+    return jax.eval_shape(
+        lambda k: init_params(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32))

@@ -1,0 +1,16 @@
+"""starcoder2-7b [dense]  (arXiv:2402.19173; hf)
+
+32L, d_model=4608, 36H (GQA kv=4, head_dim=128), d_ff=18432, vocab=49152,
+LayerNorm + GELU.
+"""
+from repro.configs.common import NUM_CLASSES, SEM_DIM, TAP_EVERY, reduced
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b", family="dense",
+    num_layers=32, d_model=4608, num_heads=36, kv_heads=4, head_dim=128,
+    d_ff=18432, vocab_size=49152, norm="layernorm", act="gelu",
+    tap_every=TAP_EVERY, sem_dim=SEM_DIM, num_classes=NUM_CLASSES,
+    max_seq_len=32_768)
+
+SMOKE = reduced(CONFIG)

@@ -1,0 +1,22 @@
+"""CoCa core — the paper's primary contribution as composable JAX modules."""
+from repro.core.semantic_cache import (  # noqa: F401
+    CacheConfig, CacheTable, LookupResult, allocate_subtable, cosine_scores,
+    discriminative_score, empty_table, l2_normalize, lookup_all_layers,
+    pool_semantic,
+)
+from repro.core.client import (  # noqa: F401
+    AbsorptionConfig, ClientState, ClientUpload, RoundOutput, init_client,
+    make_upload, reset_round, run_round,
+)
+from repro.core.server import (  # noqa: F401
+    ServerConfig, ServerState, global_update, init_server,
+    profile_initial_cache,
+)
+from repro.core.aca import (  # noqa: F401
+    AllocationRequest, aca_allocate, class_scores, fixed_allocate,
+    select_cache_layers, select_hotspot_classes,
+)
+from repro.core.cost_model import CostModel, calibrate, frame_latency  # noqa: F401
+from repro.core.simulation import (  # noqa: F401
+    SimulationConfig, SimulationResult, bootstrap_server, run_simulation,
+)

@@ -1,0 +1,100 @@
+"""Adaptive Cache Allocation — Algorithm 1 of the paper, plus helpers.
+
+ACA is the server-side control plane: it runs once per client per round on
+scalars/small vectors, so it is implemented in NumPy (host) for clarity; the
+output indicator matrix is consumed by :func:`semantic_cache.allocate_subtable`.
+
+Stage 1 — hot-spot classes:  score ``sᵢ = Φᵢ · 0.2^⌊τᵢ/F⌋`` (Eq. 10), sort
+descending, take the shortest prefix whose score sum reaches 95 % of the total.
+
+Stage 2 — cache layers:  greedy by expected benefit ``ζ = Υ ⊙ R``; after
+choosing layer ``b``, ``R[j] -= R[b]`` for all ``j ≥ b`` (the paper's
+"samples hitting at b would also hit later" correction; we clamp at 0 so the
+benefit estimate stays a probability).  The loop adds layer sizes *before*
+allocating and stops just before exceeding the byte budget Π (Alg. 1 L11-16).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+HOTSPOT_SCORE_FRACTION = 0.95   # §V.B, "summing up to 95% of the total score"
+RECENCY_BASE = 0.20             # Eq. (10)
+
+
+@dataclasses.dataclass(frozen=True)
+class AllocationRequest:
+    """Everything ACA consumes for one client (Alg. 1 inputs)."""
+
+    phi_global: np.ndarray     # (I,) Φ — global class frequencies
+    tau: np.ndarray            # (I,) τᵏ — client recency timestamps
+    r_est: np.ndarray          # (L,) R — expected per-layer hit ratios
+    upsilon: np.ndarray        # (L,) Υ — saved seconds on a hit at layer j
+    entry_sizes: np.ndarray    # (L,) bytes per cache entry at layer j
+    mem_budget: float          # Π — client cache-size threshold in bytes
+    round_frames: int          # F
+
+
+def class_scores(phi_global: np.ndarray, tau: np.ndarray,
+                 round_frames: int) -> np.ndarray:
+    """Eq. (10): sᵢ = Φᵢ · 0.2^⌊τᵢ/F⌋."""
+    return np.asarray(phi_global, np.float64) * (
+        RECENCY_BASE ** np.floor(np.asarray(tau, np.float64) / round_frames))
+
+
+def select_hotspot_classes(scores: np.ndarray,
+                           fraction: float = HOTSPOT_SCORE_FRACTION) -> np.ndarray:
+    """Stage 1 (Alg. 1 L1-10): shortest score-sorted prefix reaching 95 %."""
+    order = np.argsort(-scores, kind="stable")
+    total = scores.sum()
+    if total <= 0:
+        return order[:1]  # degenerate cold start: keep the top class
+    csum = np.cumsum(scores[order])
+    k = int(np.searchsorted(csum, fraction * total) + 1)
+    return order[:k]
+
+
+def select_cache_layers(hot_count: int, r_est: np.ndarray, upsilon: np.ndarray,
+                        entry_sizes: np.ndarray, mem_budget: float) -> list[int]:
+    """Stage 2 (Alg. 1 L11-21): greedy layer picking under the byte budget."""
+    r = np.asarray(r_est, np.float64).copy()
+    layers: list[int] = []
+    mem = 0.0
+    L = len(r)
+    while mem <= mem_budget:
+        zeta = np.asarray(upsilon, np.float64) * r
+        zeta[layers] = -np.inf              # a chosen layer's R is 0 anyway
+        b = int(np.argmax(zeta))
+        if not np.isfinite(zeta[b]) or zeta[b] <= 0:
+            break                           # no remaining layer has benefit
+        mem += float(entry_sizes[b]) * hot_count
+        if mem >= mem_budget:
+            break                           # stop just before exceeding Π
+        layers.append(b)
+        p = r[b]
+        r[b:] = np.maximum(r[b:] - p, 0.0)
+    return layers
+
+
+def aca_allocate(req: AllocationRequest) -> np.ndarray:
+    """Algorithm 1.  Returns the (L, I) boolean allocation indicator Xᵏ."""
+    L, I = len(req.r_est), len(req.phi_global)
+    s = class_scores(req.phi_global, req.tau, req.round_frames)
+    hot = select_hotspot_classes(s)
+    layers = select_cache_layers(len(hot), req.r_est, req.upsilon,
+                                 req.entry_sizes, req.mem_budget)
+    x = np.zeros((L, I), bool)
+    for b in layers:
+        x[b, hot] = True
+    return x
+
+
+def fixed_allocate(hot_classes: np.ndarray, layers: list[int],
+                   num_layers: int, num_classes: int) -> np.ndarray:
+    """Static allocation (used by the SMTM baseline and the DCA-off ablation)."""
+    x = np.zeros((num_layers, num_classes), bool)
+    for b in layers:
+        x[b, np.asarray(hot_classes, int)] = True
+    return x

@@ -1,0 +1,65 @@
+"""Adaptive Γ/Δ absorption thresholds (automating the paper's §VI.D sweep).
+
+The paper picks Γ and Δ by hand from an offline sweep, targeting ~97 %
+absorption accuracy at ~10 % absorption ratio.  In deployment the score
+landscape drifts (new contexts, cache quality changes), so fixed thresholds
+rot.  This controller re-derives them each round from the *server's own
+shared validation set* — the same data that bootstraps the cache — by
+computing the absorption-accuracy curve as a function of the threshold and
+picking the smallest threshold that clears the accuracy target (maximising
+absorption subject to quality).
+
+This is a beyond-paper robustness feature; the static defaults remain the
+paper-faithful configuration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ThresholdTarget:
+    min_accuracy: float = 0.97      # the paper's quality bar (§VI.D)
+    min_count: int = 10             # need this many candidates to act
+    floor: float = 0.02             # never go fully permissive
+
+
+def pick_threshold(scores: np.ndarray, correct: np.ndarray,
+                   target: ThresholdTarget = ThresholdTarget()) -> float:
+    """Smallest threshold t such that accuracy(score > t) >= min_accuracy.
+
+    ``scores``  — candidate statistic per sample (D at exit for Γ,
+                  prob margin for Δ); ``correct`` — bool per sample.
+    Returns +inf when no threshold meets the bar (absorb nothing).
+    """
+    scores = np.asarray(scores, np.float64)
+    correct = np.asarray(correct, bool)
+    if scores.size < target.min_count:
+        return float("inf")
+    order = np.argsort(-scores)                  # descending
+    sc, ok = scores[order], correct[order]
+    # accuracy of the top-k prefix for every k; among prefixes that both meet
+    # the accuracy bar AND whose boundary clears the floor, take the largest
+    csum = np.cumsum(ok)
+    k = np.arange(1, len(sc) + 1)
+    acc = csum / k
+    valid = (acc >= target.min_accuracy) & (sc >= target.floor)
+    if not valid.any():
+        return float("inf")
+    k_best = int(np.max(np.where(valid)[0]))     # largest qualifying prefix
+    # return just below the boundary score so `score > t` selects exactly
+    # the qualifying prefix (strict-> semantics; ties break conservatively)
+    return float(np.nextafter(sc[k_best], -np.inf))
+
+
+def calibrate_absorption(lookup_scores, lookup_correct,
+                         miss_margins, miss_correct,
+                         target: ThresholdTarget = ThresholdTarget()
+                         ) -> tuple[float, float]:
+    """(Γ, Δ) from validation traffic: reinforcement + expansion candidates."""
+    gamma = pick_threshold(lookup_scores, lookup_correct, target)
+    delta = pick_threshold(miss_margins, miss_correct, target)
+    return gamma, delta

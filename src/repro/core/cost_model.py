@@ -1,0 +1,88 @@
+"""Latency cost model for the round simulator.
+
+The container has no Jetson/TPU to time, so per-frame latency is accounted
+analytically (DESIGN.md §8.1): a frame that exits at cache layer ``e`` pays
+
+    sum(block_costs[0..e])                      model compute up to the exit
+  + sum_{j active, j <= e} lookup_cost(j)       Eq.-(1)/(2) lookups performed
+  + head_cost               (only on a miss)    final classifier head
+
+``lookup_cost(j) = lookup_base + lookup_per_elem * sem_dim_j * n_hot`` — linear
+in the number of scanned entries, matching the paper's observation that the
+*all-layer* lookup bill is 56.22 % of the no-cache forward (§III.1); the
+``calibrate`` helper reproduces exactly that anchor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    block_costs: tuple[float, ...]   # (L+1,) seconds per model block
+    sem_dims: tuple[int, ...]        # (L,) semantic width at each cache layer
+    lookup_base: float               # fixed per-lookup cost (s)
+    lookup_per_elem: float           # per (class x dim) element cost (s)
+    head_cost: float = 0.0           # classifier head (s), paid on miss
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.sem_dims)
+
+    def full_latency(self) -> float:
+        return float(sum(self.block_costs)) + self.head_cost
+
+    def lookup_costs(self, n_hot: int) -> np.ndarray:
+        """(L,) lookup seconds per layer for an ``n_hot``-class cache."""
+        return (self.lookup_base
+                + self.lookup_per_elem * np.asarray(self.sem_dims) * n_hot)
+
+    def saved_time(self) -> np.ndarray:
+        """Υ — (L,) model-compute seconds saved by a hit at layer j (§V.B)."""
+        suffix = np.cumsum(np.asarray(self.block_costs)[::-1])[::-1]
+        return suffix[1:] + self.head_cost   # blocks after layer j + head
+
+    def entry_sizes(self) -> np.ndarray:
+        """Bytes per cache entry at each layer (float32 semantic vectors)."""
+        return np.asarray(self.sem_dims, np.float64) * 4.0
+
+
+def frame_latency(cm: CostModel, exit_layer: jax.Array, layer_mask: jax.Array,
+                  n_hot: jax.Array) -> jax.Array:
+    """Vectorised per-frame latency.  ``exit_layer`` — (B,), L == no hit."""
+    L = cm.num_layers
+    blocks = jnp.asarray(cm.block_costs)                         # (L+1,)
+    block_csum = jnp.cumsum(blocks)                              # cost through block e
+    compute = block_csum[jnp.minimum(exit_layer, L)]
+    per_layer = (cm.lookup_base
+                 + cm.lookup_per_elem * jnp.asarray(cm.sem_dims, jnp.float32) * n_hot)
+    visited = layer_mask[None, :] & (jnp.arange(L)[None, :] <= exit_layer[:, None])
+    lookups = (per_layer[None, :] * visited).sum(axis=1)
+    head = jnp.where(exit_layer >= L, cm.head_cost, 0.0)
+    return compute + lookups + head
+
+
+def calibrate(block_costs: np.ndarray, sem_dims: np.ndarray,
+              head_cost: float = 0.0,
+              all_layer_lookup_fraction: float = 0.5622,
+              anchor_hot: int = 50, base_fraction: float = 0.1) -> CostModel:
+    """Build a cost model anchored on the paper's §III.1 measurement:
+
+    lookups at ALL layers with ``anchor_hot`` hot classes cost
+    ``all_layer_lookup_fraction`` of the full no-cache forward; a
+    ``base_fraction`` of that bill is the fixed per-lookup overhead.
+    """
+    full = float(np.sum(block_costs)) + head_cost
+    bill = all_layer_lookup_fraction * full
+    L = len(sem_dims)
+    lookup_base = base_fraction * bill / L
+    lookup_per_elem = (1 - base_fraction) * bill / float(np.sum(sem_dims) * anchor_hot)
+    return CostModel(block_costs=tuple(float(b) for b in block_costs),
+                     sem_dims=tuple(int(s) for s in sem_dims),
+                     lookup_base=lookup_base, lookup_per_elem=lookup_per_elem,
+                     head_cost=head_cost)

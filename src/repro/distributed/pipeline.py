@@ -1,0 +1,107 @@
+"""Pipeline parallelism over the "pod" axis (GPipe-style, inference).
+
+For cross-pod execution the natural second-level split is by depth: the
+decoder's stacked layer-group dimension shards over "pod" (stage s owns
+groups [s·G/S, (s+1)·G/S)), and microbatches stream through stages with a
+``ppermute`` hand-off per tick — ICI traffic between pods is one (B_mb, S, d)
+activation per tick instead of every layer's collectives crossing the slow
+inter-pod links.
+
+Scope: forward pipelines (prefill / stream classification — the paper's
+serving shape).  Training PP (pipelined backward + schedule) is out of scope
+and documented as such in DESIGN.md §5; training across pods uses DP/ZeRO on
+the "pod" axis instead.
+
+The schedule is the standard GPipe ramp: T = M + S − 1 ticks; at tick t,
+stage s processes microbatch m = t − s when 0 ≤ m < M.  Everything runs
+inside one ``shard_map`` over "pod"; per-stage compute reuses the exact
+layer-group body from models/transformer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import embed_fwd, norm_fwd, unembed_fwd
+from repro.models.transformer import _kinds, _layer_fwd, _num_groups
+
+
+def _run_local_groups(dec_local, h, cfg: ModelConfig, positions):
+    """Run this stage's layer groups (leading dim = local groups)."""
+    kinds = _kinds(cfg)
+
+    def body(h, g):
+        for li, kind in enumerate(kinds):
+            lp = g["layers"][li]
+            h, _, _, _ = _layer_fwd(lp, h, cfg, kind, mode="train",
+                                    positions=positions)
+        return h, None
+
+    h, _ = jax.lax.scan(body, h, dec_local)
+    return h
+
+
+def pipeline_forward(params, batch, cfg: ModelConfig, mesh: Mesh,
+                     num_microbatches: int = 4, axis: str = "pod"):
+    """Pipelined forward pass -> logits (B, S, V).
+
+    ``params["decoder"]`` leaves (G, ...) must be sharded over ``axis`` on
+    dim 0; embed/unembed/final-norm params replicated across pods.
+    """
+    S_stages = mesh.shape[axis]
+    G = _num_groups(cfg)
+    assert G % S_stages == 0, (G, S_stages)
+    M = num_microbatches
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    assert B % M == 0, (B, M)
+
+    h0 = embed_fwd(params["embed"], tokens, cfg)
+    Bm = B // M
+    h_mb = h0.reshape(M, Bm, h0.shape[1], h0.shape[2])
+    positions = jnp.broadcast_to(jnp.arange(h0.shape[1]),
+                                 (Bm, h0.shape[1]))
+
+    def body(dec_local, h_stack):
+        stage = jax.lax.axis_index(axis)
+        carry_in = jnp.zeros_like(h_stack[0])
+        out = jnp.zeros_like(h_stack)
+
+        def tick(state, t):
+            carry_in, out = state
+            m = t - stage
+            active = (m >= 0) & (m < M)
+            m_c = jnp.clip(m, 0, M - 1)
+            h_in = jnp.where(stage == 0, h_stack[m_c], carry_in)
+            h_out = _run_local_groups(dec_local, h_in, cfg, positions)
+            h_out = jnp.where(active, h_out, carry_in)
+            # last stage keeps its result; others pass downstream
+            out = jnp.where((stage == S_stages - 1) & active,
+                            out.at[m_c].set(h_out), out)
+            carry_next = jax.lax.ppermute(
+                h_out, axis, [(i, (i + 1) % S_stages)
+                              for i in range(S_stages)])
+            return (carry_next, out), None
+
+        (carry_in, out), _ = jax.lax.scan(
+            tick, (carry_in, out), jnp.arange(M + S_stages - 1))
+        # broadcast the last stage's outputs to every pod (replicated out)
+        out = jax.lax.psum(
+            jnp.where(stage == S_stages - 1, out, jnp.zeros_like(out)), axis)
+        return out
+
+    dec_spec = jax.tree.map(lambda _: P(axis), params["decoder"])
+    h_out = shard_map(
+        body, mesh=mesh,
+        in_specs=(dec_spec, P()),
+        out_specs=P(),
+        check_rep=False,
+    )(params["decoder"], h_mb)
+
+    h = h_out.reshape(B, h0.shape[1], h0.shape[2])
+    h = norm_fwd(params["final_norm"], h, cfg)
+    return unembed_fwd(params["embed"], h, cfg)

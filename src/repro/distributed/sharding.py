@@ -1,0 +1,318 @@
+"""Sharding rules: DP / TP / EP / SP / ZeRO-3 partition specs for every
+parameter and state leaf, derived from leaf *path* + rank (MaxText-style
+logical rules, but resolved eagerly so the dry-run can print them).
+
+Axis roles:
+  "pod","data"  — batch (DP) and ZeRO-3 parameter/optimizer sharding ("fsdp")
+  "model"       — TP: attention heads, FFN width, MoE experts (EP), vocab
+
+GQA caveat: kv_heads < model-axis size for most assigned archs; kv projections
+and the KV cache then keep their head dim replicated (the baseline) — the
+sequence-sharded flash-decode path (serving/decode_sharded.py) is the
+optimized alternative evaluated in §Perf.
+
+Uneven head counts (starcoder2: 36 heads on a 16-way axis) rely on GSPMD's
+padded uneven sharding, which JAX supports for jit in/out shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """What gets sharded where."""
+
+    fsdp: bool = True              # ZeRO-3: shard params/opt over data axes
+    tp: bool = True                # tensor parallel over "model"
+    sp: bool = True                # sequence-parallel activations (train)
+    kv_shard_heads: bool = True    # shard KV heads over "model" when divisible
+    # decode KV fallback when heads don't divide: "replicate" | "sequence"
+    kv_fallback: str = "replicate"
+    # pad query heads up to a multiple of the model axis inside the step so
+    # attention shards when H %% tp != 0 (starcoder2's 36 heads: 1.33x pad
+    # FLOPs instead of 16x replication)
+    pad_heads: bool = False
+    # flash-semantics chunked attention in XLA (no S^2 score materialisation);
+    # (q_block, kv_block) or None
+    chunked_attn: tuple[int, int] | None = None
+
+
+TRAIN_POLICY = ShardingPolicy()
+SERVE_POLICY = ShardingPolicy(fsdp=False, sp=False)
+SERVE_FSDP_POLICY = ShardingPolicy(fsdp=True, sp=False)
+
+
+def _axes(mesh: Mesh):
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    tp = "model" if "model" in mesh.axis_names else None
+    return dp, tp
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _divisible(n: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return False
+    return n % _axis_size(mesh, axis) == 0
+
+
+def fit_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on dims the mesh axes don't divide evenly (jit arguments
+    require exact divisibility; e.g. starcoder2's 36 heads or seamless's
+    256206 vocab on a 16-way axis fall back to replicated — documented as a
+    perf-iteration item in EXPERIMENTS.md)."""
+    out = []
+    for i, ax in enumerate(tuple(spec)):
+        if ax is None or i >= len(shape):
+            out.append(None if i >= len(shape) else ax)
+            continue
+        out.append(ax if shape[i] % _axis_size(mesh, ax) == 0 else None)
+    return P(*out)
+
+
+def dp_axes_for(batch: int, mesh: Mesh):
+    """Batch axes when the global batch divides them (long_500k has batch 1)."""
+    dp, _ = _axes(mesh)
+    if not dp or batch % _axis_size(mesh, dp) != 0:
+        return None
+    return dp
+
+
+def param_spec(path: str, leaf, cfg: ModelConfig, mesh: Mesh,
+               policy: ShardingPolicy) -> P:
+    """PartitionSpec for one parameter leaf, identified by its tree path."""
+    dp, tp = _axes(mesh)
+    fsdp = dp if (policy.fsdp and dp) else None
+    tpx = tp if policy.tp else None
+    kv_ax = tpx if (policy.kv_shard_heads and tpx is not None
+                    and cfg.kv_heads % mesh.shape[tp] == 0) else None
+    name = path.rsplit("/", 1)[-1]
+    rank = leaf.ndim
+
+    def lead(base: list, base_rank: int) -> P:
+        pads = [None] * (rank - base_rank)
+        assert rank >= base_rank, (path, rank, base_rank)
+        return P(*pads, *base)
+
+    if "/attn/" in path or path.endswith("attn"):
+        if name == "wq":
+            return lead([fsdp, tpx, None], 3)
+        if name in ("wk", "wv"):
+            return lead([fsdp, kv_ax, None], 3)
+        if name == "bq":
+            return lead([tpx, None], 2)
+        if name in ("bk", "bv"):
+            return lead([kv_ax, None], 2)
+        if name == "wo":
+            return lead([tpx, None, fsdp], 3)
+    if "/moe/" in path:
+        if name == "router":
+            return lead([fsdp, None], 2)
+        if name in ("wi_gate", "wi_up", "wi"):
+            return lead([tpx, fsdp, None], 3)
+        if name == "wo":
+            return lead([tpx, None, fsdp], 3)
+    if "/mlp/" in path:
+        if name in ("wi_gate", "wi_up", "wi"):
+            return lead([fsdp, tpx], 2)
+        if name == "wo":
+            return lead([tpx, fsdp], 2)
+    if "/ssm/" in path:
+        if name in ("w_x", "w_z", "w_dt"):
+            return lead([fsdp, tpx], 2)
+        if name in ("w_b", "w_c"):
+            return lead([fsdp, None], 2)
+        if name == "conv_x":
+            return lead([None, tpx], 2)
+        if name in ("conv_b", "conv_c"):
+            return lead([None, None], 2)
+        if name in ("a_log", "dt_bias", "d_skip", "norm_scale"):
+            return lead([tpx], 1)
+        if name == "w_out":
+            return lead([tpx, fsdp], 2)
+    if path.startswith("embed"):
+        if name == "tok":
+            return lead([tpx, fsdp], 2)
+        if name == "unembed":
+            return lead([fsdp, tpx], 2)
+    if name == "proj" and "taps" in path:
+        return lead([fsdp, None], 2)
+    if name == "cls_head":
+        return lead([fsdp, None], 2)
+    # norm scales/biases and anything small: replicated (beyond lead dims)
+    return P(*([None] * rank))
+
+
+def make_param_shardings(cfg: ModelConfig, mesh: Mesh,
+                         policy: ShardingPolicy, params_tree) -> Any:
+    """Mirror pytree of NamedShardings for a (possibly abstract) params tree."""
+    def f(path, leaf):
+        spec = param_spec(_path_str(path), leaf, cfg, mesh, policy)
+        return NamedSharding(mesh, fit_spec(spec, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(f, params_tree)
+
+
+# ---------------------------------------------------------------------------
+# activations / batch / state shardings
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, kind: str,
+                global_batch: int | None = None) -> Any:
+    """PartitionSpecs for the input batch dict of a step function."""
+    if global_batch is not None:
+        dp = dp_axes_for(global_batch, mesh)
+    else:
+        dp, _ = _axes(mesh)
+        dp = dp or None
+    specs = {"tokens": P(dp, None)}
+    if kind == "train":
+        specs["labels"] = P(dp, None)
+    if cfg.is_encdec:
+        specs["enc_embeds"] = P(dp, None, None)
+    elif cfg.frontend != "none":
+        specs["frontend"] = P(dp, None, None)
+    return specs
+
+
+def cache_partition(cfg: ModelConfig, mesh: Mesh,
+                    policy: ShardingPolicy,
+                    global_batch: int | None = None) -> Any:
+    """Caches pytree PartitionSpecs (KV/SSM state + pos) for decode."""
+    from repro.models.attention import KVCache
+    from repro.models.mamba2 import SSMState
+    from repro.models.transformer import Caches
+
+    dp, tp = _axes(mesh)
+    if global_batch is not None:
+        dp = dp_axes_for(global_batch, mesh)
+    tpx = tp if policy.tp else None
+    kv_head_ax = (tpx if (policy.kv_shard_heads and tpx is not None
+                          and cfg.kv_heads % mesh.shape[tp] == 0) else None)
+    seq_ax = None
+    if kv_head_ax is None and policy.kv_fallback == "sequence" and tpx:
+        seq_ax = tpx
+    kinds = [cfg.layer_kind(i) for i in range(cfg.num_layers)]
+    n_attn = sum(k == "attn" for k in kinds)
+
+    kv = (KVCache(k=P(None, dp, seq_ax, kv_head_ax, None),
+                  v=P(None, dp, seq_ax, kv_head_ax, None))
+          if n_attn else None)
+    ssm = None
+    if n_attn < cfg.num_layers:
+        ssm = SSMState(h=P(None, dp, tpx, None, None),
+                       conv_x=P(None, dp, None, tpx),
+                       conv_b=P(None, dp, None, None),
+                       conv_c=P(None, dp, None, None))
+    cross = ((P(None, dp, None, kv_head_ax, None),
+              P(None, dp, None, kv_head_ax, None))
+             if cfg.is_encdec else None)
+    return Caches(kv=kv, ssm=ssm, cross_kv=cross, pos=P(dp))
+
+
+def to_named(tree_of_specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# activation-sharding hooks (called from model code)
+# ---------------------------------------------------------------------------
+
+_ACTIVATION_RULES: dict[str, P] | None = None
+_KV_SEQ_CTX: tuple | None = None    # (mesh, seq_axis, dp_axes) | None
+
+
+class activation_sharding:
+    """Context manager installing activation sharding rules for step tracing.
+
+    Model code calls ``constrain(h, "residual")``; inactive outside a policy
+    context, so tests and CPU paths are unaffected.  When the policy selects
+    the sequence-sharded decode-KV fallback, the context also exposes
+    (mesh, axis, dp) to attention.decode_attention via ``kv_seq_context``.
+    """
+
+    def __init__(self, mesh: Mesh, policy: ShardingPolicy, kind: str,
+                 global_batch: int | None = None):
+        dp, tp = _axes(mesh)
+        sp_ax = tp if policy.sp else None
+        self.rules = {
+            "residual": P(dp, sp_ax, None),       # (B, S, d)
+            "residual_decode": P(dp, None, None), # (B, 1, d)
+            "logits": P(dp, None, tp),            # (B, S, V)
+            "heads": P(dp, None, tp, None),       # (B, S, H, hd)
+            # MoE dispatch buffers: tokens -> expert-major (EP all-to-all at
+            # this boundary, NOT an all-gather over data — §Perf qwen3-moe)
+            "moe_dispatch": P(dp, tp, None, None),   # (B, E, C, d)
+            "moe_return": P(dp, None, None, None),   # (B, E, C, d) back
+            "moe_tokens": P(dp, None, None),         # (B, S*K, d) token-major
+        }
+        self.kv_ctx = None
+        if policy.kv_fallback == "sequence" and tp is not None:
+            bdp = dp if global_batch is None else dp_axes_for(global_batch, mesh)
+            self.kv_ctx = (mesh, tp, bdp)
+        self.attn_ctx = {
+            "pad_heads_to": (mesh.shape[tp]
+                             if (policy.pad_heads and tp is not None) else 0),
+            "chunked": policy.chunked_attn,
+        }
+
+    def __enter__(self):
+        global _ACTIVATION_RULES, _KV_SEQ_CTX, _ATTN_CTX
+        self._prev = (_ACTIVATION_RULES, _KV_SEQ_CTX, _ATTN_CTX)
+        _ACTIVATION_RULES = self.rules
+        _KV_SEQ_CTX = self.kv_ctx
+        _ATTN_CTX = self.attn_ctx
+        return self
+
+    def __exit__(self, *exc):
+        global _ACTIVATION_RULES, _KV_SEQ_CTX, _ATTN_CTX
+        _ACTIVATION_RULES, _KV_SEQ_CTX, _ATTN_CTX = self._prev
+
+
+_ATTN_CTX: dict | None = None
+
+
+def kv_seq_context():
+    return _KV_SEQ_CTX
+
+
+def attn_context() -> dict:
+    return _ATTN_CTX or {"pad_heads_to": 0, "chunked": None}
+
+
+def constrain(x, kind: str):
+    if _ACTIVATION_RULES is None or kind not in _ACTIVATION_RULES:
+        return x
+    spec = _ACTIVATION_RULES[kind]
+    if len(spec) != x.ndim:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

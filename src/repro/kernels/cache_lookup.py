@@ -1,0 +1,134 @@
+"""Fused semantic-cache lookup kernel (the paper's hot spot, §III.1).
+
+One tap-layer lookup, fused end-to-end in VMEM:
+
+    sem_n = sem / ||sem||                       (pooled tap vector)
+    C     = sem_n @ entriesᵀ  (masked)          (cosine scores — MXU matmul)
+    A     = C + α·A_prev      (masked)          (Eq. 1 accumulation)
+    top-2 over classes        (running across class tiles, VREG-resident)
+    D     = (A₁ − A₂)/A₂                        (Eq. 2 discriminative score)
+
+The paper measures the *unfused* lookup bill at 56 % of a no-cache forward; on
+TPU the win comes from never spilling C/A to HBM between the five stages and
+feeding the MXU one (B_tile × d) · (d × I_tile) matmul per class tile.
+
+Tiling: grid = (B/B_TILE, I/I_TILE), class tiles innermost so the running
+top-2 scratch persists per batch tile (flash-attention-style accumulation).
+Entries arrive L2-normalised (the cache stores unit rows, Eq. 3/4).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e9
+B_TILE = 128
+I_TILE = 128
+
+
+def _kernel(sem_ref, entries_ref, mask_ref, aprev_ref,       # inputs
+            anew_ref, score_ref, pred_ref,                   # outputs
+            semn_ref, m1_ref, m2_ref, a1_ref,                # scratch
+            *, alpha: float, n_i_tiles: int):
+    it = pl.program_id(1)
+
+    # --- first class tile: normalise the pooled vectors once ---------------
+    @pl.when(it == 0)
+    def _():
+        s = sem_ref[...].astype(jnp.float32)
+        norm = jnp.sqrt(jnp.sum(s * s, axis=1, keepdims=True)) + 1e-8
+        semn_ref[...] = s / norm
+        m1_ref[...] = jnp.full_like(m1_ref, NEG)
+        m2_ref[...] = jnp.full_like(m2_ref, NEG)
+        a1_ref[...] = jnp.zeros_like(a1_ref)
+
+    # --- cosine scores for this class tile (MXU) ---------------------------
+    e = entries_ref[...].astype(jnp.float32)                 # (I_t, d)
+    c = jnp.dot(semn_ref[...], e.T,
+                preferred_element_type=jnp.float32)          # (B_t, I_t)
+    mask = mask_ref[...] > 0                                 # (I_t,)
+    a = c + alpha * aprev_ref[...].astype(jnp.float32)       # Eq. (1)
+    a = jnp.where(mask[None, :], a, NEG)
+    anew_ref[...] = a
+
+    # --- running top-2 merge ------------------------------------------------
+    cols = jax.lax.broadcasted_iota(jnp.int32, a.shape, 1) + it * I_TILE
+    b1 = jnp.max(a, axis=1)
+    ba1 = jnp.argmax(a, axis=1) + it * I_TILE
+    masked = jnp.where(cols == ba1[:, None], NEG, a)
+    b2 = jnp.max(masked, axis=1)
+
+    m1, m2, a1 = m1_ref[...], m2_ref[...], a1_ref[...]
+    new_m1 = jnp.maximum(m1, b1)
+    new_a1 = jnp.where(b1 > m1, ba1, a1)
+    new_m2 = jnp.maximum(jnp.maximum(m2, b2), jnp.minimum(m1, b1))
+    m1_ref[...] = new_m1
+    m2_ref[...] = new_m2
+    a1_ref[...] = new_a1
+
+    # --- last tile: Eq. (2) discriminative score ----------------------------
+    @pl.when(it == n_i_tiles - 1)
+    def _():
+        m1v, m2v, a1v = m1_ref[...], m2_ref[...], a1_ref[...]
+        d = jnp.where(m2v > 1e-6, (m1v - m2v) / jnp.maximum(m2v, 1e-6), 0.0)
+        d = jnp.where(m2v <= NEG / 2, 0.0, d)
+        score_ref[...] = d
+        pred_ref[...] = a1v.astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("alpha", "interpret"))
+def cache_lookup_layer(sem: jax.Array, entries: jax.Array, class_mask: jax.Array,
+                       a_prev: jax.Array, *, alpha: float = 0.5,
+                       interpret: bool = True):
+    """One tap-layer lookup for a batch.
+
+    sem (B, d) raw pooled vectors; entries (I, d) unit rows; class_mask (I,)
+    bool; a_prev (B, I) running Eq.-1 accumulator.
+    Returns (a_new (B, I), d_score (B,), pred (B,)).
+    """
+    B, d = sem.shape
+    I = entries.shape[0]
+    Bp = -(-B // B_TILE) * B_TILE
+    Ip = -(-I // I_TILE) * I_TILE
+    semp = jnp.pad(sem, ((0, Bp - B), (0, 0)))
+    ep = jnp.pad(entries, ((0, Ip - I), (0, 0)))
+    mp = jnp.pad(class_mask.astype(jnp.int32), (0, Ip - I))
+    ap = jnp.pad(a_prev, ((0, Bp - B), (0, Ip - I)), constant_values=NEG)
+    n_i = Ip // I_TILE
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((Bp, Ip), jnp.float32),   # a_new
+        jax.ShapeDtypeStruct((Bp,), jnp.float32),      # d_score
+        jax.ShapeDtypeStruct((Bp,), jnp.int32),        # pred
+    )
+    grid = (Bp // B_TILE, n_i)
+    a_new, d_score, pred = pl.pallas_call(
+        functools.partial(_kernel, alpha=alpha, n_i_tiles=n_i),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B_TILE, d), lambda b, i: (b, 0)),
+            pl.BlockSpec((I_TILE, d), lambda b, i: (i, 0)),
+            pl.BlockSpec((I_TILE,), lambda b, i: (i,)),
+            pl.BlockSpec((B_TILE, I_TILE), lambda b, i: (b, i)),
+        ],
+        out_specs=(
+            pl.BlockSpec((B_TILE, I_TILE), lambda b, i: (b, i)),
+            pl.BlockSpec((B_TILE,), lambda b, i: (b,)),
+            pl.BlockSpec((B_TILE,), lambda b, i: (b,)),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((B_TILE, d), jnp.float32),   # normalised sem vectors
+            pltpu.VMEM((B_TILE,), jnp.float32),     # running top-1
+            pltpu.VMEM((B_TILE,), jnp.float32),     # running top-2
+            pltpu.VMEM((B_TILE,), jnp.int32),       # running argmax
+        ],
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(semp, ep, mp, ap)
+    return a_new[:B, :I], d_score[:B], pred[:B]

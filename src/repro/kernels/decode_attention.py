@@ -1,0 +1,135 @@
+"""Flash-decode attention kernel: one query token against a long KV prefix.
+
+Grid = (batch, kv_heads, T/BK) with KV tiles innermost; the per-(batch,
+kv-head) running (m, l, acc) softmax state covers the whole q-head *group*
+(GQA: G = H/Hkv query heads share a KV head), so a tile processes a
+(G × BK) score block — MXU-shaped even though there is a single token.
+
+The same kernel powers the sequence-sharded distributed decode: each model
+rank runs it over its local KV shard and the partial (m, l, acc) triplet is
+combined across ranks in serving/decode_sharded.py (log-sum-exp merge).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+BK = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, n_k: int, scale: float, return_partial: bool):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale      # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)           # (BK, hd)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (G, BK)
+    cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + ki * BK
+    s = jnp.where(cols < len_ref[0], s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jnp.dot(p, v_ref[0, :, 0].astype(jnp.float32),
+                              preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _():
+        if return_partial:
+            o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)
+        else:
+            o_ref[0, 0] = (acc_ref[...]
+                           / jnp.maximum(l_ref[...], 1e-20)[:, None]
+                           ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("return_partial", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     length: jax.Array, *, return_partial: bool = False,
+                     interpret: bool = True):
+    """q (B, H, hd); k/v (B, T, Hkv, hd); length (B,) valid KV prefix.
+
+    Returns (B, H, hd), or with ``return_partial`` the un-normalised
+    (acc (B, H, hd), m (B, H), l (B, H)) for cross-shard combination.
+    """
+    B, H, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / (hd ** 0.5)
+    Tp = -(-T // BK) * BK
+    kp = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    qg = q.reshape(B, Hkv, G, hd)
+    n_k = Tp // BK
+
+    outs = [jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype)]
+    out_specs = [pl.BlockSpec((1, 1, G, hd), lambda b, h, j: (b, h, 0, 0))]
+    if return_partial:
+        outs += [jax.ShapeDtypeStruct((B, Hkv, G), jnp.float32),
+                 jax.ShapeDtypeStruct((B, Hkv, G), jnp.float32)]
+        out_specs += [pl.BlockSpec((1, 1, G), lambda b, h, j: (b, h, 0)),
+                      pl.BlockSpec((1, 1, G), lambda b, h, j: (b, h, 0))]
+
+    def kern(q_ref, k_ref, v_ref, len_ref, *refs):
+        if return_partial:
+            o_ref, mo_ref, lo_ref, m_ref, l_ref, acc_ref = refs
+        else:
+            (o_ref, m_ref, l_ref, acc_ref) = refs
+        _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
+                n_k=n_k, scale=scale, return_partial=return_partial)
+        if return_partial:
+            @pl.when(pl.program_id(2) == n_k - 1)
+            def _():
+                mo_ref[0, 0] = m_ref[...]
+                lo_ref[0, 0] = l_ref[...]
+
+    res = pl.pallas_call(
+        kern,
+        grid=(B, Hkv, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, BK, 1, hd), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, BK, 1, hd), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1,), lambda b, h, j: (b,)),
+        ],
+        out_specs=tuple(out_specs) if return_partial else out_specs[0],
+        out_shape=tuple(outs) if return_partial else outs[0],
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kp, vp, length.astype(jnp.int32))
+    if return_partial:
+        acc, m, l = res
+        return (acc.reshape(B, H, hd), m.reshape(B, H), l.reshape(B, H))
+    return res.reshape(B, H, hd)
+
+
+def combine_partials(accs, ms, ls):
+    """Merge per-shard (acc, m, l) partials (lists or stacked axis 0)."""
+    accs = jnp.stack(accs) if isinstance(accs, (list, tuple)) else accs
+    ms = jnp.stack(ms) if isinstance(ms, (list, tuple)) else ms
+    ls = jnp.stack(ls) if isinstance(ls, (list, tuple)) else ls
+    m_g = jnp.max(ms, axis=0)                        # (B, H)
+    w = jnp.exp(ms - m_g[None])                      # (S, B, H)
+    l_g = jnp.sum(ls * w, axis=0)
+    acc_g = jnp.sum(accs * w[..., None], axis=0)
+    return acc_g / jnp.maximum(l_g, 1e-20)[..., None]

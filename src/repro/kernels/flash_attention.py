@@ -1,0 +1,102 @@
+"""Blocked causal flash attention (32k-prefill hot spot).
+
+Online-softmax tiling: grid = (batch·heads, S_q/BQ, S_k/BK) with the KV tile
+innermost so the running (m, l, acc) scratch persists per query tile.  Causal
+KV tiles strictly above the diagonal are skipped via ``pl.when``.
+
+MXU alignment: BQ = BK = 128; head_dim 64/96/128 (the zoo's range).  GQA is
+expanded outside (ops.py repeats KV heads into the head axis).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+BQ = 128
+BK = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, n_k: int, causal: bool, scale: float, kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def block():
+        q = q_ref[0].astype(jnp.float32) * scale
+        k = k_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (BQ, BK)
+        cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + ki * BK
+        s = jnp.where(cols < kv_len, s, NEG_INF)         # padded KV tail
+        if causal:
+            rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) + qi * BQ
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jnp.dot(p, v_ref[0].astype(jnp.float32),
+                                  preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    if causal:
+        pl.when(ki * BK <= qi * BQ + BQ - 1)(block)
+    else:
+        block()
+
+    @pl.when(ki == n_k - 1)
+    def _():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-20)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, interpret: bool = True) -> jax.Array:
+    """q/k/v (B, S, H, hd) -> (B, S, H, hd).  H == Hkv (pre-expanded GQA)."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+    Sp = -(-S // BQ) * BQ
+    Tp = -(-T // BK) * BK
+
+    def prep(x, L):
+        x = jnp.moveaxis(x, 2, 1).reshape(B * H, x.shape[1], hd)
+        return jnp.pad(x, ((0, 0), (0, L - x.shape[1]), (0, 0)))
+
+    qp, kp, vp = prep(q, Sp), prep(k, Tp), prep(v, Tp)
+    n_k = Tp // BK
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, causal=causal, scale=scale,
+                          kv_len=T),
+        grid=(B * H, Sp // BQ, n_k),
+        in_specs=[
+            pl.BlockSpec((1, BQ, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, BK, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, BK, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BQ, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BQ,), jnp.float32),
+            pltpu.VMEM((BQ,), jnp.float32),
+            pltpu.VMEM((BQ, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    out = out[:, :S].reshape(B, H, S, hd)
+    return jnp.moveaxis(out, 1, 2)

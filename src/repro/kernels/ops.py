@@ -1,0 +1,33 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Model code calls these; each dispatches to the TPU kernel (interpret=True on
+this CPU container — the kernel body is the TPU program either way) and hides
+padding/layout glue.  Oracles live in ref.py; tests/test_kernels.py sweeps
+shapes × dtypes asserting allclose.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cache_lookup import cache_lookup_layer  # noqa: F401
+from repro.kernels.decode_attention import (combine_partials,  # noqa: F401
+                                            decode_attention)
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.ssd_scan import ssd_scan  # noqa: F401
+
+
+def flash_attention_gqa(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        interpret: bool = True) -> jax.Array:
+    """GQA wrapper: q (B,S,H,hd), k/v (B,T,Hkv,hd) -> (B,S,H,hd)."""
+    H, Hkv = q.shape[2], k.shape[2]
+    if H != Hkv:
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    return _flash(q, k, v, causal=causal, interpret=interpret)
+
+
+flash_attention = _flash

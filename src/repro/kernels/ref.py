@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each ``*_ref`` mirrors its kernel's contract exactly; the CoCa lookup oracle
+delegates to :mod:`repro.core.semantic_cache` so the kernel is provably
+consistent with the algorithm the rest of the framework runs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.semantic_cache import (accumulate, cosine_scores,
+                                       discriminative_score)
+
+NEG_INF = -1e30
+
+
+def cache_lookup_layer_ref(sem, entries, class_mask, a_prev, *, alpha=0.5):
+    """Oracle for kernels.cache_lookup.cache_lookup_layer."""
+    c = cosine_scores(sem, entries, class_mask)
+    a = accumulate(c, a_prev, alpha, class_mask)
+    d, pred = discriminative_score(a)
+    return a, d, pred
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """Oracle for kernels.flash_attention (single head batch).
+
+    q/k/v (B, S, H, hd) with H == Hkv (GQA expansion happens in ops.py).
+    """
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    if causal:
+        S, T = scores.shape[-2], scores.shape[-1]
+        mask = jnp.tril(jnp.ones((S, T), bool))
+        scores = jnp.where(mask, scores, NEG_INF)
+    att = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", att.astype(v.dtype), v)
+
+
+def decode_attention_ref(q, k, v, length):
+    """Oracle for kernels.decode_attention.
+
+    q (B, H, hd); k/v (B, T, H, hd); ``length`` (B,) valid prefix length.
+    """
+    scores = jnp.einsum("bhd,bthd->bht", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    T = k.shape[1]
+    valid = jnp.arange(T)[None, :] < length[:, None]           # (B, T)
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    att = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bht,bthd->bhd", att.astype(v.dtype), v)
+
+
+def ssd_scan_ref(x, dt, a_decay, B, C, *, chunk: int = 128):
+    """Oracle for kernels.ssd_scan — delegates to the model's chunked ref."""
+    from repro.models.mamba2 import ssd_chunked_ref
+    y, _ = ssd_chunked_ref(x.astype(jnp.float32), dt.astype(jnp.float32),
+                           a_decay.astype(jnp.float32), B.astype(jnp.float32),
+                           C.astype(jnp.float32), chunk)
+    return y
+
+
+def ssd_sequential_ref(x, dt, a_decay, B, C):
+    """Second, independent oracle: the literal per-step SSD recurrence."""
+    Bsz, S, H, P = x.shape
+    N = B.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, at, Bt, Ct = inp
+        h = h * at[:, :, None, None] + jnp.einsum(
+            "bn,bh,bhp->bhnp", Bt, dtt, xt)
+        y = jnp.einsum("bn,bhnp->bhp", Ct, h)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(a_decay, 1, 0), jnp.moveaxis(B, 1, 0),
+          jnp.moveaxis(C, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)

@@ -1,0 +1,90 @@
+"""Mamba-2 SSD chunked scan kernel.
+
+Grid = (batch, heads, n_chunks) with chunks innermost; the inter-chunk SSM
+state (d_state × head_dim) lives in VMEM scratch and carries across chunk
+iterations — the kernel computes, per chunk:
+
+    la        = cumsum(log a)                       (chunk,)
+    seg       = exp(la_i − la_j) · causal           (chunk, chunk)
+    y_intra   = ((C·Bᵀ) ∘ seg ∘ dt) @ x             MXU matmuls
+    y_inter   = (C ∘ exp(la)) @ h_state
+    h_state   = exp(la_last)·h_state + Bᵀ·(decay_to_end ∘ dt ∘ x)
+
+This is the TPU-native layout of the SSD algorithm: intra-chunk quadratic
+work maps to (chunk × N)·(N × chunk) and (chunk × chunk)·(chunk × P) MXU
+matmuls; the recurrence touches VMEM only.  B/C are shared across heads
+(their index map ignores the head coordinate).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)          # (c, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)        # (c,)
+    a = a_ref[0, :, 0].astype(jnp.float32)          # (c,)
+    B = b_ref[0].astype(jnp.float32)                # (c, N)
+    C = c_ref[0].astype(jnp.float32)                # (c, N)
+
+    la = jnp.cumsum(jnp.log(jnp.maximum(a, 1e-20)))                # (c,)
+    seg = jnp.exp(la[:, None] - la[None, :])                       # (c, c)
+    rows = jax.lax.broadcasted_iota(jnp.int32, seg.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, seg.shape, 1)
+    seg = jnp.where(rows >= cols, seg, 0.0)
+
+    cb = jnp.dot(C, B.T, preferred_element_type=jnp.float32)       # (c, c)
+    w = cb * seg * dt[None, :]
+    y_intra = jnp.dot(w, x, preferred_element_type=jnp.float32)    # (c, P)
+
+    h = h_ref[...]                                                 # (N, P)
+    y_inter = jnp.dot(C * jnp.exp(la)[:, None], h,
+                      preferred_element_type=jnp.float32)          # (c, P)
+    y_ref[0, :, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    decay_to_end = jnp.exp(la[-1] - la)                            # (c,)
+    chunk_state = jnp.dot((B * (decay_to_end * dt)[:, None]).T, x,
+                          preferred_element_type=jnp.float32)      # (N, P)
+    h_ref[...] = jnp.exp(la[-1]) * h + chunk_state
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, a_decay: jax.Array, B: jax.Array,
+             C: jax.Array, *, chunk: int = 128,
+             interpret: bool = True) -> jax.Array:
+    """x (B, S, H, P), dt/a (B, S, H), B/C (B, S, N) -> y (B, S, H, P).
+
+    Requires S % chunk == 0 (mamba_fwd pads with the state-neutral tail).
+    """
+    Bsz, S, H, P = x.shape
+    N = B.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    y = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=(Bsz, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, S, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a_decay, B, C)
+    return y

@@ -1,0 +1,328 @@
+"""Multi-pod dry-run: prove the distribution config is coherent without TPUs.
+
+MUST be the first two lines (jax locks the device count on first init):
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+# ruff: noqa: E402
+import argparse
+import json
+import re
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (SHAPES, cell_supported, get_config, grid_cells,
+                           input_specs, param_specs)
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import ModelConfig
+
+# TPU v5e hardware constants for the roofline terms (assignment-provided).
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\][^=]*?"
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)",
+)
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes of every collective op in the (post-SPMD) HLO."""
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "count": 0}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        dtype, dims, kind = m.groups()
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        numel = int(np.prod([int(d) for d in dims.split(",") if d])) if dims else 1
+        out[kind] += numel * nbytes
+        out["count"] += 1
+    return out
+
+
+def tree_bytes_per_device(tree, shardings, mesh) -> int:
+    """Analytic per-device bytes of a sharded pytree of ShapeDtypeStructs."""
+    total = 0
+    for leaf, sh in zip(jax.tree.leaves(tree), jax.tree.leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "spec"))):
+        shard_elems = np.prod(sh.shard_shape(leaf.shape)) if leaf.shape else 1
+        total += int(shard_elems) * leaf.dtype.itemsize
+    return total
+
+
+def abstract_opt_state(abstract_params):
+    from repro.optim.adamw import init_state
+    return jax.eval_shape(init_state, abstract_params)
+
+
+def _scaled_cfg(cfg: ModelConfig, groups: int, *, remat: bool,
+                scan_layers: bool):
+    """Config with ``groups`` layer periods (for two-point cost extrapolation)."""
+    import dataclasses
+    period = cfg.attn_every if cfg.attn_every > 0 else 1
+    full_groups = cfg.num_layers // period
+    enc = (cfg.enc_layers * groups // full_groups) if cfg.is_encdec else 0
+    return dataclasses.replace(cfg, num_layers=groups * period,
+                               enc_layers=enc, remat=remat,
+                               scan_layers=scan_layers)
+
+
+def _build_step(cfg: ModelConfig, shape, mesh, *, microbatches: int,
+                policy_name: str):
+    """(jitted, args, shardings_of_interest) for one cell."""
+    import dataclasses
+
+    from repro.distributed.sharding import (SERVE_FSDP_POLICY, SERVE_POLICY,
+                                            TRAIN_POLICY)
+    from repro.optim.adamw import AdamWConfig
+    from repro.serving.engine import (empty_serving_table, make_decode_step,
+                                      make_prefill_step)
+    from repro.training.train_step import make_train_step
+
+    specs = input_specs(cfg, shape)
+    if shape.kind == "train":
+        step, in_sh, out_sh = make_train_step(
+            cfg, AdamWConfig(), mesh, TRAIN_POLICY,
+            num_microbatches=microbatches, global_batch=shape.global_batch,
+            cast_bf16=(policy_name == "train_bf16gather"))
+        aparams = param_specs(cfg)
+        aopt = abstract_opt_state(aparams)
+        args = (aparams, aopt, specs)
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+        return jitted, args, {"params": (aparams, in_sh[0]),
+                              "opt": (aopt, in_sh[1])}
+    big = cfg.param_count() * 2 > 14e9 * mesh.shape["model"]
+    policy = SERVE_FSDP_POLICY if big else SERVE_POLICY
+    if policy_name == "serve_seqkv":
+        policy = dataclasses.replace(policy, kv_fallback="sequence")
+    elif policy_name == "serve_flash":
+        # §Perf: pad uneven heads to shard attention + chunked flash-
+        # semantics attention (no S^2 score materialisation in HBM)
+        policy = dataclasses.replace(policy, pad_heads=True,
+                                     chunked_attn=(2048, 2048))
+    elif policy_name == "serve_flash_sp":
+        # + sequence-parallel residuals: reduce-scatter/all-gather replaces
+        # the per-layer all-reduce (halves collective bytes, shards norm/MLP
+        # activations over "model")
+        policy = dataclasses.replace(policy, pad_heads=True,
+                                     chunked_attn=(2048, 2048), sp=True)
+    aparams = param_specs(cfg)
+    if policy_name in ("serve_seqkv", "serve_bf16", "serve_flash",
+                       "serve_flash_sp"):
+        # serving stores weights in bf16 (production standard); fp32 masters
+        # live only in the training state.
+        aparams = jax.tree.map(
+            lambda l: (jax.ShapeDtypeStruct(l.shape, jnp.bfloat16)
+                       if l.dtype == jnp.dtype(jnp.float32) else l), aparams)
+    table = jax.eval_shape(lambda: empty_serving_table(cfg))
+    if shape.kind == "prefill":
+        step, (p_sh, b_sh, t_sh) = make_prefill_step(
+            cfg, mesh, policy, global_batch=shape.global_batch)
+        args = (aparams, specs, table)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh, t_sh))
+        return jitted, args, {"params": (aparams, p_sh)}
+    step, (p_sh, tok_sh, c_sh, t_sh) = make_decode_step(
+        cfg, mesh, policy, global_batch=shape.global_batch)
+    args = (aparams, specs["tokens"], specs["caches"], table)
+    jitted = jax.jit(step, in_shardings=(p_sh, tok_sh, c_sh, t_sh))
+    return jitted, args, {"params": (aparams, p_sh),
+                          "caches": (specs["caches"], c_sh)}
+
+
+def _compile_and_measure(cfg, shape, mesh, *, microbatches, policy_name):
+    t0 = time.time()
+    jitted, args, sh = _build_step(cfg, shape, mesh,
+                                   microbatches=microbatches,
+                                   policy_name=policy_name)
+    with mesh:
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": coll,
+        "coll_total": float(sum(v for k, v in coll.items() if k != "count")),
+        "mem": compiled.memory_analysis(),
+        "t_lower": t_lower, "t_compile": t_compile,
+        "shardings": sh,
+    }
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *,
+               remat: bool = True, microbatches: int = 1,
+               policy_name: str = "auto", cost_groups: int = 2):
+    """Compile one (arch × shape × mesh) cell and derive its roofline terms.
+
+    Two artifacts per cell:
+      1. the TRUE scan-over-layers step (the deployable program) — proves the
+         sharding compiles and yields ``memory_analysis``;
+      2. two small UNROLLED variants (1 and ``cost_groups`` layer periods) —
+         XLA costs a while-loop body once regardless of trip count, so
+         per-layer FLOPs/bytes/collectives are extracted by differencing and
+         extrapolated:  total = f(1) + (G-1)·(f(2) − f(1)).
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": reason}
+    remat = remat and shape.kind == "train"
+
+    # --- 1) the deployable artifact ----------------------------------------
+    import dataclasses
+    true_cfg = dataclasses.replace(cfg, remat=remat)
+    true_m = _compile_and_measure(true_cfg, shape, mesh,
+                                  microbatches=microbatches,
+                                  policy_name=policy_name)
+
+    # --- 2) per-layer costing by two-point extrapolation --------------------
+    period = cfg.attn_every if cfg.attn_every > 0 else 1
+    G = cfg.num_layers // period
+    m1 = _compile_and_measure(
+        _scaled_cfg(cfg, 1, remat=remat, scan_layers=False), shape, mesh,
+        microbatches=microbatches, policy_name=policy_name)
+    if G > 1:
+        m2 = _compile_and_measure(
+            _scaled_cfg(cfg, min(cost_groups, G), remat=remat,
+                        scan_layers=False), shape, mesh,
+            microbatches=microbatches, policy_name=policy_name)
+        g2 = min(cost_groups, G)
+        def extrap(k):
+            body = (m2[k] - m1[k]) / (g2 - 1)
+            return m1[k] + (G - 1) * body
+        flops = extrap("flops")
+        bytes_acc = extrap("bytes")
+        coll_total = extrap("coll_total")
+    else:
+        flops, bytes_acc, coll_total = m1["flops"], m1["bytes"], m1["coll_total"]
+
+    # --- roofline terms (seconds; cost_analysis is PER-DEVICE post-SPMD) ----
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll_total / ICI_BW
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+
+    n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        model_flops = 6 * n_active * shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        model_flops = 2 * n_active * shape.global_batch * shape.seq_len
+    else:
+        model_flops = 2 * n_active * shape.global_batch
+    hlo_flops_global = flops * n_dev
+
+    stats = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "kind": shape.kind, "policy": policy_name,
+        "hlo_flops_per_dev": flops, "hlo_bytes_per_dev": bytes_acc,
+        "collective_bytes_per_dev": coll_total,
+        "collectives_1layer": m1["coll"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_flop_ratio": (model_flops / hlo_flops_global
+                              if hlo_flops_global else 0.0),
+        "lower_s": round(true_m["t_lower"], 1),
+        "compile_s": round(true_m["t_compile"], 1),
+        "params_b": cfg.param_count() / 1e9,
+    }
+    try:
+        aparams, p_sh = true_m["shardings"]["params"]
+        stats["param_bytes_per_dev"] = tree_bytes_per_device(aparams, p_sh, mesh)
+        if "opt" in true_m["shardings"]:
+            aopt, o_sh = true_m["shardings"]["opt"]
+            stats["opt_bytes_per_dev"] = tree_bytes_per_device(aopt, o_sh, mesh)
+        if "caches" in true_m["shardings"]:
+            ac, c_sh = true_m["shardings"]["caches"]
+            stats["cache_bytes_per_dev"] = tree_bytes_per_device(ac, c_sh, mesh)
+    except Exception as e:
+        stats["bytes_per_dev_error"] = repr(e)
+    mem = true_m["mem"]
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                stats[f"mem_{attr}"] = int(v)
+    return stats
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--policy", default="auto",
+                    help="auto | serve_seqkv (decode KV sequence-sharded)")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    meshes = []
+    if args.both_meshes:
+        meshes = [("pod1", make_production_mesh()),
+                  ("pod2", make_production_mesh(multi_pod=True))]
+    else:
+        tag = "pod2" if args.multi_pod else "pod1"
+        meshes = [(tag, make_production_mesh(multi_pod=args.multi_pod))]
+
+    cells = [(a, s) for a, s, ok, _ in grid_cells(include_skipped=True)
+             if (args.arch in (None, a)) and (args.shape in (None, s))]
+    failures = []
+    for tag, mesh in meshes:
+        for arch, shape_name in cells:
+            name = f"{arch}__{shape_name}__{tag}"
+            if args.policy != "auto":
+                name += f"__{args.policy}"
+            fp = outdir / f"{name}.json"
+            try:
+                stats = lower_cell(arch, shape_name, mesh,
+                                   remat=not args.no_remat,
+                                   microbatches=args.microbatches,
+                                   policy_name=args.policy)
+                fp.write_text(json.dumps(stats, indent=1))
+                if "skipped" in stats:
+                    print(f"[dryrun] {name}: SKIP ({stats['skipped']})")
+                else:
+                    print(f"[dryrun] {name}: ok "
+                          f"flops/dev={stats['hlo_flops_per_dev']:.3e} "
+                          f"coll/dev={stats['collective_bytes_per_dev']:.3e}B "
+                          f"dom={stats['dominant']} "
+                          f"useful={stats['useful_flop_ratio']:.2f} "
+                          f"(lower {stats['lower_s']}s compile {stats['compile_s']}s)")
+            except Exception as e:  # a failing cell is a bug in our sharding
+                failures.append((name, repr(e)))
+                fp.write_text(json.dumps({"arch": arch, "shape": shape_name,
+                                          "error": repr(e)}, indent=1))
+                print(f"[dryrun] {name}: FAIL {e!r}", file=sys.stderr)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:", file=sys.stderr)
+        for n, e in failures:
+            print(f"  {n}: {e[:200]}", file=sys.stderr)
+        sys.exit(1)
+    print("\nALL CELLS PASSED")
+
+
+if __name__ == "__main__":
+    main()

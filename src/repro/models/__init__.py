@@ -1,0 +1,6 @@
+"""Architecture zoo: unified config + pure-function model stacks."""
+from repro.models.config import ModelConfig, MoEConfig, SSMConfig  # noqa: F401
+from repro.models.transformer import (  # noqa: F401
+    Caches, TrainOut, decode_step, encode, forward_train, init_params,
+    prefill,
+)

@@ -1,0 +1,138 @@
+"""Shared transformer layers: norms, rotary embeddings, MLPs, embeddings.
+
+Pure functions over explicit parameter pytrees (no framework classes) so the
+same code path serves init, train, prefill, decode and ``jax.eval_shape``
+dry-runs.  Initialisers return arrays; ``*_fwd`` functions consume them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def truncated_normal(key, shape, scale, dtype=jnp.float32):
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: ModelConfig, d: int | None = None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))}
+    return {"scale": jnp.ones((d,))}
+
+
+def norm_fwd(p, x, cfg: ModelConfig, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        var = (xf ** 2).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (supports partial rotary, e.g. glm4's 0.5)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(cfg: ModelConfig, positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """positions (...,) -> (cos, sin) of shape (..., rot_dim // 2)."""
+    hd = cfg.resolved_head_dim
+    rot = int(hd * cfg.partial_rotary)
+    rot -= rot % 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, hd); cos/sin (..., S, rot/2) broadcast over heads."""
+    rot2 = cos.shape[-1]
+    xr, xp = x[..., :2 * rot2], x[..., 2 * rot2:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    c, s = cos[..., None, :], sin[..., None, :]
+    o1 = x1 * c - x2 * s
+    o2 = x2 * c + x1 * s
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out, xp], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    scale_in = d ** -0.5
+    scale_out = ff ** -0.5
+    if cfg.act == "swiglu":
+        return {"wi_gate": truncated_normal(ks[0], (d, ff), scale_in),
+                "wi_up": truncated_normal(ks[1], (d, ff), scale_in),
+                "wo": truncated_normal(ks[2], (ff, d), scale_out)}
+    return {"wi": truncated_normal(ks[0], (d, ff), scale_in),
+            "wo": truncated_normal(ks[2], (ff, d), scale_out)}
+
+
+def mlp_fwd(p, x, cfg: ModelConfig):
+    if cfg.act == "swiglu":
+        h = (jax.nn.silu(x @ p["wi_gate"].astype(x.dtype))
+             * (x @ p["wi_up"].astype(x.dtype)))
+    else:
+        h = jax.nn.gelu(x @ p["wi"].astype(x.dtype))
+    return h @ p["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def embed_init(key, cfg: ModelConfig):
+    p = {"tok": truncated_normal(key, (cfg.vocab_size, cfg.d_model), 1.0)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = truncated_normal(
+            jax.random.fold_in(key, 1), (cfg.d_model, cfg.vocab_size),
+            cfg.d_model ** -0.5)
+    return p
+
+
+def embed_fwd(p, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return jnp.take(p["tok"], tokens, axis=0).astype(cfg.dtype)
+
+
+def unembed_fwd(p, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w = p["tok"].T if cfg.tie_embeddings else p["unembed"]
+    return (h @ w.astype(h.dtype)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# semantic tap projection (CoCa integration)
+# ---------------------------------------------------------------------------
+
+def tap_init(key, cfg: ModelConfig):
+    n_taps = len(cfg.tap_layers())
+    if cfg.tap_every <= 0 or n_taps == 0:
+        return None
+    return {"proj": truncated_normal(key, (n_taps, cfg.d_model, cfg.sem_dim),
+                                     cfg.d_model ** -0.5)}
+
+
+def tap_project(tap_params, pooled: jax.Array) -> jax.Array:
+    """pooled (..., n_taps, d_model) -> non-negative unit vectors (..., n_taps, sem_dim).
+
+    ReLU keeps taps in the positive orthant, matching the cosine-score
+    landscape the paper's thresholds operate in (see data/streams.py).
+    """
+    z = jnp.einsum("...td,tds->...ts", pooled.astype(jnp.float32),
+                   tap_params["proj"])
+    z = jax.nn.relu(z) + 1e-6
+    return z / (jnp.linalg.norm(z, axis=-1, keepdims=True) + 1e-8)

@@ -1,0 +1,108 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+Dispatch is **row-local** (per batch element): ranks/capacity are computed
+with a cumulative sum over each row's (S·K) assignment list only.  This is the
+GSPMD-friendly form — every dispatch tensor keeps the batch dim leading, so
+the whole path shards over the "data" axes with zero cross-shard dependencies
+(a global flat-token cumsum would force XLA to replicate the dispatch and
+multiply FLOPs by the device count; we measured exactly that before switching
+— see EXPERIMENTS.md §Perf).  The expert einsum carries the experts on the
+"model" axis (EP); GSPMD materialises the token exchange as the all-to-all at
+that sharding boundary.
+
+Capacity semantics: C = S·K/E · capacity_factor per row; over-capacity tokens
+fall through (residual passes unchanged) — per-row capacity is what real
+frameworks use (per-device capacity).  Decode (S=1) is naturally lossless:
+a token's top-k experts are distinct, so per-expert assignments ≤ 1 ≤ C.
+
+The auxiliary load-balance loss (Switch-style: E · Σ fraction_e · prob_e) is
+returned for the training loss.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+from repro.models.config import ModelConfig
+from repro.models.layers import truncated_normal
+
+
+def moe_init(key, cfg: ModelConfig):
+    m = cfg.moe
+    d, ff, e = cfg.d_model, m.d_expert, m.num_experts
+    ks = jax.random.split(key, 4)
+    s_in, s_out = d ** -0.5, ff ** -0.5
+    return {"router": truncated_normal(ks[0], (d, e), s_in),
+            "wi_gate": truncated_normal(ks[1], (e, d, ff), s_in),
+            "wi_up": truncated_normal(ks[2], (e, d, ff), s_in),
+            "wo": truncated_normal(ks[3], (e, ff, d), s_out)}
+
+
+class MoEOut(NamedTuple):
+    y: jax.Array
+    aux_loss: jax.Array
+
+
+def moe_fwd(p, x: jax.Array, cfg: ModelConfig) -> MoEOut:
+    """x (B, S, d) -> (B, S, d) + load-balance aux loss."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, K = m.num_experts, m.top_k
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (B, S, E)
+    gate, expert_idx = jax.lax.top_k(probs, K)                 # (B, S, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- row-local capacity ranks ------------------------------------------
+    C = int(max(1, round(S * K / E * m.capacity_factor)))
+    flat = expert_idx.reshape(B, S * K)                        # (B, S*K)
+    onehot = jax.nn.one_hot(flat, E, dtype=jnp.int32)          # (B, S*K, E)
+    rank = jnp.cumsum(onehot, axis=1) - onehot
+    pos = jnp.take_along_axis(rank, flat[..., None], axis=2)[..., 0]
+    keep = pos < C                                             # (B, S*K)
+    slot = flat * C + jnp.minimum(pos, C - 1)                  # in [0, E*C)
+
+    # ---- dispatch -----------------------------------------------------------
+    # Scatter only the NARROW token indices into expert slots, then gather
+    # the wide activations.  (A direct payload scatter makes XLA materialise
+    # u32 indices at (B, S*K, d) — two 137 GB all-gathers per layer on
+    # qwen3-moe before this rewrite; see EXPERIMENTS.md §Perf.)
+    token_of = jnp.broadcast_to(jnp.repeat(jnp.arange(S), K), (B, S * K))
+    safe_slot = jnp.where(keep, slot, E * C)                   # OOB rows drop
+    barange = jnp.arange(B)[:, None]
+    slot_token = jnp.full((B, E * C), S, jnp.int32)            # S = sentinel
+    slot_token = slot_token.at[barange, safe_slot].set(
+        token_of.astype(jnp.int32), mode="drop")
+    x_pad = jnp.concatenate([x, jnp.zeros((B, 1, d), x.dtype)], axis=1)
+    expert_in = jnp.take_along_axis(
+        x_pad, slot_token[..., None], axis=1).reshape(B, E, C, d)
+
+    # ---- expert compute (E sharded over "model" => EP all-to-all) ----------
+    h = (jax.nn.silu(jnp.einsum("becd,edf->becf", expert_in,
+                                p["wi_gate"].astype(x.dtype)))
+         * jnp.einsum("becd,edf->becf", expert_in, p["wi_up"].astype(x.dtype)))
+    expert_out = jnp.einsum("becf,efd->becd", h, p["wo"].astype(x.dtype))
+
+    # ---- combine: gather back, weight by gates, reduce over k ---------------
+    # token_of groups are contiguous (i -> i // K), so the scatter-add is a
+    # static reshape + sum over the top-k axis — no scatter at all.
+    flat_out = expert_out.reshape(B, E * C, d)
+    gathered = jnp.take_along_axis(
+        flat_out, jnp.minimum(slot, E * C - 1)[..., None], axis=1)
+    # NOTE(§Perf, refuted): constraining this gather to token-major layout
+    # added 40% collective bytes (GSPMD then reshards flat_out wholesale).
+    w = (gate.reshape(B, S * K) * keep).astype(x.dtype)
+    y = (gathered.reshape(B, S, K, d)
+         * w.reshape(B, S, K, 1)).sum(axis=2)
+
+    # ---- Switch-style load-balance loss -------------------------------------
+    frac = onehot.astype(jnp.float32).mean(axis=(0, 1)) * K    # tokens/expert
+    imp = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(frac * imp) * m.router_aux_weight
+    return MoEOut(y=y, aux_loss=aux)

@@ -1,0 +1,120 @@
+"""Serving steps with first-class CoCa semantic caching.
+
+``make_prefill_step`` / ``make_decode_step`` return (fn, in_shardings,
+out_shardings) — the exact artifacts the multi-pod dry-run lowers.  When the
+architecture has taps (``cfg.tap_every > 0``) the step consumes a
+:class:`~repro.core.semantic_cache.CacheTable` (hot-spot entries allocated by
+the CoCa server) and emits the Eq. (1)/(2) hit decision alongside logits: on a
+hit the request is *resolved* — the orchestration layer (serving/batching.py)
+retires its slot and refills it, which is how the paper's early-exit latency
+win materialises under batched SPMD execution (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.semantic_cache import CacheConfig, CacheTable, lookup_all_layers
+from repro.distributed.sharding import (SERVE_POLICY, ShardingPolicy,
+                                        activation_sharding, batch_specs,
+                                        cache_partition, make_param_shardings,
+                                        to_named)
+from repro.models.config import ModelConfig
+from repro.models.transformer import Caches, decode_step, prefill
+
+
+def coca_cache_config(cfg: ModelConfig, theta: float = 0.10,
+                      alpha: float = 0.5) -> CacheConfig:
+    return CacheConfig(num_classes=cfg.num_classes,
+                       num_layers=len(cfg.tap_layers()),
+                       sem_dim=cfg.sem_dim, alpha=alpha, theta=theta)
+
+
+def empty_serving_table(cfg: ModelConfig) -> CacheTable:
+    c = coca_cache_config(cfg)
+    return CacheTable(
+        entries=jnp.zeros((c.num_layers, c.num_classes, c.sem_dim), jnp.float32),
+        class_mask=jnp.zeros((c.num_classes,), bool),
+        layer_mask=jnp.zeros((c.num_layers,), bool))
+
+
+class CocaOut(NamedTuple):
+    hit: jax.Array          # (B,) request resolved by the semantic cache
+    pred: jax.Array         # (B,) class on hit
+    exit_layer: jax.Array   # (B,) first hitting tap (== n_taps: none)
+    scores: jax.Array       # (B, n_taps)
+
+
+def _coca_lookup(cfg: ModelConfig, taps, table: CacheTable) -> CocaOut:
+    c = coca_cache_config(cfg)
+    look = lookup_all_layers(table, taps, c)
+    return CocaOut(hit=look.hit, pred=look.pred,
+                   exit_layer=look.exit_layer, scores=look.scores)
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh,
+                      policy: ShardingPolicy = SERVE_POLICY,
+                      max_len: int | None = None,
+                      global_batch: int | None = None):
+    has_taps = len(cfg.tap_layers()) > 0
+
+    def prefill_step(params, batch, table: CacheTable | None = None):
+        with activation_sharding(mesh, policy, "serve", global_batch):
+            logits, caches, taps, cls = prefill(params, batch, cfg, max_len)
+            out = {"logits": logits, "caches": caches}
+            if cls is not None:
+                out["cls_logits"] = cls
+            if has_taps and table is not None:
+                out["coca"] = _coca_lookup(cfg, taps, table)
+            return out
+
+    abstract_params = jax.eval_shape(
+        lambda k: __import__("repro.models", fromlist=["init_params"]
+                             ).init_params(k, cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    p_shard = make_param_shardings(cfg, mesh, policy, abstract_params)
+    b_shard = to_named(batch_specs(cfg, mesh, "prefill", global_batch), mesh)
+    repl = NamedSharding(mesh, P())
+    t_shard = CacheTable(entries=repl, class_mask=repl, layer_mask=repl)
+    return prefill_step, (p_shard, b_shard, t_shard)
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh,
+                     policy: ShardingPolicy = SERVE_POLICY,
+                     global_batch: int | None = None):
+    """serve_step: one new token for every live slot, CoCa lookup included."""
+    has_taps = len(cfg.tap_layers()) > 0
+
+    def serve_step(params, tokens, caches: Caches,
+                   table: CacheTable | None = None):
+        with activation_sharding(mesh, policy, "serve", global_batch):
+            logits, new_caches, taps, cls = decode_step(params, tokens,
+                                                        caches, cfg)
+            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            out = {"logits": logits, "next_token": next_tok,
+                   "caches": new_caches}
+            if cls is not None:
+                out["cls_logits"] = cls
+            if has_taps and table is not None:
+                out["coca"] = _coca_lookup(cfg, taps, table)
+            return out
+
+    abstract_params = jax.eval_shape(
+        lambda k: __import__("repro.models", fromlist=["init_params"]
+                             ).init_params(k, cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    p_shard = make_param_shardings(cfg, mesh, policy, abstract_params)
+    from repro.distributed.sharding import dp_axes_for
+    if global_batch is not None:
+        dp = dp_axes_for(global_batch, mesh)
+    else:
+        dp = tuple(a for a in mesh.axis_names if a in ("pod", "data")) or None
+    tok_shard = NamedSharding(mesh, P(dp, None))
+    c_shard = to_named(cache_partition(cfg, mesh, policy, global_batch), mesh)
+    repl = NamedSharding(mesh, P())
+    t_shard = CacheTable(entries=repl, class_mask=repl, layer_mask=repl)
+    return serve_step, (p_shard, tok_shard, c_shard, t_shard)

@@ -1,0 +1,128 @@
+"""SLO-aware request scheduler for CoCa serving.
+
+The paper's framing is SLO compliance ("a 30 % latency reduction target",
+§Abstract; per-task deadlines, §I).  This scheduler closes that loop above
+the continuous-batching engine:
+
+  * requests carry deadlines; admission is earliest-deadline-first with a
+    load-shedding valve (drop requests that cannot meet their deadline even
+    if scheduled immediately — serving a doomed request wastes slots);
+  * per-window SLO attainment, p50/p95 latency and cache-hit statistics are
+    tracked and exposed to the CoCa server, which can tighten/relax Θ between
+    rounds (hit ratio ↑ when the SLO is at risk, accuracy ↑ when there is
+    slack) — the dynamic analogue of the paper's static Θ-per-SLO table
+    (§VI.D).
+
+Pure-python control plane (decisions happen between compiled steps); the
+simulator in serving/batching.py provides the execution model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import NamedTuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    rid: int
+    arrival: float           # tick of arrival
+    blocks_needed: int       # exit block under the current cache (oracle/est)
+    deadline: float          # absolute tick deadline
+
+
+class SLOStats(NamedTuple):
+    served: int
+    shed: int
+    missed: int
+    attainment: float
+    p50: float
+    p95: float
+
+
+@dataclasses.dataclass
+class ThetaController:
+    """Between-round Θ adjustment from SLO attainment (bang-bang + hysteresis).
+
+    attainment < target - margin  -> lower Θ (more early exits, faster)
+    attainment > target + margin  -> raise Θ (spend slack on accuracy)
+    """
+
+    theta: float
+    target: float = 0.95
+    margin: float = 0.02
+    step: float = 0.1          # multiplicative
+    lo: float = 0.01
+    hi: float = 0.5
+
+    def update(self, attainment: float) -> float:
+        if attainment < self.target - self.margin:
+            self.theta = max(self.lo, self.theta * (1 - self.step))
+        elif attainment > self.target + self.margin:
+            self.theta = min(self.hi, self.theta * (1 + self.step))
+        return self.theta
+
+
+class EDFScheduler:
+    """Earliest-deadline-first with load shedding over batched block-ticks."""
+
+    def __init__(self, max_slots: int):
+        self.max_slots = max_slots
+        self.queue: list[tuple[float, int, Request]] = []
+        self.slots: list[tuple[Request, int, float] | None] = \
+            [None] * max_slots
+        self.tick = 0.0
+        self.latencies: list[float] = []
+        self.served = self.shed = self.missed = 0
+
+    def submit(self, req: Request) -> None:
+        heapq.heappush(self.queue, (req.deadline, req.rid, req))
+
+    def _admit(self) -> None:
+        for i in range(self.max_slots):
+            if self.slots[i] is not None:
+                continue
+            while self.queue:
+                _, _, req = heapq.heappop(self.queue)
+                if self.tick + req.blocks_needed > req.deadline:
+                    self.shed += 1          # cannot make it: shed, don't burn
+                    continue
+                self.slots[i] = (req, req.blocks_needed, self.tick)
+                break
+
+    def run_tick(self) -> None:
+        self._admit()
+        self.tick += 1.0
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            req, remaining, start = s
+            remaining -= 1
+            if remaining <= 0:
+                lat = self.tick - req.arrival
+                self.latencies.append(lat)
+                self.served += 1
+                if self.tick > req.deadline:
+                    self.missed += 1
+                self.slots[i] = None
+            else:
+                self.slots[i] = (req, remaining, start)
+
+    def drain(self, max_ticks: int = 100_000) -> None:
+        t = 0
+        while (self.queue or any(self.slots)) and t < max_ticks:
+            self.run_tick()
+            t += 1
+
+    def stats(self) -> SLOStats:
+        lat = np.asarray(self.latencies) if self.latencies else np.zeros(1)
+        total = self.served + self.shed
+        ok = self.served - self.missed
+        return SLOStats(
+            served=self.served, shed=self.shed, missed=self.missed,
+            attainment=ok / max(total, 1),
+            p50=float(np.percentile(lat, 50)),
+            p95=float(np.percentile(lat, 95)))

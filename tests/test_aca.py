@@ -1,0 +1,80 @@
+"""Algorithm 1 (ACA) unit + property tests."""
+
+import numpy as np
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.core.aca import (AllocationRequest, aca_allocate, class_scores,
+                            select_cache_layers, select_hotspot_classes)
+
+F = 300
+
+
+def test_class_scores_eq10():
+    phi = np.array([10.0, 10.0, 10.0])
+    tau = np.array([0, F, 3 * F])
+    s = class_scores(phi, tau, F)
+    np.testing.assert_allclose(s, [10.0, 2.0, 10 * 0.2 ** 3])
+
+
+def test_hotspot_prefix_is_minimal():
+    scores = np.array([50.0, 30.0, 10.0, 6.0, 4.0])
+    hot = select_hotspot_classes(scores)           # 95% of 100 = 95
+    assert list(hot) == [0, 1, 2, 3]               # 50+30+10+6 = 96 >= 95
+    assert select_hotspot_classes(scores, 0.5).tolist() == [0]
+
+
+def test_layer_selection_respects_budget():
+    r = np.array([0.2, 0.5, 0.7, 0.9])            # CDF
+    ups = np.array([1.0, 0.7, 0.4, 0.1])
+    sizes = np.full(4, 100.0)
+    layers = select_cache_layers(hot_count=5, r_est=r, upsilon=ups,
+                                 entry_sizes=sizes, mem_budget=1200.0)
+    assert len(set(layers)) == len(layers)
+    assert len(layers) * 100 * 5 < 1200.0
+
+
+def test_layer_greedy_order():
+    """First pick maximises Υ·R; CDF subtraction devalues deeper layers."""
+    r = np.array([0.3, 0.6, 0.9])
+    ups = np.array([1.0, 0.8, 0.5])               # zeta = .3, .48, .45
+    layers = select_cache_layers(2, r, ups, np.full(3, 1.0), 1e9)
+    assert layers[0] == 1
+    # after picking 1: r -> [.3, 0, .3]; zeta = [.3, 0, .15] -> next 0
+    assert layers[1] == 0
+
+
+def test_zero_state_cold_start():
+    req = AllocationRequest(
+        phi_global=np.zeros(6), tau=np.zeros(6, int),
+        r_est=np.full(3, 0.3), upsilon=np.array([3.0, 2.0, 1.0]),
+        entry_sizes=np.full(3, 10.0), mem_budget=1000.0, round_frames=F)
+    x = aca_allocate(req)
+    assert x.shape == (3, 6)                      # no crash, well-formed
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 8), st.floats(10, 1e5),
+       st.integers(0, 2 ** 31 - 1))
+def test_aca_invariants(i_cls, n_layers, budget, seed):
+    rng = np.random.default_rng(seed)
+    req = AllocationRequest(
+        phi_global=rng.uniform(0, 100, i_cls),
+        tau=rng.integers(0, 5 * F, i_cls),
+        r_est=np.sort(rng.uniform(0, 1, n_layers)),   # CDF-ish
+        upsilon=np.sort(rng.uniform(0, 5, n_layers))[::-1],
+        entry_sizes=rng.uniform(1, 50, n_layers),
+        mem_budget=float(budget), round_frames=F)
+    x = aca_allocate(req)
+    assert x.shape == (n_layers, i_cls)
+    # rows are all-or-nothing over the hot-spot set
+    hot = x.any(axis=0)
+    for row in x:
+        assert (~row.any()) or (row == hot).all()
+    # byte budget respected (paper stops just before exceeding)
+    used = (x.sum(axis=1) * req.entry_sizes).sum()
+    assert used < budget or not x.any()
+    # hot-spot set covers >= 95% of total score (or is the top-1 fallback)
+    s = class_scores(req.phi_global, req.tau, F)
+    if x.any() and s.sum() > 0:
+        assert s[hot].sum() >= 0.95 * s.sum() - 1e-9

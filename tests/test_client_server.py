@@ -1,0 +1,124 @@
+"""Client/server protocol tests: τ/φ laws, Eq. (3) absorption, Eq. (4)/(5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.core.client import (AbsorptionConfig, init_client, make_upload,
+                               reset_round, run_round)
+from repro.core.semantic_cache import (CacheConfig, CacheTable, l2_normalize)
+from repro.core.server import ServerConfig, global_update, init_server
+
+I, L, D, F = 8, 4, 16, 30
+CFG = CacheConfig(num_classes=I, num_layers=L, sem_dim=D, theta=0.05)
+ABS = AbsorptionConfig()
+
+
+def full_table(key=0):
+    e = l2_normalize(jnp.abs(jax.random.normal(jax.random.PRNGKey(key), (L, I, D))))
+    return CacheTable(entries=e, class_mask=jnp.ones(I, bool),
+                      layer_mask=jnp.ones(L, bool))
+
+
+def random_round(key=0):
+    k = jax.random.PRNGKey(key)
+    sems = l2_normalize(jnp.abs(jax.random.normal(k, (F, L, D))))
+    logits = jax.random.normal(jax.random.fold_in(k, 1), (F, I)) * 4
+    return sems, logits
+
+
+def test_tau_closed_form_matches_sequential():
+    state = init_client(CFG)._replace(tau=jnp.full((I,), 5, jnp.int32))
+    sems, logits = random_round(3)
+    out = run_round(state, full_table(), sems, logits, CFG, ABS)
+    pred = np.asarray(out.pred)
+    tau_seq = np.full(I, 5, np.int64)
+    for c in pred:
+        tau_seq += 1
+        tau_seq[c] = 0
+    np.testing.assert_array_equal(np.asarray(out.state.tau), tau_seq)
+
+
+def test_phi_counts_predictions():
+    state = init_client(CFG)
+    sems, logits = random_round(4)
+    out = run_round(state, full_table(), sems, logits, CFG, ABS)
+    np.testing.assert_array_equal(
+        np.asarray(out.state.phi), np.bincount(np.asarray(out.pred), minlength=I))
+
+
+def test_absorbed_cells_unit_norm():
+    state = init_client(CFG)
+    sems, logits = random_round(5)
+    out = run_round(state, full_table(), sems, logits, CFG, ABS)
+    u = np.asarray(out.state.u)
+    touched = np.asarray(out.state.u_touched)
+    norms = np.linalg.norm(u[touched], axis=-1)
+    if norms.size:
+        np.testing.assert_allclose(norms, 1.0, rtol=1e-5)
+    assert np.all(np.linalg.norm(u[~touched], axis=-1) < 1e-9)
+
+
+def test_reset_round_preserves_tau():
+    state = init_client(CFG)._replace(tau=jnp.arange(I, dtype=jnp.int32))
+    sems, logits = random_round(6)
+    out = run_round(state, full_table(), sems, logits, CFG, ABS)
+    r = reset_round(out.state)
+    np.testing.assert_array_equal(np.asarray(r.tau), np.asarray(out.state.tau))
+    assert np.asarray(r.phi).sum() == 0
+    assert not np.asarray(r.u_touched).any()
+
+
+def _server():
+    e = l2_normalize(jnp.abs(jax.random.normal(jax.random.PRNGKey(9), (L, I, D))))
+    return init_server(CFG, e, jnp.full((I,), 10.0), jnp.full((L,), 0.3),
+                       jnp.linspace(1.0, 0.1, L))
+
+
+def test_global_update_eq4_eq5():
+    server = _server()
+    state = init_client(CFG)
+    sems, logits = random_round(7)
+    out = run_round(state, full_table(1), sems, logits, CFG, ABS)
+    up = make_upload(out.state)
+    new = global_update(server, up, ServerConfig())
+    # Eq. (5): frequencies accumulate
+    np.testing.assert_allclose(np.asarray(new.phi_global),
+                               np.asarray(server.phi_global)
+                               + np.asarray(up.phi, np.float32))
+    # merged entries unit norm; untouched entries unchanged
+    touched = np.asarray(up.u_touched)
+    e = np.asarray(new.entries)
+    if touched.any():
+        np.testing.assert_allclose(np.linalg.norm(e[touched], axis=-1), 1.0,
+                                   rtol=1e-5)
+    np.testing.assert_allclose(e[~touched],
+                               np.asarray(server.entries)[~touched], rtol=1e-6)
+    # Eq. (4) formula on one touched cell
+    if touched.any():
+        l, i = np.argwhere(touched)[0]
+        phi_l = float(np.asarray(up.phi)[i])
+        phi_g = float(np.asarray(server.phi_global)[i])
+        w_g = 0.99 * phi_g / (phi_g + phi_l)
+        w_l = phi_l / (phi_g + phi_l)
+        u = np.asarray(l2_normalize(up.u))[l, i]
+        manual = w_g * np.asarray(server.entries)[l, i] + w_l * u
+        manual /= np.linalg.norm(manual) + 1e-8
+        np.testing.assert_allclose(e[l, i], manual, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_round_outputs_well_formed(seed):
+    state = init_client(CFG)
+    sems, logits = random_round(seed)
+    out = run_round(state, full_table(seed % 7), sems, logits, CFG, ABS)
+    pred = np.asarray(out.pred)
+    exit_l = np.asarray(out.exit_layer)
+    hit = np.asarray(out.hit)
+    assert ((0 <= pred) & (pred < I)).all()
+    assert ((0 <= exit_l) & (exit_l <= L)).all()
+    assert (exit_l[~hit] == L).all()
+    assert (exit_l[hit] < L).all()

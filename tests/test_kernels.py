@@ -1,0 +1,155 @@
+"""Pallas kernels vs. pure-jnp oracles: shape × dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def k(i):
+    return jax.random.fold_in(KEY, i)
+
+
+# ---------------------------------------------------------------------------
+# cache_lookup
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,I,d", [(8, 20, 32), (37, 100, 64),
+                                   (130, 257, 256), (1, 5, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cache_lookup_sweep(B, I, d, dtype):
+    sem = jnp.abs(jax.random.normal(k(1), (B, d))).astype(dtype)
+    entries = jnp.abs(jax.random.normal(k(2), (I, d)))
+    entries = (entries / jnp.linalg.norm(entries, axis=1, keepdims=True))
+    mask = jax.random.bernoulli(k(3), 0.8, (I,))
+    mask = mask.at[0].set(True).at[min(1, I - 1)].set(True)
+    a_prev = jnp.where(mask, jax.random.uniform(k(4), (B, I)), -1e9)
+    a1, d1, p1 = ops.cache_lookup_layer(sem.astype(jnp.float32), entries,
+                                        mask, a_prev)
+    a2, d2, p2 = ref.cache_lookup_layer_ref(sem.astype(jnp.float32), entries,
+                                            mask, a_prev)
+    m = np.asarray(mask)
+    np.testing.assert_allclose(np.asarray(a1)[:, m], np.asarray(a2)[:, m],
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,hd", [(1, 128, 2, 64), (2, 200, 4, 64),
+                                      (1, 384, 2, 128), (2, 64, 1, 96)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(B, S, H, hd, causal):
+    q = jax.random.normal(k(5), (B, S, H, hd), jnp.float32)
+    kk = jax.random.normal(k(6), (B, S, H, hd), jnp.float32)
+    v = jax.random.normal(k(7), (B, S, H, hd), jnp.float32)
+    o1 = ops.flash_attention(q, kk, v, causal=causal)
+    o2 = ref.flash_attention_ref(q, kk, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_attention_gqa_expansion():
+    B, S, H, Hkv, hd = 2, 130, 8, 2, 64
+    q = jax.random.normal(k(8), (B, S, H, hd), jnp.float32)
+    kk = jax.random.normal(k(9), (B, S, Hkv, hd), jnp.float32)
+    v = jax.random.normal(k(10), (B, S, Hkv, hd), jnp.float32)
+    o1 = ops.flash_attention_gqa(q, kk, v)
+    o2 = ref.flash_attention_ref(q, jnp.repeat(kk, H // Hkv, 2),
+                                 jnp.repeat(v, H // Hkv, 2))
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    B, S, H, hd = 1, 256, 2, 64
+    q = jax.random.normal(k(11), (B, S, H, hd)).astype(jnp.bfloat16)
+    kk = jax.random.normal(k(12), (B, S, H, hd)).astype(jnp.bfloat16)
+    v = jax.random.normal(k(13), (B, S, H, hd)).astype(jnp.bfloat16)
+    o1 = ops.flash_attention(q, kk, v)
+    o2 = ref.flash_attention_ref(q.astype(jnp.float32), kk.astype(jnp.float32),
+                                 v.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(o1, dtype=np.float32),
+                               np.asarray(o2), rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (+ sharded partial combine)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,Hkv,hd,T", [(2, 4, 4, 64, 128), (3, 8, 2, 64, 300),
+                                          (1, 12, 4, 128, 64)])
+def test_decode_attention_sweep(B, H, Hkv, hd, T):
+    q = jax.random.normal(k(14), (B, H, hd), jnp.float32)
+    kc = jax.random.normal(k(15), (B, T, Hkv, hd), jnp.float32)
+    vc = jax.random.normal(k(16), (B, T, Hkv, hd), jnp.float32)
+    length = jax.random.randint(k(17), (B,), 1, T + 1)
+    o1 = ops.decode_attention(q, kc, vc, length)
+    rep = H // Hkv
+    o2 = ref.decode_attention_ref(q, jnp.repeat(kc, rep, 2),
+                                  jnp.repeat(vc, rep, 2), length)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_decode_partial_combine_matches_monolithic():
+    B, H, Hkv, hd, T = 2, 8, 2, 64, 256
+    q = jax.random.normal(k(18), (B, H, hd), jnp.float32)
+    kc = jax.random.normal(k(19), (B, T, Hkv, hd), jnp.float32)
+    vc = jax.random.normal(k(20), (B, T, Hkv, hd), jnp.float32)
+    length = jnp.array([200, 64], jnp.int32)
+    full = ops.decode_attention(q, kc, vc, length)
+    accs, ms, ls = [], [], []
+    for lo in range(0, T, 64):
+        a_, m_, l_ = ops.decode_attention(
+            q, kc[:, lo:lo + 64], vc[:, lo:lo + 64],
+            jnp.clip(length - lo, 0, 64), return_partial=True)
+        accs.append(a_), ms.append(m_), ls.append(l_)
+    merged = ops.combine_partials(accs, ms, ls)
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(full),
+                               rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [(1, 64, 2, 16, 8, 16),
+                                             (2, 256, 4, 32, 16, 64),
+                                             (1, 128, 1, 64, 128, 128)])
+def test_ssd_scan_sweep(B, S, H, P, N, chunk):
+    x = jax.random.normal(k(21), (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(k(22), (B, S, H)))
+    a = jnp.exp(-dt * jnp.exp(jax.random.normal(k(23), (H,)) * 0.3))
+    Bm = jax.random.normal(k(24), (B, S, N), jnp.float32)
+    Cm = jax.random.normal(k(25), (B, S, N), jnp.float32)
+    y1 = ops.ssd_scan(x, dt, a, Bm, Cm, chunk=chunk)
+    y2 = ref.ssd_scan_ref(x, dt, a, Bm, Cm, chunk=chunk)
+    y3 = ref.ssd_sequential_ref(x, dt, a, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y3),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_scan_state_continuity():
+    """Splitting a sequence across chunk boundaries must not change outputs —
+    proves the inter-chunk recurrence carries the state correctly."""
+    B, S, H, P, N = 1, 128, 2, 16, 8
+    x = jax.random.normal(k(26), (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(k(27), (B, S, H)))
+    a = jnp.exp(-dt * 0.5)
+    Bm = jax.random.normal(k(28), (B, S, N), jnp.float32)
+    Cm = jax.random.normal(k(29), (B, S, N), jnp.float32)
+    y_small = ops.ssd_scan(x, dt, a, Bm, Cm, chunk=16)
+    y_big = ops.ssd_scan(x, dt, a, Bm, Cm, chunk=64)
+    np.testing.assert_allclose(np.asarray(y_small), np.asarray(y_big),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,133 @@
+"""Unit + property tests for the Eq. (1)/(2) semantic-cache machinery."""
+
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.semantic_cache import (CacheConfig, CacheTable,
+                                       allocate_subtable, cosine_scores,
+                                       discriminative_score, l2_normalize,
+                                       lookup_all_layers, pool_semantic)
+
+I, L, D = 12, 5, 16
+
+
+def make_table(key=0, class_mask=None, layer_mask=None):
+    e = l2_normalize(jnp.abs(jax.random.normal(jax.random.PRNGKey(key),
+                                               (L, I, D))))
+    cm = jnp.ones((I,), bool) if class_mask is None else jnp.asarray(class_mask)
+    lm = jnp.ones((L,), bool) if layer_mask is None else jnp.asarray(layer_mask)
+    return CacheTable(entries=e, class_mask=cm, layer_mask=lm)
+
+
+def test_cosine_scores_unit_range():
+    t = make_table()
+    sem = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (7, D)))
+    c = cosine_scores(sem, t.entries[0], t.class_mask)
+    assert np.all(np.asarray(c) <= 1.0 + 1e-5)
+    assert np.all(np.asarray(c) >= -1.0 - 1e-5)
+
+
+def test_inactive_classes_never_win():
+    cm = np.zeros(I, bool)
+    cm[3] = cm[7] = True
+    t = make_table(class_mask=cm)
+    sem = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (20, L, D)))
+    cfg = CacheConfig(num_classes=I, num_layers=L, sem_dim=D, theta=0.0)
+    look = lookup_all_layers(t, sem, cfg)
+    assert set(np.asarray(look.pred)) <= {3, 7}
+
+
+def test_discriminative_score_exact():
+    a = jnp.asarray([[0.9, 0.6, 0.3], [0.5, 0.5, 0.1]])
+    d, pred = discriminative_score(a)
+    np.testing.assert_allclose(np.asarray(d)[0], (0.9 - 0.6) / 0.6, rtol=1e-6)
+    assert np.asarray(pred)[0] == 0
+    np.testing.assert_allclose(np.asarray(d)[1], 0.0, atol=1e-6)
+
+
+def test_exit_layer_is_first_hit():
+    t = make_table()
+    cfg = CacheConfig(num_classes=I, num_layers=L, sem_dim=D, theta=0.05)
+    sem = l2_normalize(jnp.abs(jax.random.normal(jax.random.PRNGKey(3),
+                                                 (50, L, D))))
+    look = lookup_all_layers(t, sem, cfg)
+    scores = np.asarray(look.scores)
+    exits = np.asarray(look.exit_layer)
+    hits = np.asarray(look.hit)
+    for b in range(50):
+        fired = np.where(scores[b] > cfg.theta)[0]
+        if hits[b]:
+            assert exits[b] == fired[0]
+        else:
+            assert len(fired) == 0 and exits[b] == L
+
+
+def test_theta_monotone_hits():
+    """Raising theta can only shrink the hit set."""
+    t = make_table()
+    sem = l2_normalize(jnp.abs(jax.random.normal(jax.random.PRNGKey(4),
+                                                 (64, L, D))))
+    prev = None
+    for theta in (0.01, 0.05, 0.1, 0.3):
+        cfg = CacheConfig(num_classes=I, num_layers=L, sem_dim=D, theta=theta)
+        hit = set(np.where(np.asarray(lookup_all_layers(t, sem, cfg).hit))[0])
+        if prev is not None:
+            assert hit <= prev
+        prev = hit
+
+
+def test_inactive_layer_transparent():
+    """A layer with layer_mask=False neither hits nor changes accumulation."""
+    lm = np.ones(L, bool)
+    lm[2] = False
+    t_full = make_table()
+    t_mask = CacheTable(t_full.entries, t_full.class_mask, jnp.asarray(lm))
+    cfg = CacheConfig(num_classes=I, num_layers=L, sem_dim=D, theta=1e9)
+    sem = l2_normalize(jnp.abs(jax.random.normal(jax.random.PRNGKey(5),
+                                                 (8, L, D))))
+    a_full = np.asarray(lookup_all_layers(t_full, sem, cfg).scores)
+    a_mask = np.asarray(lookup_all_layers(t_mask, sem, cfg).scores)
+    assert np.all(a_mask[:, 2] == 0.0)              # no score emitted
+    np.testing.assert_allclose(a_full[:, :2], a_mask[:, :2], rtol=1e-5)
+
+
+def test_allocate_subtable_masks():
+    x = np.zeros((L, I), bool)
+    x[1, [2, 5]] = True
+    x[3, [2, 5]] = True
+    t = allocate_subtable(make_table().entries, jnp.asarray(x))
+    assert np.asarray(t.layer_mask).tolist() == [False, True, False, True, False]
+    assert np.asarray(t.class_mask).sum() == 2
+
+
+@settings(max_examples=25, deadline=None)
+@given(hnp.arrays(np.float32, (4, 3, D), elements=st.floats(0.01, 5.0)))
+def test_pool_and_normalize_properties(x):
+    pooled = pool_semantic(jnp.asarray(x))
+    assert pooled.shape == (4, D)
+    n = l2_normalize(pooled)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(n), axis=-1), 1.0,
+                               rtol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.0, 0.9))
+def test_accumulation_matches_manual(seed, alpha):
+    t = make_table(seed % 100)
+    cfg = CacheConfig(num_classes=I, num_layers=L, sem_dim=D,
+                      alpha=float(alpha), theta=1e9)
+    sem = l2_normalize(jnp.abs(jax.random.normal(jax.random.PRNGKey(seed % 97),
+                                                 (3, L, D))))
+    look = lookup_all_layers(t, sem, cfg)
+    # manual Eq. (1) recurrence
+    a = np.zeros((3, I))
+    for j in range(L):
+        c = np.asarray(cosine_scores(sem[:, j], t.entries[j], t.class_mask))
+        a = c + alpha * a
+        np.testing.assert_allclose(np.asarray(look.acc)[:, j], a,
+                                   rtol=2e-4, atol=2e-4)

@@ -1,0 +1,117 @@
+"""KV quantization, SLO scheduler, adaptive thresholds."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.serving.kv_quant import (attention_over_quantized, dequantize,
+                                    kv_cache_bytes, quantize, quantize_kv)
+from repro.serving.scheduler import (EDFScheduler, Request, ThetaController)
+from repro.core.adaptive_thresholds import ThresholdTarget, pick_threshold
+
+
+# ---------------------------------------------------------------------------
+# int8 KV cache
+# ---------------------------------------------------------------------------
+
+def test_quantize_roundtrip_error():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 64, 4, 32)) * 3
+    q, s = quantize(x)
+    dq = dequantize(q, s, jnp.float32)
+    err = np.abs(np.asarray(dq) - np.asarray(x)).max(axis=-1)
+    bound = np.abs(np.asarray(x)).max(axis=-1) / 127.0
+    assert np.all(err <= bound + 1e-5)
+
+
+def test_quantized_decode_attention_close():
+    B, H, Hkv, hd, T = 2, 8, 2, 64, 96
+    q = jax.random.normal(jax.random.PRNGKey(1), (B, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(2), (B, T, Hkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, T, Hkv, hd))
+    length = jnp.asarray([T, 40])
+    valid = jnp.arange(T)[None, :] < length[:, None]
+    from repro.kernels.ref import decode_attention_ref
+    rep = H // Hkv
+    exact = decode_attention_ref(q, jnp.repeat(k, rep, 2),
+                                 jnp.repeat(v, rep, 2), length)
+    approx = attention_over_quantized(q, quantize_kv(k, v), valid)
+    err = np.abs(np.asarray(approx) - np.asarray(exact)).max()
+    assert err < 0.05, err                 # int8 drift bound (values ~N(0,1))
+
+
+def test_kv_bytes_halved():
+    assert kv_cache_bytes(1_000_000) < 0.52 * 1_000_000 + 10_000
+
+
+# ---------------------------------------------------------------------------
+# EDF scheduler + theta controller
+# ---------------------------------------------------------------------------
+
+def test_edf_meets_feasible_deadlines():
+    s = EDFScheduler(max_slots=2)
+    for i in range(4):
+        s.submit(Request(rid=i, arrival=0.0, blocks_needed=2,
+                         deadline=8.0))
+    s.drain()
+    st_ = s.stats()
+    assert st_.served == 4 and st_.missed == 0 and st_.shed == 0
+    assert st_.attainment == 1.0
+
+
+def test_edf_sheds_doomed_requests():
+    s = EDFScheduler(max_slots=1)
+    s.submit(Request(rid=0, arrival=0.0, blocks_needed=5, deadline=100.0))
+    s.submit(Request(rid=1, arrival=0.0, blocks_needed=10, deadline=3.0))
+    s.drain()
+    st_ = s.stats()
+    assert st_.shed == 1                  # the infeasible one never ran
+    assert st_.served == 1 and st_.missed == 0
+
+
+def test_theta_controller_directions():
+    c = ThetaController(theta=0.1, target=0.95)
+    low = c.update(0.5)
+    assert low < 0.1                      # SLO at risk -> permissive cache
+    c2 = ThetaController(theta=0.1, target=0.95)
+    high = c2.update(1.0)
+    assert high > 0.1                     # slack -> spend on accuracy
+    c3 = ThetaController(theta=0.1)
+    assert c3.update(0.95) == 0.1         # inside hysteresis band
+
+
+# ---------------------------------------------------------------------------
+# adaptive Γ/Δ
+# ---------------------------------------------------------------------------
+
+def test_pick_threshold_meets_accuracy_bar():
+    rng = np.random.default_rng(0)
+    scores = rng.uniform(0, 1, 500)
+    correct = rng.uniform(0, 1, 500) < scores      # higher score, more correct
+    t = pick_threshold(scores, correct)
+    sel = scores > t
+    assert sel.any()
+    assert correct[sel].mean() >= 0.97 - 1e-9
+
+
+def test_pick_threshold_refuses_garbage():
+    rng = np.random.default_rng(1)
+    scores = rng.uniform(0, 1, 300)
+    correct = rng.uniform(0, 1, 300) < 0.3         # uncorrelated, low quality
+    t = pick_threshold(scores, correct)
+    sel = scores > t
+    assert (not sel.any()) or correct[sel].mean() >= 0.97 - 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_pick_threshold_property(seed):
+    rng = np.random.default_rng(seed)
+    n = rng.integers(12, 200)
+    scores = rng.uniform(0, 1, n)
+    correct = rng.uniform(0, 1, n) < np.clip(scores * 1.2, 0, 1)
+    t = pick_threshold(scores, correct, ThresholdTarget(min_accuracy=0.9))
+    sel = scores > t
+    if sel.any():
+        assert correct[sel].mean() >= 0.9 - 1e-9

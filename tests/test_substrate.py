@@ -1,0 +1,233 @@
+"""Substrate tests: data generators, optimizer, batching simulator, serving
+engine plumbing, baselines."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.core import CacheConfig, calibrate
+from repro.data import (StreamConfig, dirichlet_client_priors, longtail_prior,
+                        make_tap_model, sample_class_sequence, synthesize_taps)
+from repro.serving.batching import BatchingConfig, simulate
+
+I, L, D = 10, 4, 16
+
+
+# ---------------------------------------------------------------------------
+# data generators
+# ---------------------------------------------------------------------------
+
+def test_dirichlet_priors(rng):
+    p = dirichlet_client_priors(rng, 5, I, 2.0)
+    np.testing.assert_allclose(p.sum(axis=1), 1.0, rtol=1e-9)
+    iid = dirichlet_client_priors(rng, 5, I, 0.0)
+    np.testing.assert_allclose(iid, 1.0 / I)
+
+
+def test_longtail_ratio():
+    pr = longtail_prior(100, rho=90.0)
+    assert pr.max() / pr.min() == pytest.approx(90.0, rel=1e-6)
+    top20 = np.sort(pr)[::-1][:20].sum()
+    assert 0.45 < top20 < 0.75          # paper: top 20% ~ 60% of mass
+
+
+def test_markov_stay_probability(rng):
+    seq = sample_class_sequence(rng, np.full(I, 1 / I), 5000, 0.9)
+    stays = (seq[1:] == seq[:-1]).mean()
+    assert 0.86 < stays < 0.94
+
+
+def test_taps_positive_orthant():
+    scfg = StreamConfig(num_classes=I, num_layers=L, sem_dim=D)
+    tm = make_tap_model(jax.random.PRNGKey(0), scfg)
+    sems, logits = synthesize_taps(jax.random.PRNGKey(1), tm,
+                                   jnp.arange(I), scfg)
+    assert (np.asarray(sems) >= 0).all()
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(sems), axis=-1),
+                               1.0, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    from repro.optim.adamw import AdamWConfig, apply_updates, init_state
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                      total_steps=200)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = init_state(params)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}            # d/dw ||w||^2
+        params, state = apply_updates(params, grads, state, cfg)
+    assert np.abs(np.asarray(params["w"])).max() < 0.1
+
+
+def test_adamw_schedule_shape():
+    from repro.optim.adamw import AdamWConfig, schedule
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    assert float(schedule(cfg, jnp.asarray(0))) == 0.0
+    assert float(schedule(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(schedule(cfg, jnp.asarray(100))) == pytest.approx(0.1)
+
+
+def test_grad_clipping():
+    from repro.optim.adamw import global_norm
+    g = {"a": jnp.full(4, 3.0), "b": jnp.full(9, 2.0)}
+    assert float(global_norm(g)) == pytest.approx(np.sqrt(4 * 9 + 9 * 4))
+
+
+# ---------------------------------------------------------------------------
+# microbatching equivalence
+# ---------------------------------------------------------------------------
+
+def test_microbatch_grad_accumulation_matches():
+    from repro.configs import get_config
+    from repro.launch.mesh import make_debug_mesh
+    from repro.models import init_params
+    from repro.optim.adamw import AdamWConfig, init_state
+    from repro.training.train_step import make_train_step
+
+    cfg = get_config("glm4-9b", smoke=True)
+    mesh = make_debug_mesh()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    outs = []
+    for mb in (1, 2):
+        step, *_ = make_train_step(cfg, AdamWConfig(), mesh,
+                                   num_microbatches=mb, global_batch=4)
+        with mesh:
+            p2, _, m = jax.jit(step)(params, init_state(params), batch)
+        outs.append((jax.tree.leaves(p2), float(m["loss"])))
+    for a, b in zip(outs[0][0], outs[1][0]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching simulator
+# ---------------------------------------------------------------------------
+
+def test_batching_no_cache_is_baseline():
+    cfg = BatchingConfig(num_blocks=10, max_slots=4, lookup_tick_fraction=0.0)
+    stats = simulate(np.full(40, 10), cfg)
+    assert stats.throughput_gain == pytest.approx(1.0, rel=0.05)
+
+
+def test_batching_early_exit_gains():
+    cfg = BatchingConfig(num_blocks=10, max_slots=4,
+                         lookup_tick_fraction=0.02)
+    stats = simulate(np.full(40, 2), cfg)         # everyone exits at block 2
+    assert stats.throughput_gain > 3.5
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(1, 8), min_size=4, max_size=60))
+def test_batching_gain_bounds(exits):
+    cfg = BatchingConfig(num_blocks=8, max_slots=4, lookup_tick_fraction=0.0)
+    stats = simulate(np.asarray(exits), cfg)
+    assert stats.throughput_gain <= 8.0 + 1e-6
+    assert stats.ticks >= max(exits)
+
+
+# ---------------------------------------------------------------------------
+# serving engine plumbing (CoCa lookup inside serve_step)
+# ---------------------------------------------------------------------------
+
+def test_serve_step_with_coca_table():
+    from repro.configs import get_config
+    from repro.core.semantic_cache import CacheTable, l2_normalize
+    from repro.launch.mesh import make_debug_mesh
+    from repro.models import init_params, prefill
+    from repro.serving.engine import (coca_cache_config, make_decode_step)
+
+    cfg = get_config("coca-ast", smoke=True)
+    mesh = make_debug_mesh()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B = 2
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, 8), 0,
+                                          cfg.vocab_size),
+             "frontend": jax.random.normal(jax.random.PRNGKey(2),
+                                           (B, cfg.frontend_len, cfg.d_model))}
+    _, caches, taps, _ = prefill(params, batch, cfg,
+                                 max_len=8 + cfg.frontend_len + 4)
+    cc = coca_cache_config(cfg)
+    table = CacheTable(
+        entries=l2_normalize(jnp.abs(jax.random.normal(
+            jax.random.PRNGKey(3), (cc.num_layers, cc.num_classes, cc.sem_dim)))),
+        class_mask=jnp.ones((cc.num_classes,), bool),
+        layer_mask=jnp.ones((cc.num_layers,), bool))
+    step, _ = make_decode_step(cfg, mesh, global_batch=B)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    with mesh:
+        out = jax.jit(step)(params, tok, caches, table)
+    assert out["next_token"].shape == (B,)
+    assert out["coca"].hit.shape == (B,)
+    assert out["coca"].scores.shape == (B, cc.num_layers)
+    assert "cls_logits" in out
+
+
+# ---------------------------------------------------------------------------
+# baselines
+# ---------------------------------------------------------------------------
+
+def _baseline_world():
+    scfg = StreamConfig(num_classes=I, num_layers=L, sem_dim=D)
+    tm = make_tap_model(jax.random.PRNGKey(0), scfg)
+    cm = calibrate(np.full(L + 1, 5.0), np.full(L, D), head_cost=1.0)
+    cfg = CacheConfig(num_classes=I, num_layers=L, sem_dim=D, theta=0.1)
+    rng = np.random.default_rng(0)
+    labels = sample_class_sequence(rng, np.full(I, 1 / I), 120, 0.9)
+    sems, logits = synthesize_taps(jax.random.PRNGKey(1), tm,
+                                   jnp.asarray(labels), scfg)
+    return cfg, cm, np.asarray(sems), np.asarray(logits), labels, tm
+
+
+def test_learned_cache_baseline():
+    from repro.core.baselines import LearnedCache
+    cfg, cm, sems, logits, labels, tm = _baseline_world()
+    lc = LearnedCache(cfg=cfg, cm=cm, exit_layers=[1, 3], margin=0.3)
+    lc.fit(sems, labels)
+    out = lc.round(sems, logits)
+    assert (out.pred >= 0).all() and out.latency.min() > 0
+    assert (out.pred == labels).mean() > 0.5
+
+
+def test_foggy_cache_baseline():
+    from repro.core.baselines import FoggyCache
+    cfg, cm, sems, logits, labels, tm = _baseline_world()
+    fc = FoggyCache(cfg=cfg, cm=cm, key_layer=L - 1)
+    out = fc.round(sems, logits)
+    out2 = fc.round(sems, logits)                  # warm cache: more hits
+    assert out2.hit.mean() >= out.hit.mean()
+    assert (out2.pred == labels).mean() > 0.5
+
+
+def test_smtm_baseline():
+    from repro.core.baselines import SMTM
+    cfg, cm, sems, logits, labels, tm = _baseline_world()
+    sm = SMTM(cfg=cfg, cm=cm, entries=np.asarray(tm.centroids),
+              round_frames=120)
+    out = sm.round(sems, logits)
+    model_acc = (np.argmax(logits, 1) == labels).mean()
+    assert (out.pred == labels).mean() > model_acc - 0.05
+    assert out.hit.mean() > 0.3
+    assert np.isfinite(out.latency).all()
+
+
+def test_policy_caches():
+    from repro.core.policies import PolicyCache, run_policy_round
+    cfg, cm, sems, logits, labels, tm = _baseline_world()
+    rng = np.random.default_rng(0)
+    for pol in ("lru", "fifo", "rand"):
+        caches = [PolicyCache(capacity=5, policy=pol) for _ in range(2)]
+        out = run_policy_round(caches, [1, 3], np.asarray(tm.centroids),
+                               sems, logits, cfg, cm, rng)
+        assert len(caches[0].classes) <= 5
+        assert np.isfinite(out.latency).all()

@@ -1,0 +1,112 @@
+"""End-to-end behaviour tests for the paper's system: the multi-client
+round-by-round protocol must reproduce the paper's headline phenomena on the
+synthetic stream world (the quantitative sweeps live in benchmarks/)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CacheConfig, SimulationConfig, bootstrap_server,
+                        calibrate, run_simulation)
+from repro.data import (StreamConfig, dirichlet_client_priors,
+                        make_client_context, make_tap_model,
+                        perturb_tap_model, sample_class_sequence,
+                        synthesize_taps)
+
+I, L, D, F = 20, 6, 32, 100
+
+
+@pytest.fixture(scope="module")
+def world():
+    scfg = StreamConfig(num_classes=I, num_layers=L, sem_dim=D)
+    tm = make_tap_model(jax.random.PRNGKey(0), scfg)
+    # the server's calibration set is domain-shifted vs. live client streams
+    tm_cal = perturb_tap_model(jax.random.PRNGKey(42), tm, 0.35)
+    cm = calibrate(np.full(L + 1, 5.0), np.full(L, D), head_cost=1.0)
+    shared = np.tile(np.arange(I), 30)
+
+    def tap_shared(lab):
+        return synthesize_taps(jax.random.PRNGKey(1), tm_cal,
+                               jnp.asarray(lab), scfg)
+    return scfg, tm, cm, shared, tap_shared
+
+
+def _run(world, rounds=6, clients=3, p=2.0, **sim_over):
+    scfg, tm, cm, shared, tap_shared = world
+    cfg = CacheConfig(num_classes=I, num_layers=L, sem_dim=D, theta=0.1)
+    sim = SimulationConfig(cache=cfg, round_frames=F, mem_budget=20_000.0,
+                           **sim_over)
+    server = bootstrap_server(jax.random.PRNGKey(0), sim, tap_shared, shared,
+                              cm)
+    rng = np.random.default_rng(0)
+    priors = dirichlet_client_priors(rng, clients, I, p)
+    labels = np.stack([np.stack([
+        sample_class_sequence(rng, priors[k], F, 0.9)
+        for k in range(clients)]) for _ in range(rounds)])
+    ctxs = [make_client_context(jax.random.PRNGKey(100 + k), scfg)
+            for k in range(clients)]
+    ctr = [0]
+
+    def tap_fn(r, k, lab):
+        ctr[0] += 1
+        return synthesize_taps(jax.random.PRNGKey(1000 + ctr[0]), tm,
+                               jnp.asarray(lab), scfg, context=ctxs[k])
+
+    return run_simulation(sim, server, tap_fn, labels, cm, rounds, clients), cm
+
+
+def test_latency_reduction_with_small_accuracy_loss(world):
+    """Headline claim: meaningful latency reduction, accuracy within 3 % of
+    Edge-Only (the full model on the same streams scores ~0.8)."""
+    res, cm = _run(world)
+    reduction = 1 - res.avg_latency / cm.full_latency()
+    assert reduction > 0.15, reduction
+    assert res.accuracy > 0.77, res.accuracy
+    assert res.hit_ratio > 0.4
+    assert res.hit_accuracy > 0.8
+
+
+def test_cache_warms_up_over_rounds(world):
+    """Global updates should drive per-round latency down over time."""
+    res, cm = _run(world, rounds=8)
+    first2 = res.per_round_latency[:2].mean()
+    last2 = res.per_round_latency[-2:].mean()
+    assert last2 < first2, (first2, last2)
+
+
+def test_gcu_ablation_improves_accuracy(world):
+    """Fig. 9: disabling global cache updates must not help accuracy."""
+    res_on, _ = _run(world)
+    res_off, _ = _run(world, global_updates=False)
+    assert res_on.accuracy >= res_off.accuracy - 0.02
+    assert res_on.hit_ratio >= res_off.hit_ratio - 0.02
+
+
+def test_dca_ablation_latency(world):
+    """Fig. 9: DCA respects the byte budget while matching (within 10 %) the
+    latency of a budget-violating static all-layer cache, and beats a poorly
+    chosen static subset.  (The full-scale Fig. 9 sweep where DCA's margin is
+    large lives in benchmarks/fig9_ablation.py.)"""
+    res_dca, cm = _run(world)
+    res_all, _ = _run(world, dynamic_allocation=False,
+                      static_layers=tuple(range(L)))
+    res_shallow, _ = _run(world, dynamic_allocation=False,
+                          static_layers=(0, 1))
+    assert res_dca.avg_latency <= res_all.avg_latency * 1.10
+    assert res_dca.avg_latency <= res_shallow.avg_latency * 1.02
+
+
+def test_straggler_rounds_do_not_break(world):
+    """A deadline that drops most uploads still yields a working system."""
+    res, cm = _run(world, straggler_deadline=1.0)   # everyone straggles
+    assert res.accuracy > 0.7
+    assert np.isfinite(res.avg_latency)
+
+
+def test_noniid_improves_cache_effect(world):
+    """Fig. 7: higher non-IID level -> lower steady-state latency."""
+    res_iid, cm = _run(world, p=0.0, rounds=8)
+    res_non, _ = _run(world, p=10.0, rounds=8)
+    assert (res_non.per_round_latency[-3:].mean()
+            <= res_iid.per_round_latency[-3:].mean() + 0.5)
