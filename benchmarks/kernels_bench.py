@@ -9,13 +9,17 @@ the harness.  TPU wall-time comes from the roofline terms instead.
 
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops, ref
+
+BENCH_LOOKUP_JSON = Path(__file__).resolve().parent / "BENCH_lookup.json"
 
 
 def _time(fn, *args, reps=3):
@@ -24,6 +28,48 @@ def _time(fn, *args, reps=3):
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / reps * 1e6   # us
+
+
+def _all_layer_sweep(quick: bool):
+    """Fused single-pallas_call all-layer lookup vs. the unfused lax.scan
+    reference, over a B×L×I grid.  Emits BENCH_lookup.json so the perf
+    trajectory is tracked from PR 1 on (interpret-mode caveat applies on
+    CPU: the emulated-kernel time is not TPU time; the stable signal is
+    the unfused-reference column and the op-count reduction)."""
+    from repro.core.semantic_cache import (CacheConfig, CacheTable,
+                                           l2_normalize, lookup_all_layers,
+                                           lookup_all_layers_ref)
+    from repro.kernels.cache_lookup import default_interpret
+
+    grid = ([(64, 6, 64, 32)] if quick
+            else [(128, 6, 128, 64), (128, 12, 256, 64),
+                  (256, 24, 256, 64), (256, 24, 512, 128)])
+    records, rows = [], []
+    for B, L, I, d in grid:
+        k = jax.random.PRNGKey(L * 1000 + I)
+        entries = l2_normalize(jnp.abs(jax.random.normal(k, (L, I, d))))
+        table = CacheTable(entries, jnp.ones(I, bool), jnp.ones(L, bool))
+        sems = jnp.abs(jax.random.normal(jax.random.fold_in(k, 1), (B, L, d)))
+        cfg = CacheConfig(num_classes=I, num_layers=L, sem_dim=d, theta=0.05)
+        # jit both closures so padding/dispatch glue is compiled on each side
+        fused_jit = jax.jit(lambda s: lookup_all_layers(table, s, cfg,
+                                                        impl="fused"))
+        ref_jit = jax.jit(lambda s: lookup_all_layers_ref(table, s, cfg))
+        t_fused = _time(fused_jit, sems)
+        t_ref = _time(ref_jit, sems)
+        rec = {"B": B, "L": L, "I": I, "d": d,
+               "fused_us": round(t_fused, 1), "unfused_us": round(t_ref, 1),
+               "speedup": round(t_ref / max(t_fused, 1e-9), 3),
+               "backend": jax.default_backend(),
+               "interpret": default_interpret()}
+        records.append(rec)
+        rows.append((f"kernels/cache_lookup_all_layers_B{B}_L{L}_I{I}",
+                     t_fused, f"unfused_us={t_ref:.0f};"
+                              f"speedup={rec['speedup']:.2f}"))
+    BENCH_LOOKUP_JSON.write_text(json.dumps(
+        {"benchmark": "all_layer_cache_lookup_fused_vs_unfused",
+         "records": records}, indent=2) + "\n")
+    return rows
 
 
 def run(quick: bool = False):
@@ -42,6 +88,7 @@ def run(quick: bool = False):
                   mask, a_prev)
     rows.append(("kernels/cache_lookup_fused", t_kernel,
                  f"interpret_mode=1;ref_us={t_ref:.0f}"))
+    rows.extend(_all_layer_sweep(quick))
 
     S = 128 if quick else 256
     q = jax.random.normal(jax.random.fold_in(k, 2), (1, S, 2, 64))

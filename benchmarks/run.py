@@ -33,8 +33,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sweeps (slow)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CPU-friendly quick profile (the default)")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
+    if args.full and args.quick:
+        ap.error("--full and --quick are mutually exclusive")
 
     print("name,us_per_call,derived")
     failures = 0

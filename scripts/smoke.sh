@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Smoke gate: tier-1 tests + the quick benchmark profile.
+# Usage: scripts/smoke.sh  (from the repo root)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -q
+
+echo "== quick benchmarks =="
+python -m benchmarks.run --quick

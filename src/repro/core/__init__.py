@@ -2,7 +2,7 @@
 from repro.core.semantic_cache import (  # noqa: F401
     CacheConfig, CacheTable, LookupResult, allocate_subtable, cosine_scores,
     discriminative_score, empty_table, l2_normalize, lookup_all_layers,
-    pool_semantic,
+    lookup_all_layers_ref, pool_semantic,
 )
 from repro.core.client import (  # noqa: F401
     AbsorptionConfig, ClientState, ClientUpload, RoundOutput, init_client,
@@ -19,4 +19,5 @@ from repro.core.aca import (  # noqa: F401
 from repro.core.cost_model import CostModel, calibrate, frame_latency  # noqa: F401
 from repro.core.simulation import (  # noqa: F401
     SimulationConfig, SimulationResult, bootstrap_server, run_simulation,
+    run_simulation_reference,
 )

@@ -89,6 +89,11 @@ def _absorb_scan(u0: jax.Array, touched0: jax.Array, sems: jax.Array,
     ``sems``      — (F, L, d) tap vectors per frame,
     ``classes``   — (F,) absorbed class per frame (−1 = not absorbed),
     ``layer_sel`` — (F, L) bool, which layers this frame contributes to.
+
+    A frame only ever touches the (L, d) column of its absorbed class, so
+    each scan step gathers that one column, normalises it, and scatters it
+    back — O(F·L·d) instead of the dense O(F·L·I·d)
+    normalise-the-whole-table update.
     """
     I = u0.shape[1]
 
@@ -96,11 +101,17 @@ def _absorb_scan(u0: jax.Array, touched0: jax.Array, sems: jax.Array,
         u, touched = carry
         sem_f, cls_f, lay_f = inp
         valid = cls_f >= 0
-        onehot = (jax.nn.one_hot(cls_f, I, dtype=bool) & valid)      # (I,)
-        cell = lay_f[:, None] & onehot[None, :]                       # (L, I)
-        upd = l2_normalize(sem_f[:, None, :] + beta * u)              # (L, I, d)
-        u = jnp.where(cell[..., None], upd, u)
-        touched = touched | cell
+        idx = jnp.clip(cls_f, 0, I - 1)
+        u_col = jax.lax.dynamic_index_in_dim(u, idx, axis=1,
+                                             keepdims=False)          # (L, d)
+        upd = l2_normalize(sem_f + beta * u_col)                      # (L, d)
+        write = lay_f & valid                                         # (L,)
+        new_col = jnp.where(write[:, None], upd, u_col)
+        u = jax.lax.dynamic_update_index_in_dim(u, new_col, idx, axis=1)
+        t_col = jax.lax.dynamic_index_in_dim(touched, idx, axis=1,
+                                             keepdims=False)          # (L,)
+        touched = jax.lax.dynamic_update_index_in_dim(
+            touched, t_col | write, idx, axis=1)
         return (u, touched), None
 
     (u, touched), _ = jax.lax.scan(step, (u0, touched0), (sems, classes, layer_sel))
@@ -162,8 +173,12 @@ def run_round(state: ClientState, table: CacheTable, sems: jax.Array,
 
     new_state = ClientState(tau=tau, phi=phi, u=u, u_touched=touched,
                             hit_counts=hit_counts, lookup_counts=lookup_counts)
+    # Drop the (F, L, I) accumulator from the carried result: nothing after
+    # the round reads it, and keeping it live would force the unfused ref
+    # path to materialise it in HBM (XLA DCEs it once unreferenced).
     return RoundOutput(state=new_state, pred=pred, hit=look.hit,
-                       exit_layer=look.exit_layer, lookup=look)
+                       exit_layer=look.exit_layer,
+                       lookup=look._replace(acc=None))
 
 
 class ClientUpload(NamedTuple):

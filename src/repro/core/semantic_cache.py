@@ -9,9 +9,11 @@ with decay ``alpha`` (Eq. 1) and exits early when the discriminative score of
 the top-2 classes clears ``theta`` (Eq. 2).
 
 Everything here is pure ``jnp`` and jit/vmap-safe.  The batched
-``lookup_all_layers`` is the oracle used by the round simulator and the
-reference implementation for the fused Pallas kernel
-(:mod:`repro.kernels.cache_lookup`).
+``lookup_all_layers`` is the oracle used by the round simulator; it
+dispatches between the fused single-``pallas_call`` kernel
+(:mod:`repro.kernels.cache_lookup`) on TPU backends and the unfused
+``lax.scan`` reference ``lookup_all_layers_ref`` (also the kernel's
+bit-parity oracle) elsewhere.
 """
 
 from __future__ import annotations
@@ -151,24 +153,32 @@ class LookupResult(NamedTuple):
     ``exit_layer`` — (B,) int32, first hitting layer index, or L if no hit.
     ``pred``       — (B,) int32, class at exit (valid where hit).
     ``scores``     — (B, L) float32, D_j at every layer (0 where inactive).
-    ``acc``        — (B, L, I) accumulated similarities (for absorption rules).
+    ``acc``        — (B, L, I) accumulated similarities (for absorption
+                     rules).  ``None`` on the fused-kernel path, which by
+                     design never materialises this tensor.
     """
 
     hit: jax.Array
     exit_layer: jax.Array
     pred: jax.Array
     scores: jax.Array
-    acc: jax.Array
+    acc: jax.Array | None
 
 
-def lookup_all_layers(table: CacheTable, sems: jax.Array, cfg: CacheConfig) -> LookupResult:
-    """Run Eq. (1)/(2) across all L layers for a batch of tap vectors.
+def lookup_all_layers_ref(table: CacheTable, sems: jax.Array,
+                          cfg: CacheConfig) -> LookupResult:
+    """Unfused ``lax.scan`` reference for Eq. (1)/(2) across all L layers.
 
     ``sems`` — (B, L, d) pooled semantic vectors at every cache layer.
 
     Inactive layers are transparent: they neither accumulate (the paper only
     performs lookups at activated layers) nor can they hit.  The *first*
     hitting active layer is the exit layer; its top-1 class is the result.
+
+    This is the bit-parity oracle for the fused Pallas kernel
+    (:func:`repro.kernels.cache_lookup.cache_lookup_all_layers`) and the
+    CPU fallback; it is also the only path that materialises the full
+    ``(B, L, I)`` accumulator (``acc``).
     """
     B = sems.shape[0]
     a0 = jnp.where(table.class_mask, 0.0, NEG) * jnp.ones((B, cfg.num_classes))
@@ -198,6 +208,41 @@ def lookup_all_layers(table: CacheTable, sems: jax.Array, cfg: CacheConfig) -> L
         preds, jnp.minimum(exit_layer, cfg.num_layers - 1)[:, None], axis=1)[:, 0]
     return LookupResult(hit=hit, exit_layer=exit_layer, pred=pred,
                         scores=scores, acc=accs)
+
+
+def lookup_all_layers(table: CacheTable, sems: jax.Array, cfg: CacheConfig,
+                      *, impl: str = "auto") -> LookupResult:
+    """Run Eq. (1)/(2) across all L layers for a batch of tap vectors.
+
+    Dispatches between the fused single-``pallas_call`` kernel
+    (:func:`repro.kernels.cache_lookup.cache_lookup_all_layers`) and the
+    unfused ``jnp`` reference (:func:`lookup_all_layers_ref`).
+
+    ``impl`` — ``"auto"`` (fused on a TPU backend, reference otherwise —
+    interpret-mode emulation of the kernel is far slower than XLA on CPU),
+    ``"fused"`` (force the kernel; interpret mode is still auto-detected
+    inside it), or ``"ref"``.
+
+    The fused path returns ``acc=None`` — it never materialises the
+    ``(B, L, I)`` accumulator; callers needing ``acc`` must ask for
+    ``impl="ref"``.
+    """
+    if impl == "auto":
+        impl = "fused" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return lookup_all_layers_ref(table, sems, cfg)
+    if impl != "fused":
+        raise ValueError(f"unknown lookup impl: {impl!r}")
+
+    from repro.kernels.cache_lookup import cache_lookup_all_layers
+    scores, preds, exit_layer = cache_lookup_all_layers(
+        sems, table.entries, table.class_mask, table.layer_mask,
+        cfg.theta_vec(), alpha=cfg.alpha)
+    hit = exit_layer < cfg.num_layers
+    pred = jnp.take_along_axis(
+        preds, jnp.minimum(exit_layer, cfg.num_layers - 1)[:, None], axis=1)[:, 0]
+    return LookupResult(hit=hit, exit_layer=exit_layer, pred=pred,
+                        scores=scores, acc=None)
 
 
 def allocate_subtable(global_entries: jax.Array, x: jax.Array) -> CacheTable:

@@ -54,14 +54,17 @@ def init_server(cfg: CacheConfig, init_entries: jax.Array,
     )
 
 
-@partial(jax.jit, static_argnames=("scfg",))
-def global_update(server: ServerState, up: ClientUpload,
-                  scfg: ServerConfig) -> ServerState:
+def global_update_body(server: ServerState, up: ClientUpload,
+                       scfg: ServerConfig) -> ServerState:
     """Apply one client's upload: Eq. (4) cache merge + Eq. (5) frequencies.
 
     Only cells the client actually absorbed into (``u_touched``) are merged —
     an untouched cell carries no new information (and Eq. (4) with φ=0 is a
     no-op after re-normalisation anyway).
+
+    Unjitted body so the round simulator can fold the per-client merges of a
+    whole round into one ``lax.scan`` (:mod:`repro.core.simulation`); call
+    :func:`global_update` for the standalone jitted version.
     """
     phi_l = up.phi.astype(jnp.float32)                     # (I,)
     phi_g = server.phi_global                              # (I,)
@@ -84,6 +87,9 @@ def global_update(server: ServerState, up: ClientUpload,
 
     return ServerState(entries=entries, phi_global=phi_global,
                        r_est=r_est, upsilon=server.upsilon)
+
+
+global_update = partial(jax.jit, static_argnames=("scfg",))(global_update_body)
 
 
 def profile_initial_cache(sems: jax.Array, labels: jax.Array,

@@ -1,21 +1,33 @@
 """Multi-client round-by-round CoCa driver (§IV.A workflow, Fig. 3).
 
-Per round, for every client:  (1) the server runs ACA on the client's status
-(τ, Φ, R, Υ, Π) and ships a personalised sub-table of the global cache;
-(2) the client runs F frames against the fixed cache, collecting (τ, φ, U) and
-per-layer hit statistics;  (3) the server merges the upload (Eq. 4/5) and
-refreshes its hit-ratio estimate.  Ablation switches reproduce Fig. 9:
-``dynamic_allocation=False`` (DCA off) freezes a static allocation;
-``global_updates=False`` (GCU off) skips Eq. 4.  ``straggler_deadline``
-emulates the fault-tolerance story: a client whose (simulated) round latency
-exceeds the deadline has its upload dropped that round — the protocol is
-stateless across rounds on the server side, so stragglers only cost freshness,
-never correctness.
+Per round:  (1) the server runs ACA on every client's status (τ, Φ, R, Υ, Π)
+against the round-start global state and ships personalised sub-tables of the
+global cache;  (2) the clients run F frames each against their fixed caches —
+**concurrently**, exactly as in the paper's deployment — collecting (τ, φ, U)
+and per-layer hit statistics;  (3) the server merges the uploads in client
+order (Eq. 4/5, order-sensitive) and refreshes its hit-ratio estimate.
+
+The engine is vectorised: ``run_round`` is ``vmap``-ed across clients, the
+per-client Eq.-4/5 merges of a round are folded into one ``lax.scan`` (which
+preserves their sequential semantics), and the whole round is a single jitted
+computation.  Host↔device traffic is one bundled ``device_get`` per round:
+the previous round's metrics come back together with the status vectors the
+ACA allocator needs for the next round.  ``run_simulation_reference`` keeps
+the plain per-client Python loop (same round-boundary semantics) as the
+parity oracle.
+
+Ablation switches reproduce Fig. 9:  ``dynamic_allocation=False`` (DCA off)
+freezes a static allocation;  ``global_updates=False`` (GCU off) skips Eq. 4.
+``straggler_deadline`` emulates the fault-tolerance story: a client whose
+(simulated) round latency exceeds the deadline has its upload dropped that
+round — the protocol is stateless across rounds on the server side, so
+stragglers only cost freshness, never correctness.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Callable, NamedTuple
 
 import jax
@@ -29,7 +41,7 @@ from repro.core.cost_model import CostModel, frame_latency
 from repro.core.semantic_cache import (CacheConfig, CacheTable,
                                        allocate_subtable, empty_table)
 from repro.core.server import (ServerConfig, ServerState, global_update,
-                               init_server)
+                               global_update_body, init_server)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,21 +81,19 @@ class SimulationResult(NamedTuple):
 TapFn = Callable[[int, int, np.ndarray], tuple[jax.Array, jax.Array]]
 
 
-def _allocate(sim: SimulationConfig, server: ServerState, client: ClientState,
-              cm: CostModel) -> CacheTable:
+def _allocate_from_status(sim: SimulationConfig, phi_global: np.ndarray,
+                          tau: np.ndarray, r_est: np.ndarray,
+                          upsilon: np.ndarray, entries: jax.Array,
+                          cm: CostModel) -> CacheTable:
+    """Host-side ACA allocation from already-fetched status vectors."""
     if sim.dynamic_allocation:
         req = aca_mod.AllocationRequest(
-            phi_global=np.asarray(server.phi_global),
-            tau=np.asarray(client.tau),
-            r_est=np.asarray(server.r_est),
-            upsilon=np.asarray(server.upsilon),
-            entry_sizes=cm.entry_sizes(),
-            mem_budget=sim.mem_budget,
+            phi_global=phi_global, tau=tau, r_est=r_est, upsilon=upsilon,
+            entry_sizes=cm.entry_sizes(), mem_budget=sim.mem_budget,
             round_frames=sim.round_frames)
         x = aca_mod.aca_allocate(req)
     else:
-        scores = aca_mod.class_scores(np.asarray(server.phi_global),
-                                      np.asarray(client.tau), sim.round_frames)
+        scores = aca_mod.class_scores(phi_global, tau, sim.round_frames)
         hot = aca_mod.select_hotspot_classes(scores)
         # memory-fair static baseline (§VI.G: same total memory as ACA):
         # truncate the hot set so the fixed layers fit the byte budget
@@ -92,16 +102,155 @@ def _allocate(sim: SimulationConfig, server: ServerState, client: ClientState,
         max_classes = max(int(sim.mem_budget // per_class), 1)
         x = aca_mod.fixed_allocate(hot[:max_classes], list(sim.static_layers),
                                    sim.cache.num_layers, sim.cache.num_classes)
-    return allocate_subtable(server.entries, jnp.asarray(x))
+    return allocate_subtable(entries, jnp.asarray(x))
+
+
+def _allocate(sim: SimulationConfig, server: ServerState, client: ClientState,
+              cm: CostModel) -> CacheTable:
+    return _allocate_from_status(
+        sim, np.asarray(server.phi_global), np.asarray(client.tau),
+        np.asarray(server.r_est), np.asarray(server.upsilon),
+        server.entries, cm)
+
+
+def _stack_tables(tables: list[CacheTable]) -> CacheTable:
+    return CacheTable(*(jnp.stack(leaf) for leaf in zip(*tables)))
+
+
+def _init_clients_batched(cfg: CacheConfig, num_clients: int) -> ClientState:
+    one = init_client(cfg)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (num_clients,) + x.shape), one)
+
+
+@partial(jax.jit, static_argnames=("cfg", "absorb", "scfg", "cm",
+                                   "global_updates", "deadline"))
+def _round_step(states: ClientState, tables: CacheTable, sems: jax.Array,
+                logits: jax.Array, labels: jax.Array, server: ServerState,
+                *, cfg: CacheConfig, absorb: AbsorptionConfig,
+                scfg: ServerConfig, cm: CostModel, global_updates: bool,
+                deadline: float | None):
+    """One full round for all K clients as a single device computation.
+
+    ``states``/``tables``/``sems``/``logits``/``labels`` carry a leading
+    client axis K.  Returns (new states, new server, metrics dict); nothing
+    here forces a host sync.
+    """
+    L = cfg.num_layers
+    states = reset_round(states)                     # elementwise, vmap-free
+
+    out = jax.vmap(lambda s, t, se, lo: run_round(s, t, se, lo, cfg, absorb))(
+        states, tables, sems, logits)
+
+    n_hot = tables.class_mask.sum(axis=1)                          # (K,)
+    lat = jax.vmap(lambda e, lm, nh: frame_latency(cm, e, lm, nh))(
+        out.exit_layer, tables.layer_mask, n_hot)                  # (K, F)
+    lat_per_client = lat.sum(axis=1)                               # (K,)
+
+    correct_mask = out.pred == labels                              # (K, F)
+    metrics = {
+        "lat_sum": lat.sum(),
+        "correct": correct_mask.sum(),
+        "hits": out.hit.sum(),
+        "hit_correct": (correct_mask & out.hit).sum(),
+        "exit_hist": jnp.zeros((L + 1,), jnp.int32)
+                        .at[out.exit_layer.ravel()].add(1),
+    }
+
+    if global_updates:
+        if deadline is None:
+            include = jnp.ones(lat_per_client.shape, bool)
+        else:
+            include = lat_per_client <= deadline
+        uploads = make_upload(out.state)             # leading K axis on leaves
+
+        def merge(srv, inp):
+            up, inc = inp
+            new = global_update_body(srv, up, scfg)
+            srv = jax.tree_util.tree_map(
+                lambda n, o: jnp.where(inc, n, o), new, srv)
+            return srv, None
+
+        server, _ = jax.lax.scan(merge, server, (uploads, include))
+
+    return out.state, server, metrics
 
 
 def run_simulation(sim: SimulationConfig, server: ServerState,
                    tap_fn: TapFn, labels_per_round: np.ndarray,
                    cost_model: CostModel, num_rounds: int,
                    num_clients: int) -> SimulationResult:
-    """Drive ``num_rounds`` rounds over ``num_clients`` clients.
+    """Drive ``num_rounds`` rounds over ``num_clients`` clients (vectorised).
 
     ``labels_per_round`` — (rounds, clients, F) ground-truth class streams.
+
+    Per round the only host↔device round-trip is one bundled ``device_get``
+    of (round metrics, Φ, R, client τ) — the ACA allocator's inputs for the
+    next round ride along with the metrics of the round that just finished.
+    """
+    K = num_clients
+    L = sim.cache.num_layers
+    states = _init_clients_batched(sim.cache, K)
+
+    lat_sum = np.zeros(num_rounds)
+    frames = np.zeros(num_rounds, np.int64)
+    correct = np.zeros(num_rounds, np.int64)
+    hits = hit_cor = 0
+    exit_hist = np.zeros(L + 1, np.int64)
+
+    # Initial status pull (pre-loop; not a per-round sync).
+    host_ups = np.asarray(server.upsilon)
+    host_phi, host_r, host_tau = jax.device_get(
+        (server.phi_global, server.r_est, states.tau))
+
+    for r in range(num_rounds):
+        tables = _stack_tables([
+            _allocate_from_status(sim, host_phi, host_tau[k], host_r,
+                                  host_ups, server.entries, cost_model)
+            for k in range(K)])
+        taps = [tap_fn(r, k, labels_per_round[r, k]) for k in range(K)]
+        sems = jnp.stack([t[0] for t in taps])
+        logits = jnp.stack([t[1] for t in taps])
+        labels = jnp.asarray(labels_per_round[r])
+
+        states, server, metrics = _round_step(
+            states, tables, sems, logits, labels, server,
+            cfg=sim.cache, absorb=sim.absorb, scfg=sim.server, cm=cost_model,
+            global_updates=sim.global_updates,
+            deadline=sim.straggler_deadline)
+
+        # The single device→host transfer of the round.
+        m, host_phi, host_r, host_tau = jax.device_get(
+            (metrics, server.phi_global, server.r_est, states.tau))
+
+        lat_sum[r] = float(m["lat_sum"])
+        frames[r] = K * labels_per_round.shape[2]
+        correct[r] = int(m["correct"])
+        hits += int(m["hits"])
+        hit_cor += int(m["hit_correct"])
+        exit_hist += m["exit_hist"].astype(np.int64)
+
+    total_f = int(frames.sum())
+    return SimulationResult(
+        avg_latency=float(lat_sum.sum() / total_f),
+        accuracy=float(correct.sum() / total_f),
+        hit_ratio=hits / total_f,
+        hit_accuracy=hit_cor / max(hits, 1),
+        per_round_latency=lat_sum / np.maximum(frames, 1),
+        per_round_accuracy=correct / np.maximum(frames, 1),
+        exit_histogram=exit_hist,
+        server=server)
+
+
+def run_simulation_reference(sim: SimulationConfig, server: ServerState,
+                             tap_fn: TapFn, labels_per_round: np.ndarray,
+                             cost_model: CostModel, num_rounds: int,
+                             num_clients: int) -> SimulationResult:
+    """Per-client Python-loop driver — the parity oracle for the vectorised
+    engine.  Same round semantics (round-start allocation for every client,
+    Eq.-4/5 merges applied in client order at the round boundary, matching
+    the paper's concurrent-clients workflow); one host sync per client per
+    stage instead of one per round.
     """
     clients = [init_client(sim.cache) for _ in range(num_clients)]
     lat_sum = np.zeros(num_rounds)
@@ -111,8 +260,11 @@ def run_simulation(sim: SimulationConfig, server: ServerState,
     exit_hist = np.zeros(sim.cache.num_layers + 1, np.int64)
 
     for r in range(num_rounds):
+        tables = [_allocate(sim, server, clients[k], cost_model)
+                  for k in range(num_clients)]
+        include = []
         for k in range(num_clients):
-            table = _allocate(sim, server, clients[k], cost_model)
+            table = tables[k]
             labels = labels_per_round[r, k]
             sems, logits = tap_fn(r, k, labels)
             state = reset_round(clients[k])
@@ -120,7 +272,8 @@ def run_simulation(sim: SimulationConfig, server: ServerState,
             clients[k] = out.state
 
             n_hot = table.class_mask.sum()
-            lat = frame_latency(cost_model, out.exit_layer, table.layer_mask, n_hot)
+            lat = frame_latency(cost_model, out.exit_layer, table.layer_mask,
+                                n_hot)
             lat_np = np.asarray(lat)
             pred = np.asarray(out.pred)
             hit = np.asarray(out.hit)
@@ -135,8 +288,11 @@ def run_simulation(sim: SimulationConfig, server: ServerState,
 
             straggled = (sim.straggler_deadline is not None
                          and lat_np.sum() > sim.straggler_deadline)
-            if sim.global_updates and not straggled:
-                server = global_update(server, make_upload(clients[k]), sim.server)
+            include.append(sim.global_updates and not straggled)
+        for k in range(num_clients):
+            if include[k]:
+                server = global_update(server, make_upload(clients[k]),
+                                       sim.server)
 
     total_f = int(frames.sum())
     return SimulationResult(

@@ -1,20 +1,53 @@
-"""Fused semantic-cache lookup kernel (the paper's hot spot, §III.1).
+"""Fused semantic-cache lookup kernels (the paper's hot spot, §III.1).
 
-One tap-layer lookup, fused end-to-end in VMEM:
+Two kernels live here:
 
-    sem_n = sem / ||sem||                       (pooled tap vector)
-    C     = sem_n @ entriesᵀ  (masked)          (cosine scores — MXU matmul)
-    A     = C + α·A_prev      (masked)          (Eq. 1 accumulation)
-    top-2 over classes        (running across class tiles, VREG-resident)
-    D     = (A₁ − A₂)/A₂                        (Eq. 2 discriminative score)
+``cache_lookup_layer`` — one tap-layer lookup, fused end-to-end in VMEM
+(kept for incremental/streaming callers and as the original reference
+kernel).
 
-The paper measures the *unfused* lookup bill at 56 % of a no-cache forward; on
-TPU the win comes from never spilling C/A to HBM between the five stages and
-feeding the MXU one (B_tile × d) · (d × I_tile) matmul per class tile.
+``cache_lookup_all_layers`` — the full Eq. (1)/(2) pipeline for **all L
+cache layers in a single ``pallas_call``**.  This is what the round
+simulator dispatches to (:func:`repro.core.semantic_cache.lookup_all_layers`).
 
-Tiling: grid = (B/B_TILE, I/I_TILE), class tiles innermost so the running
-top-2 scratch persists per batch tile (flash-attention-style accumulation).
-Entries arrive L2-normalised (the cache stores unit rows, Eq. 3/4).
+    for j in 0..L-1:                      # unrolled inside the kernel
+        sem_n = sem_j / ||sem_j||                     (VPU)
+        for t in class tiles:                         # unrolled inside
+            C_t   = sem_n @ entries[j, t]ᵀ            (MXU matmul)
+            A_t   = C_t + α·A_prev_t  (masked)        (Eq. 1)
+            merge running top-2 / argmax              (VREG-resident)
+        D_j   = (A₁ − A₂)/A₂                          (Eq. 2)
+        hit_j = active_j ∧ D_j > Θ_j  →  first-hit exit layer
+
+Design / tiling (recorded per the PR-1 plan):
+
+* **Grid = batch tiles only** ``(⌈B/B_TILE⌉,)``.  Layers and class tiles
+  are iterated *inside* the kernel body so the Eq.-1 accumulator ``A``
+  (``(B_TILE, I_pad)`` f32 scratch), the normalised tap vector, and the
+  running top-2/argmax state all stay **VMEM-resident for the whole
+  L-layer sweep** — the ``(B, L, I)`` accumulator tensor that the unfused
+  ``lax.scan`` round-trips through HBM on every round is never
+  materialised.  Only ``(B, L)`` scores, ``(B, L)`` per-layer argmax
+  classes, and the ``(B,)`` first-hit exit layer leave the kernel.
+* **VMEM budget**: entries ``(L, I_pad, d)`` + accumulator
+  ``(B_TILE, I_pad)`` + taps ``(B_TILE, L, d)``.  At paper scale
+  (L=24, I≤1024, d=64, B_TILE=128) that is ≈6.5 MB < the ~16 MB/core
+  budget.  Very large ``L·I·d`` tables need an extra class-tile grid
+  dimension with the accumulator revisited per tile — left to the
+  sharding PR (see ROADMAP "Open items").
+* Class tiles are ``I_TILE = 128`` wide (MXU-lane aligned); ``B`` and
+  ``I`` are zero/NEG-padded to tile multiples, padded classes are masked
+  to ``NEG`` so they never enter the top-2, and padded batch rows are
+  sliced off on return.
+* ``interpret`` defaults to auto-detection: interpreted on CPU (this
+  container), compiled on an actual TPU backend.  TPU-native numbers are
+  still an open validation item (ROADMAP).
+
+The paper measures the *unfused* all-layer lookup bill at 56 % of a
+no-cache forward; the win here is (a) one kernel launch instead of L
+scan iterations, (b) no HBM traffic for C/A between Eq.-1/Eq.-2 stages,
+and (c) MXU-shaped ``(B_tile × d) · (d × I_tile)`` matmuls per class
+tile.
 """
 
 from __future__ import annotations
@@ -26,10 +59,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import default_interpret  # noqa: F401  (re-export)
+from repro.kernels.common import resolve_interpret as _resolve_interpret
+
 NEG = -1e9
 B_TILE = 128
 I_TILE = 128
 
+
+# ---------------------------------------------------------------------------
+# single-layer kernel (streaming callers; original PR-0 kernel)
+# ---------------------------------------------------------------------------
 
 def _kernel(sem_ref, entries_ref, mask_ref, aprev_ref,       # inputs
             anew_ref, score_ref, pred_ref,                   # outputs
@@ -85,13 +125,14 @@ def _kernel(sem_ref, entries_ref, mask_ref, aprev_ref,       # inputs
                    static_argnames=("alpha", "interpret"))
 def cache_lookup_layer(sem: jax.Array, entries: jax.Array, class_mask: jax.Array,
                        a_prev: jax.Array, *, alpha: float = 0.5,
-                       interpret: bool = True):
+                       interpret: bool | None = None):
     """One tap-layer lookup for a batch.
 
     sem (B, d) raw pooled vectors; entries (I, d) unit rows; class_mask (I,)
     bool; a_prev (B, I) running Eq.-1 accumulator.
     Returns (a_new (B, I), d_score (B,), pred (B,)).
     """
+    interpret = _resolve_interpret(interpret)
     B, d = sem.shape
     I = entries.shape[0]
     Bp = -(-B // B_TILE) * B_TILE
@@ -132,3 +173,119 @@ def cache_lookup_layer(sem: jax.Array, entries: jax.Array, class_mask: jax.Array
         interpret=interpret,
     )(semp, ep, mp, ap)
     return a_new[:B, :I], d_score[:B], pred[:B]
+
+
+# ---------------------------------------------------------------------------
+# fused all-layer kernel (the simulator hot path)
+# ---------------------------------------------------------------------------
+
+def _kernel_all(sem_ref, entries_ref, cmask_ref, lmask_ref, theta_ref,
+                score_ref, pred_ref, exit_ref,                # outputs
+                a_ref,                                        # scratch
+                *, alpha: float, num_layers: int, n_i_tiles: int):
+    bt = a_ref.shape[0]
+
+    # Eq.-1 accumulator A: 0 for active classes, NEG for inactive/padded —
+    # VMEM-resident across the full layer sweep.
+    cmask = cmask_ref[...] > 0                                # (I_pad,)
+    a_ref[...] = jnp.where(cmask[None, :], 0.0, NEG) * jnp.ones((bt, 1))
+
+    exit_layer = jnp.full((bt,), num_layers, jnp.int32)
+
+    for j in range(num_layers):
+        s = sem_ref[:, j, :].astype(jnp.float32)              # (B_t, d)
+        norm = jnp.sqrt(jnp.sum(s * s, axis=1, keepdims=True)) + 1e-8
+        semn = s / norm
+
+        active = lmask_ref[j] > 0
+
+        # Running top-2/argmax across class tiles (VREG-resident).
+        m1 = jnp.full((bt,), NEG, jnp.float32)
+        m2 = jnp.full((bt,), NEG, jnp.float32)
+        a1 = jnp.zeros((bt,), jnp.int32)
+        for it in range(n_i_tiles):
+            lo = it * I_TILE
+            e = entries_ref[j, lo:lo + I_TILE, :].astype(jnp.float32)
+            c = jnp.dot(semn, e.T,
+                        preferred_element_type=jnp.float32)   # (B_t, I_t)
+            apv = a_ref[:, lo:lo + I_TILE]
+            mt = cmask[lo:lo + I_TILE]
+            at = jnp.where(mt[None, :], c + alpha * apv, NEG)  # Eq. (1)
+            # Inactive layer: carry the accumulator state unchanged.
+            a_ref[:, lo:lo + I_TILE] = jnp.where(active, at, apv)
+
+            cols = jax.lax.broadcasted_iota(jnp.int32, at.shape, 1) + lo
+            b1 = jnp.max(at, axis=1)
+            ba1 = jnp.argmax(at, axis=1).astype(jnp.int32) + lo
+            b2 = jnp.max(jnp.where(cols == ba1[:, None], NEG, at), axis=1)
+            new_m1 = jnp.maximum(m1, b1)
+            a1 = jnp.where(b1 > m1, ba1, a1)
+            m2 = jnp.maximum(jnp.maximum(m2, b2), jnp.minimum(m1, b1))
+            m1 = new_m1
+
+        # Eq. (2) discriminative score, with the <2-active-classes guard.
+        d = jnp.where(m2 > 1e-6, (m1 - m2) / jnp.maximum(m2, 1e-6), 0.0)
+        d = jnp.where(m2 <= NEG / 2, 0.0, d)
+        d = jnp.where(active, d, 0.0)
+
+        score_ref[:, j] = d
+        pred_ref[:, j] = a1
+        hit_j = active & (d > theta_ref[j])
+        exit_layer = jnp.where((exit_layer == num_layers) & hit_j,
+                               j, exit_layer)
+
+    exit_ref[...] = exit_layer
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "interpret"))
+def cache_lookup_all_layers(sems: jax.Array, entries: jax.Array,
+                            class_mask: jax.Array, layer_mask: jax.Array,
+                            theta: jax.Array, *, alpha: float = 0.5,
+                            interpret: bool | None = None):
+    """Full Eq. (1)/(2) lookup across all L layers in one ``pallas_call``.
+
+    sems (B, L, d) raw pooled tap vectors; entries (L, I, d) unit rows;
+    class_mask (I,) bool; layer_mask (L,) bool; theta (L,) per-layer Θ.
+    Returns (scores (B, L) f32, preds (B, L) i32, exit_layer (B,) i32 with
+    L meaning "no hit").  The (B, L, I) accumulator never touches HBM.
+    """
+    interpret = _resolve_interpret(interpret)
+    B, L, d = sems.shape
+    I = entries.shape[1]
+    Bp = -(-B // B_TILE) * B_TILE
+    Ip = -(-I // I_TILE) * I_TILE
+    semp = jnp.pad(sems, ((0, Bp - B), (0, 0), (0, 0)))
+    ep = jnp.pad(entries, ((0, 0), (0, Ip - I), (0, 0)))
+    cmp_ = jnp.pad(class_mask.astype(jnp.int32), (0, Ip - I))
+    lmp = layer_mask.astype(jnp.int32)
+    thp = theta.astype(jnp.float32)
+    n_i = Ip // I_TILE
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((Bp, L), jnp.float32),    # scores
+        jax.ShapeDtypeStruct((Bp, L), jnp.int32),      # per-layer argmax
+        jax.ShapeDtypeStruct((Bp,), jnp.int32),        # first-hit exit layer
+    )
+    scores, preds, exit_layer = pl.pallas_call(
+        functools.partial(_kernel_all, alpha=alpha, num_layers=L,
+                          n_i_tiles=n_i),
+        grid=(Bp // B_TILE,),
+        in_specs=[
+            pl.BlockSpec((B_TILE, L, d), lambda b: (b, 0, 0)),
+            pl.BlockSpec((L, Ip, d), lambda b: (0, 0, 0)),
+            pl.BlockSpec((Ip,), lambda b: (0,)),
+            pl.BlockSpec((L,), lambda b: (0,)),
+            pl.BlockSpec((L,), lambda b: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((B_TILE, L), lambda b: (b, 0)),
+            pl.BlockSpec((B_TILE, L), lambda b: (b, 0)),
+            pl.BlockSpec((B_TILE,), lambda b: (b,)),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((B_TILE, Ip), jnp.float32),     # Eq.-1 accumulator A
+        ],
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(semp, ep, cmp_, lmp, thp)
+    return scores[:B], preds[:B], exit_layer[:B]

@@ -1,0 +1,15 @@
+"""Shared kernel-launch helpers."""
+
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Interpret Pallas kernels unless we are on a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` means auto-detect from the active backend."""
+    return default_interpret() if interpret is None else bool(interpret)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import resolve_interpret
+
 NEG_INF = -1e30
 BK = 128
 
@@ -62,12 +64,13 @@ def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
                    static_argnames=("return_partial", "interpret"))
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      length: jax.Array, *, return_partial: bool = False,
-                     interpret: bool = True):
+                     interpret: bool | None = None):
     """q (B, H, hd); k/v (B, T, Hkv, hd); length (B,) valid KV prefix.
 
     Returns (B, H, hd), or with ``return_partial`` the un-normalised
     (acc (B, H, hd), m (B, H), l (B, H)) for cross-shard combination.
     """
+    interpret = resolve_interpret(interpret)
     B, H, hd = q.shape
     T, Hkv = k.shape[1], k.shape[2]
     G = H // Hkv

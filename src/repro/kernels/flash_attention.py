@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import resolve_interpret
+
 NEG_INF = -1e30
 BQ = 128
 BK = 128
@@ -66,8 +68,10 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
 @functools.partial(jax.jit, static_argnames=("causal", "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, interpret: bool = True) -> jax.Array:
+                    causal: bool = True,
+                    interpret: bool | None = None) -> jax.Array:
     """q/k/v (B, S, H, hd) -> (B, S, H, hd).  H == Hkv (pre-expanded GQA)."""
+    interpret = resolve_interpret(interpret)
     B, S, H, hd = q.shape
     T = k.shape[1]
     scale = 1.0 / (hd ** 0.5)

@@ -1,9 +1,11 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-Model code calls these; each dispatches to the TPU kernel (interpret=True on
-this CPU container — the kernel body is the TPU program either way) and hides
-padding/layout glue.  Oracles live in ref.py; tests/test_kernels.py sweeps
-shapes × dtypes asserting allclose.
+Model code calls these; each dispatches to the TPU kernel and hides
+padding/layout glue.  ``interpret`` defaults to auto-detection
+(:func:`default_interpret`): interpreted on CPU containers, compiled on a
+real TPU backend — the kernel body is the TPU program either way.  Oracles
+live in ref.py; tests/test_kernels.py sweeps shapes × dtypes asserting
+allclose.
 """
 
 from __future__ import annotations
@@ -11,7 +13,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.cache_lookup import cache_lookup_layer  # noqa: F401
+from repro.kernels.cache_lookup import (cache_lookup_all_layers,  # noqa: F401
+                                        cache_lookup_layer,
+                                        default_interpret)
 from repro.kernels.decode_attention import (combine_partials,  # noqa: F401
                                             decode_attention)
 from repro.kernels.flash_attention import flash_attention as _flash
@@ -20,8 +24,10 @@ from repro.kernels.ssd_scan import ssd_scan  # noqa: F401
 
 def flash_attention_gqa(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True,
-                        interpret: bool = True) -> jax.Array:
+                        interpret: bool | None = None) -> jax.Array:
     """GQA wrapper: q (B,S,H,hd), k/v (B,T,Hkv,hd) -> (B,S,H,hd)."""
+    if interpret is None:
+        interpret = default_interpret()
     H, Hkv = q.shape[2], k.shape[2]
     if H != Hkv:
         rep = H // Hkv

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import resolve_interpret
+
 
 def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *, chunk: int):
     ci = pl.program_id(2)
@@ -63,11 +65,12 @@ def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *, chunk: int):
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_scan(x: jax.Array, dt: jax.Array, a_decay: jax.Array, B: jax.Array,
              C: jax.Array, *, chunk: int = 128,
-             interpret: bool = True) -> jax.Array:
+             interpret: bool | None = None) -> jax.Array:
     """x (B, S, H, P), dt/a (B, S, H), B/C (B, S, N) -> y (B, S, H, P).
 
     Requires S % chunk == 0 (mamba_fwd pads with the state-neutral tail).
     """
+    interpret = resolve_interpret(interpret)
     Bsz, S, H, P = x.shape
     N = B.shape[-1]
     assert S % chunk == 0, (S, chunk)

@@ -13,6 +13,16 @@ import pytest
 REPO = Path(__file__).resolve().parent.parent
 SRC = REPO / "src"
 
+# hypothesis is an optional dependency: several modules build strategies at
+# import time, so without the package collection itself dies.  Install a
+# skip-at-call-time stub before any test module is imported.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:                                  # pragma: no cover
+    sys.path.insert(0, str(Path(__file__).resolve().parent))
+    from _hypothesis_fallback import install as _install_hypothesis_stub
+    _install_hypothesis_stub()
+
 
 def run_multidevice(code: str, devices: int = 4, timeout: int = 600) -> str:
     """Run a snippet in a subprocess with N fake host devices."""

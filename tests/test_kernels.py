@@ -41,6 +41,88 @@ def test_cache_lookup_sweep(B, I, d, dtype):
 
 
 # ---------------------------------------------------------------------------
+# cache_lookup_all_layers (fused full-pipeline kernel vs. the jnp oracle)
+# ---------------------------------------------------------------------------
+
+def _all_layer_case(B, I, L, d, theta, seed, *, class_keep=1.0, layer_keep=1.0,
+                    n_active_classes=None):
+    from repro.core.semantic_cache import (CacheConfig, CacheTable,
+                                           l2_normalize, lookup_all_layers,
+                                           lookup_all_layers_ref)
+    key = jax.random.PRNGKey(seed)
+    entries = l2_normalize(jnp.abs(jax.random.normal(key, (L, I, d))))
+    if n_active_classes is not None:
+        cmask = np.zeros(I, bool)
+        cmask[:n_active_classes] = True
+    else:
+        cmask = np.asarray(
+            jax.random.bernoulli(jax.random.fold_in(key, 1), class_keep, (I,)),
+            bool).copy()
+        cmask[0] = True
+    lmask = np.asarray(
+        jax.random.bernoulli(jax.random.fold_in(key, 2), layer_keep, (L,)),
+        bool).copy()
+    lmask[0] = True
+    table = CacheTable(entries, jnp.asarray(cmask), jnp.asarray(lmask))
+    sems = jnp.abs(jax.random.normal(jax.random.fold_in(key, 3), (B, L, d)))
+    cfg = CacheConfig(num_classes=I, num_layers=L, sem_dim=d, theta=theta)
+    ref_out = lookup_all_layers_ref(table, sems, cfg)
+    fused = lookup_all_layers(table, sems, cfg, impl="fused")
+    np.testing.assert_array_equal(np.asarray(fused.hit), np.asarray(ref_out.hit))
+    np.testing.assert_array_equal(np.asarray(fused.exit_layer),
+                                  np.asarray(ref_out.exit_layer))
+    np.testing.assert_array_equal(np.asarray(fused.pred),
+                                  np.asarray(ref_out.pred))
+    np.testing.assert_allclose(np.asarray(fused.scores),
+                               np.asarray(ref_out.scores),
+                               rtol=1e-4, atol=1e-5)
+    assert fused.acc is None            # the fused path never materialises acc
+    return ref_out
+
+
+@pytest.mark.parametrize("B,I,L,d", [(8, 12, 5, 16),     # tiny, unaligned
+                                     (37, 100, 6, 32),   # unaligned B and I
+                                     (130, 257, 4, 64),  # >1 tile in B and I
+                                     (1, 5, 3, 16)])     # single frame
+def test_all_layer_lookup_parity_shapes(B, I, L, d):
+    _all_layer_case(B, I, L, d, theta=0.03, seed=B + I)
+
+
+def test_all_layer_lookup_parity_masked_classes():
+    _all_layer_case(40, 64, 5, 32, theta=0.02, seed=7, class_keep=0.5)
+
+
+def test_all_layer_lookup_parity_inactive_layers():
+    out = _all_layer_case(40, 32, 8, 32, theta=0.02, seed=11, layer_keep=0.5)
+    assert np.asarray(out.hit).any()    # case must actually exercise hits
+
+
+def test_all_layer_lookup_parity_few_active_classes():
+    # <2 active classes: a_b stays at NEG and the a_b <= NEG/2 guard fires.
+    _all_layer_case(16, 12, 4, 16, theta=0.05, seed=13, n_active_classes=1)
+    _all_layer_case(16, 12, 4, 16, theta=0.05, seed=17, n_active_classes=2)
+
+
+def test_all_layer_lookup_parity_per_layer_theta():
+    from repro.core.semantic_cache import (CacheConfig, CacheTable,
+                                           l2_normalize, lookup_all_layers,
+                                           lookup_all_layers_ref)
+    B, I, L, d = 24, 20, 4, 16
+    key = jax.random.PRNGKey(23)
+    entries = l2_normalize(jnp.abs(jax.random.normal(key, (L, I, d))))
+    table = CacheTable(entries, jnp.ones(I, bool), jnp.ones(L, bool))
+    sems = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (B, L, d)))
+    cfg = CacheConfig(num_classes=I, num_layers=L, sem_dim=d,
+                      theta=(0.2, 0.1, 0.05, 0.02))
+    ref_out = lookup_all_layers_ref(table, sems, cfg)
+    fused = lookup_all_layers(table, sems, cfg, impl="fused")
+    np.testing.assert_array_equal(np.asarray(fused.exit_layer),
+                                  np.asarray(ref_out.exit_layer))
+    np.testing.assert_array_equal(np.asarray(fused.pred),
+                                  np.asarray(ref_out.pred))
+
+
+# ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
 

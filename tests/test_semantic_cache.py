@@ -123,7 +123,8 @@ def test_accumulation_matches_manual(seed, alpha):
                       alpha=float(alpha), theta=1e9)
     sem = l2_normalize(jnp.abs(jax.random.normal(jax.random.PRNGKey(seed % 97),
                                                  (3, L, D))))
-    look = lookup_all_layers(t, sem, cfg)
+    # acc is only materialised by the reference path (fused returns None)
+    look = lookup_all_layers(t, sem, cfg, impl="ref")
     # manual Eq. (1) recurrence
     a = np.zeros((3, I))
     for j in range(L):

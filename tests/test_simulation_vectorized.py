@@ -1,0 +1,113 @@
+"""Vectorised round engine vs. the per-client reference driver.
+
+The vectorised ``run_simulation`` (vmap over clients + lax.scan over Eq.-4/5
+merges + one bundled device_get per round) must reproduce the Python-loop
+``run_simulation_reference`` — same tables, same hits, same merge order —
+to within float tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CacheConfig, SimulationConfig, bootstrap_server,
+                        calibrate, run_simulation, run_simulation_reference)
+from repro.core.client import AbsorptionConfig
+
+I, L, D, F, K, R = 10, 4, 16, 24, 3, 3
+
+
+def _world(theta=0.05, **sim_kw):
+    cache = CacheConfig(num_classes=I, num_layers=L, sem_dim=D, theta=theta)
+    sim = SimulationConfig(cache=cache, round_frames=F, mem_budget=8_000.0,
+                           absorb=AbsorptionConfig(), **sim_kw)
+    cm = calibrate(np.linspace(2.0, 1.0, L + 1), np.full(L, D), head_cost=0.5)
+
+    key = jax.random.PRNGKey(0)
+    centroids = jax.random.normal(key, (L, I, D))
+
+    def taps_for(labels, seed):
+        k = jax.random.PRNGKey(seed)
+        lab = jnp.asarray(labels)
+        sems = centroids[:, lab, :].transpose(1, 0, 2) + \
+            0.6 * jax.random.normal(k, (len(labels), L, D))
+        logits = (jax.nn.one_hot(lab, I) * 4.0
+                  + jax.random.normal(jax.random.fold_in(k, 1), (len(labels), I)))
+        return sems, logits
+
+    def tap_shared(labels):
+        return taps_for(labels, 999)
+
+    def tap_fn(r, k_, labels):
+        return taps_for(labels, 7 + 13 * r + 131 * k_)
+
+    rng = np.random.default_rng(3)
+    labels = rng.integers(0, I, size=(R, K, F))
+    shared = np.tile(np.arange(I), 8)
+    server = bootstrap_server(key, sim, tap_shared, shared, cm)
+    return sim, server, tap_fn, labels, cm
+
+
+def _assert_match(a, b):
+    np.testing.assert_allclose(a.avg_latency, b.avg_latency, rtol=1e-5)
+    np.testing.assert_allclose(a.accuracy, b.accuracy, rtol=1e-6)
+    np.testing.assert_allclose(a.hit_ratio, b.hit_ratio, rtol=1e-6)
+    np.testing.assert_allclose(a.hit_accuracy, b.hit_accuracy, rtol=1e-6)
+    np.testing.assert_array_equal(a.exit_histogram, b.exit_histogram)
+    np.testing.assert_allclose(a.per_round_latency, b.per_round_latency,
+                               rtol=1e-5)
+    np.testing.assert_allclose(a.per_round_accuracy, b.per_round_accuracy,
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(a.server.entries),
+                               np.asarray(b.server.entries),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(a.server.phi_global),
+                               np.asarray(b.server.phi_global), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(a.server.r_est),
+                               np.asarray(b.server.r_est),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_vectorized_matches_reference():
+    sim, server, tap_fn, labels, cm = _world()
+    ref = run_simulation_reference(sim, server, tap_fn, labels, cm, R, K)
+    vec = run_simulation(sim, server, tap_fn, labels, cm, R, K)
+    _assert_match(vec, ref)
+    assert ref.hit_ratio > 0            # the case must actually exercise hits
+
+
+def test_vectorized_matches_reference_gcu_off():
+    sim, server, tap_fn, labels, cm = _world(global_updates=False)
+    ref = run_simulation_reference(sim, server, tap_fn, labels, cm, R, K)
+    vec = run_simulation(sim, server, tap_fn, labels, cm, R, K)
+    _assert_match(vec, ref)
+    # GCU off: the global cache must be untouched
+    np.testing.assert_array_equal(np.asarray(vec.server.entries),
+                                  np.asarray(server.entries))
+
+
+def test_vectorized_matches_reference_static_allocation():
+    sim, server, tap_fn, labels, cm = _world(dynamic_allocation=False,
+                                             static_layers=(1, 3))
+    ref = run_simulation_reference(sim, server, tap_fn, labels, cm, R, K)
+    vec = run_simulation(sim, server, tap_fn, labels, cm, R, K)
+    _assert_match(vec, ref)
+
+
+def test_vectorized_straggler_deadline():
+    sim0, server, tap_fn, labels, cm = _world()
+    base = run_simulation(sim0, server, tap_fn, labels, cm, R, K)
+    # Deadline below any per-client round latency: every upload is dropped,
+    # so the server cache must stay at its bootstrap state (= GCU off).
+    sim_hard = _world(straggler_deadline=1e-9)[0]
+    hard = run_simulation(sim_hard, server, tap_fn, labels, cm, R, K)
+    np.testing.assert_array_equal(np.asarray(hard.server.entries),
+                                  np.asarray(server.entries))
+    # A deadline nothing exceeds reproduces the unconstrained run.
+    sim_soft = _world(straggler_deadline=1e9)[0]
+    soft = run_simulation(sim_soft, server, tap_fn, labels, cm, R, K)
+    _assert_match(soft, base)
+    # And the reference agrees about straggler handling too.
+    ref_hard = run_simulation_reference(sim_hard, server, tap_fn, labels,
+                                        cm, R, K)
+    _assert_match(hard, ref_hard)
