@@ -31,19 +31,27 @@ def _time(fn, *args, reps=3):
 
 
 def _all_layer_sweep(quick: bool):
-    """Fused single-pallas_call all-layer lookup vs. the unfused lax.scan
-    reference, over a B×L×I grid.  Emits BENCH_lookup.json so the perf
-    trajectory is tracked from PR 1 on (interpret-mode caveat applies on
-    CPU: the emulated-kernel time is not TPU time; the stable signal is
-    the unfused-reference column and the op-count reduction)."""
+    """Fused all-layer lookup vs. the unfused lax.scan reference over a
+    B×L×I grid, including the huge-I regime where the single-pass kernel's
+    working set exceeds the ~16 MB VMEM budget and dispatch switches to the
+    class-tiled kernel.  Emits BENCH_lookup.json so the perf trajectory is
+    tracked from PR 1 on (interpret-mode caveat applies on CPU: the
+    emulated-kernel time is not TPU time; the stable signals are the
+    unfused-reference column, the op-count reduction, and
+    correctness-at-scale of the tiled path)."""
     from repro.core.semantic_cache import (CacheConfig, CacheTable,
                                            l2_normalize, lookup_all_layers,
                                            lookup_all_layers_ref)
+    from repro.kernels import common as kcommon
     from repro.kernels.cache_lookup import default_interpret
 
-    grid = ([(64, 6, 64, 32)] if quick
+    # Last rows of each grid cross the single-pass VMEM ceiling on purpose:
+    # the sweep records where dispatch flips single -> tiled (the crossover).
+    grid = ([(64, 6, 64, 32), (32, 12, 8192, 64)] if quick
             else [(128, 6, 128, 64), (128, 12, 256, 64),
-                  (256, 24, 256, 64), (256, 24, 512, 128)])
+                  (256, 24, 256, 64), (256, 24, 512, 128),
+                  (128, 12, 16384, 64), (64, 24, 32768, 64),
+                  (64, 12, 65536, 64)])
     records, rows = [], []
     for B, L, I, d in grid:
         k = jax.random.PRNGKey(L * 1000 + I)
@@ -51,21 +59,32 @@ def _all_layer_sweep(quick: bool):
         table = CacheTable(entries, jnp.ones(I, bool), jnp.ones(L, bool))
         sems = jnp.abs(jax.random.normal(jax.random.fold_in(k, 1), (B, L, d)))
         cfg = CacheConfig(num_classes=I, num_layers=L, sem_dim=d, theta=0.05)
+        fits = kcommon.single_pass_fits(L, I, d)
+        impl = "single" if fits else "tiled"
         # jit both closures so padding/dispatch glue is compiled on each side
         fused_jit = jax.jit(lambda s: lookup_all_layers(table, s, cfg,
                                                         impl="fused"))
         ref_jit = jax.jit(lambda s: lookup_all_layers_ref(table, s, cfg))
         t_fused = _time(fused_jit, sems)
         t_ref = _time(ref_jit, sems)
+        i_block = kcommon.pick_class_block(L, d)
         rec = {"B": B, "L": L, "I": I, "d": d,
                "fused_us": round(t_fused, 1), "unfused_us": round(t_ref, 1),
                "speedup": round(t_ref / max(t_fused, 1e-9), 3),
+               "impl": impl,
+               "single_pass_vmem_mb": round(
+                   kcommon.lookup_single_pass_vmem_bytes(L, I, d) / 2**20, 2),
+               "tiled_vmem_mb": round(
+                   kcommon.lookup_tiled_vmem_bytes(L, i_block, d) / 2**20, 2),
+               "i_block": i_block,
+               "vmem_budget_mb": round(kcommon.vmem_budget_bytes() / 2**20, 2),
+               "single_pass_fits_vmem": fits,
                "backend": jax.default_backend(),
                "interpret": default_interpret()}
         records.append(rec)
         rows.append((f"kernels/cache_lookup_all_layers_B{B}_L{L}_I{I}",
                      t_fused, f"unfused_us={t_ref:.0f};"
-                              f"speedup={rec['speedup']:.2f}"))
+                              f"speedup={rec['speedup']:.2f};impl={impl}"))
     BENCH_LOOKUP_JSON.write_text(json.dumps(
         {"benchmark": "all_layer_cache_lookup_fused_vs_unfused",
          "records": records}, indent=2) + "\n")

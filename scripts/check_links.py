@@ -1,0 +1,45 @@
+#!/usr/bin/env python
+"""Docs link check: every relative markdown link in README/docs must resolve.
+
+Usage: python scripts/check_links.py  (from anywhere; paths are repo-rooted)
+Exits non-zero listing broken links.  External (http/mailto) links and
+in-page anchors are skipped — this guards the README/docs cross-references,
+not the internet.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_GLOBS = ["README.md", "PAPER.md", "ROADMAP.md", "docs/*.md"]
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check() -> list[str]:
+    broken = []
+    for pattern in DOC_GLOBS:
+        for md in sorted(REPO.glob(pattern)):
+            text = md.read_text()
+            for target in LINK_RE.findall(text):
+                if target.startswith(("http://", "https://", "mailto:", "#")):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:
+                    continue
+                resolved = (md.parent / path).resolve()
+                if not resolved.exists():
+                    broken.append(f"{md.relative_to(REPO)}: {target}")
+    return broken
+
+
+if __name__ == "__main__":
+    broken = check()
+    if broken:
+        print("broken links:")
+        for b in broken:
+            print(" ", b)
+        sys.exit(1)
+    print("all doc links resolve")

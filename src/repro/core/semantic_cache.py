@@ -214,16 +214,22 @@ def lookup_all_layers(table: CacheTable, sems: jax.Array, cfg: CacheConfig,
                       *, impl: str = "auto") -> LookupResult:
     """Run Eq. (1)/(2) across all L layers for a batch of tap vectors.
 
-    Dispatches between the fused single-``pallas_call`` kernel
-    (:func:`repro.kernels.cache_lookup.cache_lookup_all_layers`) and the
-    unfused ``jnp`` reference (:func:`lookup_all_layers_ref`).
+    Dispatches between the fused Pallas kernels
+    (:mod:`repro.kernels.cache_lookup`) and the unfused ``jnp`` reference
+    (:func:`lookup_all_layers_ref`).
 
-    ``impl`` — ``"auto"`` (fused on a TPU backend, reference otherwise —
-    interpret-mode emulation of the kernel is far slower than XLA on CPU),
-    ``"fused"`` (force the kernel; interpret mode is still auto-detected
-    inside it), or ``"ref"``.
+    ``impl``
+      * ``"auto"``   — fused on a TPU backend, reference otherwise
+        (interpret-mode emulation of the kernel is far slower than XLA on
+        CPU).
+      * ``"fused"``  — force a kernel; single-pass vs. class-tiled is chosen
+        from the VMEM budget estimate in :mod:`repro.kernels.common`
+        (interpret mode is still auto-detected inside the kernel).
+      * ``"fused_single"`` / ``"fused_tiled"`` — pin a specific kernel
+        (parity tests and benchmarks).
+      * ``"ref"``    — the ``lax.scan`` oracle.
 
-    The fused path returns ``acc=None`` — it never materialises the
+    The fused paths return ``acc=None`` — they never materialise the
     ``(B, L, I)`` accumulator; callers needing ``acc`` must ask for
     ``impl="ref"``.
     """
@@ -231,11 +237,20 @@ def lookup_all_layers(table: CacheTable, sems: jax.Array, cfg: CacheConfig,
         impl = "fused" if jax.default_backend() == "tpu" else "ref"
     if impl == "ref":
         return lookup_all_layers_ref(table, sems, cfg)
-    if impl != "fused":
+    if impl == "fused":
+        from repro.kernels.common import single_pass_fits
+        impl = ("fused_single"
+                if single_pass_fits(cfg.num_layers, cfg.num_classes,
+                                    cfg.sem_dim)
+                else "fused_tiled")
+    if impl not in ("fused_single", "fused_tiled"):
         raise ValueError(f"unknown lookup impl: {impl!r}")
 
-    from repro.kernels.cache_lookup import cache_lookup_all_layers
-    scores, preds, exit_layer = cache_lookup_all_layers(
+    from repro.kernels.cache_lookup import (cache_lookup_all_layers,
+                                            cache_lookup_all_layers_tiled)
+    kernel = (cache_lookup_all_layers if impl == "fused_single"
+              else cache_lookup_all_layers_tiled)
+    scores, preds, exit_layer = kernel(
         sems, table.entries, table.class_mask, table.layer_mask,
         cfg.theta_vec(), alpha=cfg.alpha)
     hit = exit_layer < cfg.num_layers

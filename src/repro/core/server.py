@@ -14,11 +14,20 @@ The server maintains (§IV.D)
 
 Eq. (4) merge:  E[i,j] = γ·Φᵢ/(Φᵢ+φᵢᵏ)·E[i,j] + φᵢᵏ/(Φᵢ+φᵢᵏ)·U[i,j]ᵏ, then
 L2-normalise.  Eq. (5):  Φᵢ += φᵢᵏ.
+
+At scale the table is sharded over the class axis I
+(:func:`repro.distributed.sharding.shard_server_state`): every update here is
+elementwise in I (the Eq.-4 weights, the merge, the L2-normalise over d, the
+Φ add), so a class-sharded ServerState flows through ``global_update_body``
+with no cross-device communication — GSPMD keeps I split end to end.  The
+round driver (:mod:`repro.core.simulation`) gathers ``entries`` only at
+client subtable allocation.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from functools import partial
 from typing import NamedTuple
 
@@ -92,16 +101,49 @@ def global_update_body(server: ServerState, up: ClientUpload,
 global_update = partial(jax.jit, static_argnames=("scfg",))(global_update_body)
 
 
-def profile_initial_cache(sems: jax.Array, labels: jax.Array,
-                          num_classes: int) -> tuple[jax.Array, jax.Array]:
-    """Server-side bootstrap from a globally shared dataset (§III.3).
-
-    ``sems`` — (N, L, d) taps of the shared calibration set, ``labels`` — (N,).
-    Returns (entries (L, I, d), phi (I,)): per-class per-layer centroids and
-    observed class counts.
-    """
+def _profile_initial_cache_impl(sems: jax.Array, labels: jax.Array,
+                                num_classes: int):
     onehot = jax.nn.one_hot(labels, num_classes)                  # (N, I)
     counts = onehot.sum(axis=0)                                   # (I,)
     sums = jnp.einsum("nld,ni->lid", sems, onehot)
     centroids = sums / jnp.maximum(counts[None, :, None], 1.0)
     return l2_normalize(centroids), counts
+
+
+@functools.lru_cache(maxsize=None)
+def _profile_initial_cache_jit(num_classes: int, out_shardings):
+    # Cached so repeat bootstraps with the same (I, shardings) reuse the
+    # compiled program instead of retracing (shardings are hashable).
+    return jax.jit(partial(_profile_initial_cache_impl,
+                           num_classes=num_classes),
+                   out_shardings=out_shardings)
+
+
+def profile_initial_cache(sems: jax.Array, labels: jax.Array,
+                          num_classes: int,
+                          mesh=None) -> tuple[jax.Array, jax.Array]:
+    """Server-side bootstrap from a globally shared dataset (§III.3).
+
+    ``sems`` — (N, L, d) taps of the shared calibration set, ``labels`` — (N,).
+    Returns (entries (L, I, d), phi (I,)): per-class per-layer centroids and
+    observed class counts.
+
+    With ``mesh`` the computation is jitted with class-sharded output
+    shardings (:func:`repro.distributed.sharding.server_cache_specs`): the
+    centroid einsum contracts over the sample axis N, so GSPMD partitions it
+    and each device only ever *produces* its I-slice — the full (L, I, d)
+    table is never materialised on one device.
+    """
+    if mesh is None:
+        return _profile_initial_cache_impl(sems, labels, num_classes)
+    from jax.sharding import NamedSharding
+    from repro.distributed.sharding import fit_spec, server_cache_specs
+    L, d = sems.shape[1], sems.shape[2]
+    specs = server_cache_specs(mesh)
+    out_shardings = (
+        NamedSharding(mesh, fit_spec(specs["entries"], (L, num_classes, d),
+                                     mesh)),
+        NamedSharding(mesh, fit_spec(specs["phi_global"], (num_classes,),
+                                     mesh)),
+    )
+    return _profile_initial_cache_jit(num_classes, out_shardings)(sems, labels)

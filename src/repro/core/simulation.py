@@ -179,7 +179,7 @@ def _round_step(states: ClientState, tables: CacheTable, sems: jax.Array,
 def run_simulation(sim: SimulationConfig, server: ServerState,
                    tap_fn: TapFn, labels_per_round: np.ndarray,
                    cost_model: CostModel, num_rounds: int,
-                   num_clients: int) -> SimulationResult:
+                   num_clients: int, mesh=None) -> SimulationResult:
     """Drive ``num_rounds`` rounds over ``num_clients`` clients (vectorised).
 
     ``labels_per_round`` — (rounds, clients, F) ground-truth class streams.
@@ -187,10 +187,22 @@ def run_simulation(sim: SimulationConfig, server: ServerState,
     Per round the only host↔device round-trip is one bundled ``device_get``
     of (round metrics, Φ, R, client τ) — the ACA allocator's inputs for the
     next round ride along with the metrics of the round that just finished.
+
+    ``mesh`` — optional :class:`jax.sharding.Mesh`; the server's global
+    cache then lives class-sharded across devices
+    (:func:`repro.distributed.sharding.shard_server_state`) and stays
+    sharded through the Eq.-4/5 merges inside ``_round_step``.  The one
+    collective per round is the all-gather of ``entries`` right before
+    client subtable allocation (``allocate_subtable`` cuts dense per-client
+    tables, so it needs every class column).
     """
     K = num_clients
     L = sim.cache.num_layers
     states = _init_clients_batched(sim.cache, K)
+    if mesh is not None:
+        from repro.distributed.sharding import (gather_cache,
+                                                shard_server_state)
+        server = shard_server_state(server, mesh)
 
     lat_sum = np.zeros(num_rounds)
     frames = np.zeros(num_rounds, np.int64)
@@ -204,9 +216,16 @@ def run_simulation(sim: SimulationConfig, server: ServerState,
         (server.phi_global, server.r_est, states.tau))
 
     for r in range(num_rounds):
+        # The protocol's single collective: gather the class-sharded table
+        # so per-client dense subtables can be cut from it.  With GCU off
+        # the table never changes, so round 0's gather serves every round.
+        if mesh is None:
+            alloc_entries = server.entries
+        elif r == 0 or sim.global_updates:
+            alloc_entries = gather_cache(server.entries, mesh)
         tables = _stack_tables([
             _allocate_from_status(sim, host_phi, host_tau[k], host_r,
-                                  host_ups, server.entries, cost_model)
+                                  host_ups, alloc_entries, cost_model)
             for k in range(K)])
         taps = [tap_fn(r, k, labels_per_round[r, k]) for k in range(K)]
         sems = jnp.stack([t[0] for t in taps])
@@ -308,25 +327,38 @@ def run_simulation_reference(sim: SimulationConfig, server: ServerState,
 
 def bootstrap_server(key: jax.Array, sim: SimulationConfig, tap_fn_shared,
                      shared_labels: np.ndarray, cost_model: CostModel,
-                     r0: np.ndarray | None = None) -> ServerState:
+                     r0: np.ndarray | None = None,
+                     mesh=None) -> ServerState:
     """Server warm start from the globally shared dataset (§III.3, §V.A).
 
     Entries = per-class per-layer centroids of the shared set; R = profiled
     first-hit CDF measured by replaying the shared set against the freshly
     built full table ("empirical relation tested on a shared dataset").
+
+    With ``mesh`` the profiled table is built class-sharded and the returned
+    ServerState lives on the mesh; the R-profiling replay (a dense full-table
+    lookup, same shape of work as subtable allocation) gathers first.
     """
     from repro.core.semantic_cache import CacheTable, lookup_all_layers
     from repro.core.server import profile_initial_cache
     sems, _ = tap_fn_shared(shared_labels)
     entries, counts = profile_initial_cache(sems, jnp.asarray(shared_labels),
-                                            sim.cache.num_classes)
+                                            sim.cache.num_classes, mesh=mesh)
     if r0 is None:
-        full = CacheTable(entries=entries,
+        lookup_entries = entries
+        if mesh is not None:
+            from repro.distributed.sharding import gather_cache
+            lookup_entries = gather_cache(entries, mesh)
+        full = CacheTable(entries=lookup_entries,
                           class_mask=jnp.ones(sim.cache.num_classes, bool),
                           layer_mask=jnp.ones(sim.cache.num_layers, bool))
         look = lookup_all_layers(full, sems, sim.cache)
         first = np.bincount(np.asarray(look.exit_layer),
                             minlength=sim.cache.num_layers + 1)[:-1]
         r0 = np.cumsum(first) / max(len(shared_labels), 1)
-    return init_server(sim.cache, entries, counts, jnp.asarray(r0),
-                       jnp.asarray(cost_model.saved_time()))
+    server = init_server(sim.cache, entries, counts, jnp.asarray(r0),
+                         jnp.asarray(cost_model.saved_time()))
+    if mesh is not None:
+        from repro.distributed.sharding import shard_server_state
+        server = shard_server_state(server, mesh)
+    return server

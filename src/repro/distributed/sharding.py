@@ -18,13 +18,16 @@ padded uneven sharding, which JAX supports for jit in/out shardings.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import TYPE_CHECKING, Any
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.config import ModelConfig
+if TYPE_CHECKING:   # annotation-only; a module-level import would cycle via
+    # repro.models.__init__ -> transformer -> sharding.constrain when this
+    # module is imported first (e.g. by repro.core.simulation's mesh path)
+    from repro.models.config import ModelConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -177,6 +180,58 @@ def make_param_shardings(cfg: ModelConfig, mesh: Mesh,
         spec = param_spec(_path_str(path), leaf, cfg, mesh, policy)
         return NamedSharding(mesh, fit_spec(spec, leaf.shape, mesh))
     return jax.tree_util.tree_map_with_path(f, params_tree)
+
+
+# ---------------------------------------------------------------------------
+# CoCa server global cache: shard the class axis I across devices
+# ---------------------------------------------------------------------------
+#
+# The server's two-dimensional global cache (entries (L, I, d), Φ (I,)) scales
+# with the class/model population I — the axis the million-user north star
+# grows.  We split I across the mesh: every Eq.-4/5 merge and the profiling
+# bootstrap are elementwise (or reductions over non-I axes) in I, so under
+# jit they run fully sharded with zero cross-device traffic.  The only
+# all-gather in the protocol is at client subtable allocation, where a
+# personalised dense (L, I, d) table is cut for each client
+# (:func:`repro.core.semantic_cache.allocate_subtable`) — see
+# ``gather_cache`` and the ``mesh`` plumbing in repro.core.simulation.
+
+def class_axis(mesh: Mesh):
+    """Mesh axis (or axis tuple) the class dimension I is split over.
+
+    Prefers "model" (the natural table-parallel axis); falls back to the
+    data axes on DP-only meshes so single-axis CPU test meshes still shard.
+    """
+    dp, tp = _axes(mesh)
+    return tp if tp is not None else (dp or None)
+
+
+def server_cache_specs(mesh: Mesh) -> dict[str, P]:
+    """PartitionSpecs for every ServerState leaf, keyed by field name."""
+    ax = class_axis(mesh)
+    return {
+        "entries": P(None, ax, None),     # (L, I, d) — classes split
+        "phi_global": P(ax),              # (I,)
+        "r_est": P(),                     # (L,) replicated
+        "upsilon": P(),                   # (L,) replicated
+    }
+
+
+def shard_server_state(server, mesh: Mesh):
+    """Place a ServerState on the mesh with the class axis split over
+    devices (replicated where I doesn't divide the axis — ``fit_spec``)."""
+    specs = server_cache_specs(mesh)
+    fields = {
+        name: jax.device_put(
+            leaf, NamedSharding(mesh, fit_spec(specs[name], leaf.shape, mesh)))
+        for name, leaf in server._asdict().items()
+    }
+    return type(server)(**fields)
+
+
+def gather_cache(x: jax.Array, mesh: Mesh) -> jax.Array:
+    """All-gather a class-sharded array to replicated (subtable allocation)."""
+    return jax.device_put(x, NamedSharding(mesh, P(*([None] * x.ndim))))
 
 
 # ---------------------------------------------------------------------------

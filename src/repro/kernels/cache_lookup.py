@@ -32,9 +32,13 @@ Design / tiling (recorded per the PR-1 plan):
 * **VMEM budget**: entries ``(L, I_pad, d)`` + accumulator
   ``(B_TILE, I_pad)`` + taps ``(B_TILE, L, d)``.  At paper scale
   (L=24, I≤1024, d=64, B_TILE=128) that is ≈6.5 MB < the ~16 MB/core
-  budget.  Very large ``L·I·d`` tables need an extra class-tile grid
-  dimension with the accumulator revisited per tile — left to the
-  sharding PR (see ROADMAP "Open items").
+  budget.  Very large ``L·I·d`` tables overflow this — that regime is
+  served by ``cache_lookup_all_layers_tiled`` below, which adds a second
+  (minor) grid dimension over class blocks so only one ``(L, I_BLOCK, d)``
+  entries slab is VMEM-resident at a time.  The budget model that picks
+  between the two lives in :mod:`repro.kernels.common`; dispatch happens
+  in :func:`repro.core.semantic_cache.lookup_all_layers`.  See
+  ``docs/architecture.md`` for the full tiling story.
 * Class tiles are ``I_TILE = 128`` wide (MXU-lane aligned); ``B`` and
   ``I`` are zero/NEG-padded to tile multiples, padded classes are masked
   to ``NEG`` so they never enter the top-2, and padded batch rows are
@@ -59,12 +63,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import B_TILE, I_TILE
 from repro.kernels.common import default_interpret  # noqa: F401  (re-export)
+from repro.kernels.common import pick_class_block
 from repro.kernels.common import resolve_interpret as _resolve_interpret
 
 NEG = -1e9
-B_TILE = 128
-I_TILE = 128
 
 
 # ---------------------------------------------------------------------------
@@ -284,6 +288,144 @@ def cache_lookup_all_layers(sems: jax.Array, entries: jax.Array,
         ),
         scratch_shapes=[
             pltpu.VMEM((B_TILE, Ip), jnp.float32),     # Eq.-1 accumulator A
+        ],
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(semp, ep, cmp_, lmp, thp)
+    return scores[:B], preds[:B], exit_layer[:B]
+
+
+# ---------------------------------------------------------------------------
+# class-tiled all-layer kernel (huge-I tables that overflow VMEM)
+# ---------------------------------------------------------------------------
+
+def _kernel_all_tiled(sem_ref, entries_ref, cmask_ref, lmask_ref, theta_ref,
+                      score_ref, pred_ref, exit_ref,           # outputs
+                      m1_ref, m2_ref, a1_ref,                  # scratch
+                      *, alpha: float, num_layers: int, n_c_blocks: int,
+                      i_block: int):
+    """One (batch-tile, class-block) grid step of the tiled lookup.
+
+    The grid is ``(n_b_tiles, n_c_blocks)`` with the class-block axis minor,
+    so for a fixed batch tile the blocks arrive in class order and the
+    ``(B_TILE, L)`` running top-2/argmax scratch carries across revisits.
+    The Eq.-1 accumulator only ever needs this block's ``(B_TILE, i_block)``
+    column range — accumulation is columnwise across layers — so it is a
+    block-local value, not persistent state.
+    """
+    t = pl.program_id(1)
+    bt = m1_ref.shape[0]
+    lo = t * i_block                       # global class offset of this block
+
+    # First class block of a batch tile: reset the carried top-2 state.
+    @pl.when(t == 0)
+    def _():
+        m1_ref[...] = jnp.full_like(m1_ref, NEG)
+        m2_ref[...] = jnp.full_like(m2_ref, NEG)
+        a1_ref[...] = jnp.zeros_like(a1_ref)
+
+    cmask = cmask_ref[...] > 0                                # (i_block,)
+    a_prev = jnp.where(cmask[None, :], 0.0, NEG) * jnp.ones((bt, 1))
+
+    for j in range(num_layers):
+        s = sem_ref[:, j, :].astype(jnp.float32)              # (B_t, d)
+        norm = jnp.sqrt(jnp.sum(s * s, axis=1, keepdims=True)) + 1e-8
+        semn = s / norm
+        active = lmask_ref[j] > 0
+
+        e = entries_ref[j].astype(jnp.float32)                # (i_block, d)
+        c = jnp.dot(semn, e.T,
+                    preferred_element_type=jnp.float32)       # (B_t, i_block)
+        at = jnp.where(cmask[None, :], c + alpha * a_prev, NEG)   # Eq. (1)
+        # Inactive layer: carry the accumulator state unchanged.
+        a_prev = jnp.where(active, at, a_prev)
+
+        # Block-local top-2, merged into the carried per-layer state.
+        cols = jax.lax.broadcasted_iota(jnp.int32, at.shape, 1) + lo
+        b1 = jnp.max(at, axis=1)
+        ba1 = jnp.argmax(at, axis=1).astype(jnp.int32) + lo
+        b2 = jnp.max(jnp.where(cols == ba1[:, None], NEG, at), axis=1)
+        m1, m2, a1 = m1_ref[:, j], m2_ref[:, j], a1_ref[:, j]
+        a1_ref[:, j] = jnp.where(b1 > m1, ba1, a1)
+        m2_ref[:, j] = jnp.maximum(jnp.maximum(m2, b2), jnp.minimum(m1, b1))
+        m1_ref[:, j] = jnp.maximum(m1, b1)
+
+    # Last class block: Eq. (2) + first-hit exit from the merged state.
+    @pl.when(t == n_c_blocks - 1)
+    def _():
+        m1, m2 = m1_ref[...], m2_ref[...]                     # (B_t, L)
+        d = jnp.where(m2 > 1e-6, (m1 - m2) / jnp.maximum(m2, 1e-6), 0.0)
+        d = jnp.where(m2 <= NEG / 2, 0.0, d)
+        active = lmask_ref[...] > 0                           # (L,)
+        d = jnp.where(active[None, :], d, 0.0)
+        score_ref[...] = d
+        pred_ref[...] = a1_ref[...]
+        hits = active[None, :] & (d > theta_ref[...][None, :])
+        first = jnp.argmax(hits, axis=1).astype(jnp.int32)
+        exit_ref[...] = jnp.where(hits.any(axis=1), first,
+                                  num_layers).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "i_block", "interpret"))
+def cache_lookup_all_layers_tiled(sems: jax.Array, entries: jax.Array,
+                                  class_mask: jax.Array, layer_mask: jax.Array,
+                                  theta: jax.Array, *, alpha: float = 0.5,
+                                  i_block: int | None = None,
+                                  interpret: bool | None = None):
+    """Class-tiled variant of :func:`cache_lookup_all_layers` for tables too
+    large to hold ``entries (L, I, d)`` VMEM-resident.
+
+    Same contract as the single-pass kernel (returns ``(scores (B, L),
+    preds (B, L), exit_layer (B,))``) but the grid gains a minor class-block
+    axis: each step streams one ``(L, i_block, d)`` entries slab through
+    VMEM, and the running per-layer top-2/argmax state persists in scratch
+    across block revisits.  VMEM use is O(``L·i_block·d``) instead of
+    O(``L·I·d``), so ``I`` is bounded by HBM, not VMEM.
+
+    ``i_block`` — class-block width (rounded to an ``I_TILE`` multiple);
+    ``None`` picks the largest block whose working set fits the budget
+    (:func:`repro.kernels.common.pick_class_block`).
+    """
+    interpret = _resolve_interpret(interpret)
+    B, L, d = sems.shape
+    I = entries.shape[1]
+    if i_block is None:
+        i_block = pick_class_block(L, d)
+    i_block = max(I_TILE, (i_block // I_TILE) * I_TILE)
+    Bp = -(-B // B_TILE) * B_TILE
+    Ip = -(-I // i_block) * i_block
+    semp = jnp.pad(sems, ((0, Bp - B), (0, 0), (0, 0)))
+    ep = jnp.pad(entries, ((0, 0), (0, Ip - I), (0, 0)))
+    cmp_ = jnp.pad(class_mask.astype(jnp.int32), (0, Ip - I))
+    lmp = layer_mask.astype(jnp.int32)
+    thp = theta.astype(jnp.float32)
+    n_c = Ip // i_block
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((Bp, L), jnp.float32),    # scores
+        jax.ShapeDtypeStruct((Bp, L), jnp.int32),      # per-layer argmax
+        jax.ShapeDtypeStruct((Bp,), jnp.int32),        # first-hit exit layer
+    )
+    scores, preds, exit_layer = pl.pallas_call(
+        functools.partial(_kernel_all_tiled, alpha=alpha, num_layers=L,
+                          n_c_blocks=n_c, i_block=i_block),
+        grid=(Bp // B_TILE, n_c),
+        in_specs=[
+            pl.BlockSpec((B_TILE, L, d), lambda b, t: (b, 0, 0)),
+            pl.BlockSpec((L, i_block, d), lambda b, t: (0, t, 0)),
+            pl.BlockSpec((i_block,), lambda b, t: (t,)),
+            pl.BlockSpec((L,), lambda b, t: (0,)),
+            pl.BlockSpec((L,), lambda b, t: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((B_TILE, L), lambda b, t: (b, 0)),
+            pl.BlockSpec((B_TILE, L), lambda b, t: (b, 0)),
+            pl.BlockSpec((B_TILE,), lambda b, t: (b,)),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((B_TILE, L), jnp.float32),      # running top-1
+            pltpu.VMEM((B_TILE, L), jnp.float32),      # running top-2
+            pltpu.VMEM((B_TILE, L), jnp.int32),        # running argmax
         ],
         out_shape=out_shapes,
         interpret=interpret,

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.cache_lookup import (cache_lookup_all_layers,  # noqa: F401
+                                        cache_lookup_all_layers_tiled,
                                         cache_lookup_layer,
                                         default_interpret)
 from repro.kernels.decode_attention import (combine_partials,  # noqa: F401

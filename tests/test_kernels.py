@@ -123,6 +123,137 @@ def test_all_layer_lookup_parity_per_layer_theta():
 
 
 # ---------------------------------------------------------------------------
+# cache_lookup_all_layers_tiled (class-tile grid for huge-I tables)
+# ---------------------------------------------------------------------------
+
+def _tiled_case(B, I, L, d, theta, seed, *, i_block, class_keep=0.7,
+                layer_keep=0.7):
+    """Parity of the class-tiled kernel vs. the jnp oracle, with explicit
+    control of the block size so grid revisits are actually exercised."""
+    from repro.core.semantic_cache import (CacheConfig, CacheTable,
+                                           l2_normalize, lookup_all_layers_ref)
+    from repro.kernels.cache_lookup import cache_lookup_all_layers_tiled
+    key = jax.random.PRNGKey(seed)
+    entries = l2_normalize(jnp.abs(jax.random.normal(key, (L, I, d))))
+    cmask = np.asarray(
+        jax.random.bernoulli(jax.random.fold_in(key, 1), class_keep, (I,)),
+        bool).copy()
+    cmask[0] = True
+    lmask = np.asarray(
+        jax.random.bernoulli(jax.random.fold_in(key, 2), layer_keep, (L,)),
+        bool).copy()
+    lmask[0] = True
+    table = CacheTable(entries, jnp.asarray(cmask), jnp.asarray(lmask))
+    sems = jnp.abs(jax.random.normal(jax.random.fold_in(key, 3), (B, L, d)))
+    cfg = CacheConfig(num_classes=I, num_layers=L, sem_dim=d, theta=theta)
+    ref_out = lookup_all_layers_ref(table, sems, cfg)
+    scores, preds, exit_layer = cache_lookup_all_layers_tiled(
+        sems, table.entries, table.class_mask, table.layer_mask,
+        cfg.theta_vec(), alpha=cfg.alpha, i_block=i_block)
+    np.testing.assert_array_equal(np.asarray(exit_layer),
+                                  np.asarray(ref_out.exit_layer))
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(ref_out.scores),
+                               rtol=1e-4, atol=1e-5)
+    pred = np.take_along_axis(
+        np.asarray(preds),
+        np.minimum(np.asarray(exit_layer), L - 1)[:, None], axis=1)[:, 0]
+    np.testing.assert_array_equal(pred, np.asarray(ref_out.pred))
+    return ref_out
+
+
+@pytest.mark.parametrize("I", [1024, 4096, 16384])
+def test_tiled_lookup_parity_large_I(I):
+    # I = 4096/16384 with L=12, d=64 are past the single-pass VMEM ceiling
+    # at the real 16 MB budget when scaled to paper L·d; here we force small
+    # blocks so every case streams multiple entry slabs through "VMEM".
+    out = _tiled_case(37, I, 4, 32, theta=0.02, seed=I, i_block=512)
+    assert np.asarray(out.hit).any()
+
+
+@pytest.mark.parametrize("I", [300, 1000, 4097])
+def test_tiled_lookup_parity_unaligned_I(I):
+    # I neither a multiple of the block nor of I_TILE: padded classes must
+    # never win the top-2 or shift the argmax class ids.
+    _tiled_case(18, I, 5, 16, theta=0.02, seed=I, i_block=256)
+
+
+def test_tiled_lookup_accumulator_carry_across_revisits():
+    """Multiple batch tiles x multiple class blocks: the (B_TILE, L) top-2
+    scratch must reset at block 0 of every batch-tile revisit and carry
+    across the class blocks within one."""
+    out = _tiled_case(260, 1500, 5, 32, theta=0.02, seed=3, i_block=256,
+                      class_keep=0.6, layer_keep=0.8)
+    assert np.asarray(out.hit).any()
+
+
+@pytest.mark.parametrize("n_active", [1, 2])
+def test_tiled_lookup_few_active_classes_across_blocks(n_active):
+    """<2 active classes globally: m2 must stay at NEG through every block
+    merge so the Eq.-2 guard yields d=0 (no hit), even when the active
+    classes sit in different class blocks."""
+    from repro.core.semantic_cache import (CacheConfig, CacheTable,
+                                           l2_normalize, lookup_all_layers_ref)
+    from repro.kernels.cache_lookup import cache_lookup_all_layers_tiled
+    B, I, L, d = 16, 700, 4, 16
+    key = jax.random.PRNGKey(31 + n_active)
+    entries = l2_normalize(jnp.abs(jax.random.normal(key, (L, I, d))))
+    cmask = np.zeros(I, bool)
+    cmask[0] = True                      # block 0
+    if n_active == 2:
+        cmask[600] = True                # a later block (i_block=256)
+    table = CacheTable(entries, jnp.asarray(cmask), jnp.ones(L, bool))
+    sems = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (B, L, d)))
+    cfg = CacheConfig(num_classes=I, num_layers=L, sem_dim=d, theta=0.05)
+    ref_out = lookup_all_layers_ref(table, sems, cfg)
+    scores, preds, exit_layer = cache_lookup_all_layers_tiled(
+        sems, table.entries, table.class_mask, table.layer_mask,
+        cfg.theta_vec(), alpha=cfg.alpha, i_block=256)
+    np.testing.assert_array_equal(np.asarray(exit_layer),
+                                  np.asarray(ref_out.exit_layer))
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(ref_out.scores),
+                               rtol=1e-4, atol=1e-5)
+    if n_active == 1:
+        assert not np.asarray(ref_out.hit).any()   # guard must fire: no hits
+
+
+def test_tiled_lookup_single_block_degenerates_to_single_pass():
+    # i_block >= I: one class block — must equal the single-pass kernel.
+    from repro.core.semantic_cache import (CacheConfig, CacheTable,
+                                           l2_normalize, lookup_all_layers)
+    B, I, L, d = 24, 200, 4, 16
+    key = jax.random.PRNGKey(29)
+    entries = l2_normalize(jnp.abs(jax.random.normal(key, (L, I, d))))
+    table = CacheTable(entries, jnp.ones(I, bool), jnp.ones(L, bool))
+    sems = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (B, L, d)))
+    cfg = CacheConfig(num_classes=I, num_layers=L, sem_dim=d, theta=0.03)
+    single = lookup_all_layers(table, sems, cfg, impl="fused_single")
+    tiled = lookup_all_layers(table, sems, cfg, impl="fused_tiled")
+    np.testing.assert_array_equal(np.asarray(tiled.exit_layer),
+                                  np.asarray(single.exit_layer))
+    np.testing.assert_array_equal(np.asarray(tiled.pred),
+                                  np.asarray(single.pred))
+    np.testing.assert_allclose(np.asarray(tiled.scores),
+                               np.asarray(single.scores), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_lookup_dispatch_picks_tiled_past_vmem_ceiling():
+    from repro.kernels.common import pick_class_block, single_pass_fits
+    # Paper scale fits the single-pass kernel; the north-star huge-I regime
+    # must not.
+    assert single_pass_fits(24, 1024, 64)
+    assert not single_pass_fits(12, 8192, 64)
+    assert not single_pass_fits(24, 16384, 64)
+    # The chosen block is lane-aligned and its working set fits the budget.
+    from repro.kernels.common import (I_TILE, lookup_tiled_vmem_bytes,
+                                      vmem_budget_bytes)
+    for L, d in [(12, 64), (24, 64), (24, 128), (6, 32)]:
+        blk = pick_class_block(L, d)
+        assert blk % I_TILE == 0
+        assert lookup_tiled_vmem_bytes(L, blk, d) <= vmem_budget_bytes()
+
+
+# ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
 
