@@ -20,8 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (CacheConfig, SimulationConfig, bootstrap_server,
-                        calibrate, run_simulation)
+from repro.core import (CacheConfig, CocaCluster, FoggyCachePolicy,
+                        FrameBatch, LearnedCachePolicy, ReplacementPolicy,
+                        SimulationConfig, SMTMPolicy, calibrate)
 from repro.core.client import AbsorptionConfig
 from repro.data import (StreamConfig, dirichlet_client_priors, longtail_prior,
                         make_client_context, make_tap_model,
@@ -85,6 +86,8 @@ class PaperWorld:
         self.shared_labels = np.tile(np.arange(s.num_classes), 30)
         self.rng = np.random.default_rng(s.seed)
         self._ctr = 0
+        self._cal_taps = None            # cached shared-set (sems, logits)
+        self._servers = {}               # theta -> bootstrapped ServerState
 
     # ------------------------------------------------------------------ data
     def tap_shared(self, labels):
@@ -121,25 +124,51 @@ class PaperWorld:
         return fn
 
     # ------------------------------------------------------------------ runs
-    def coca(self, labels=None, *, theta=None, mem_budget=None,
-             dynamic_allocation=True, global_updates=True, static_layers=(),
-             absorb: AbsorptionConfig | None = None, rounds=None, p=2.0):
+    def cluster(self, *, policy=None, theta=None, mem_budget=None,
+                dynamic_allocation=True, global_updates=True,
+                static_layers=(), absorb: AbsorptionConfig | None = None,
+                frames=None, **cluster_kw) -> CocaCluster:
+        """A bootstrapped CocaCluster for this world; any policy plugs in."""
         s = self.s
         cache = CacheConfig(num_classes=s.num_classes, num_layers=s.num_layers,
                             sem_dim=s.sem_dim,
                             theta=theta if theta is not None else s.theta)
         sim = SimulationConfig(
-            cache=cache, round_frames=s.frames,
+            cache=cache,
+            round_frames=frames if frames is not None else s.frames,
             mem_budget=mem_budget if mem_budget is not None else s.mem_budget,
             dynamic_allocation=dynamic_allocation,
             global_updates=global_updates, static_layers=tuple(static_layers),
             absorb=absorb or AbsorptionConfig())
-        server = bootstrap_server(jax.random.PRNGKey(0), sim, self.tap_shared,
-                                  self.shared_labels, self.cm)
+        cluster = CocaCluster(sim, self.cm, policy=policy, **cluster_kw)
+        if self._cal_taps is None:
+            self._cal_taps = self.tap_shared(self.shared_labels)
+        # the profiled server only depends on theta here; share it across
+        # the many runs of a sweep instead of re-profiling each time
+        if cache.theta not in self._servers:
+            cluster.bootstrap(jax.random.PRNGKey(0), self._cal_taps,
+                              self.shared_labels)
+            self._servers[cache.theta] = cluster.server
+        else:
+            cluster.bootstrap(jax.random.PRNGKey(0), self._cal_taps,
+                              self.shared_labels,
+                              server=self._servers[cache.theta])
+        return cluster
+
+    def drive(self, cluster: CocaCluster, labels):
+        """Feed (rounds, clients, F) label streams through ``step()``."""
+        fn = self.tap_fn()
+        for r in range(labels.shape[0]):
+            cluster.step([FrameBatch(*fn(r, k, labels[r, k]),
+                                     labels=labels[r, k])
+                          for k in range(labels.shape[1])])
+        return cluster.result()
+
+    def coca(self, labels=None, *, policy=None, rounds=None, p=2.0, **kw):
+        """One CoCa run = cluster + stream (kwargs as in :meth:`cluster`)."""
         if labels is None:
             labels = self.client_labels(p=p, rounds=rounds)
-        return run_simulation(sim, server, self.tap_fn(), labels, self.cm,
-                              labels.shape[0], labels.shape[1])
+        return self.drive(self.cluster(policy=policy, **kw), labels)
 
     def edge_only(self, labels):
         """Full-model latency + accuracy on the same streams."""
@@ -154,54 +183,26 @@ class PaperWorld:
                 total += len(pred)
         return self.cm.full_latency(), correct / total
 
-    # shared per-method latency/accuracy runner for the baseline systems
+    # shared per-method latency/accuracy runner for the baseline systems:
+    # the same cluster.step() loop as CoCa, with only the policy swapped
+    def baseline_policy(self, method: str, **kw):
+        if method == "learned":
+            return LearnedCachePolicy(margin=kw.get("margin", 0.4))
+        if method == "foggy":
+            return FoggyCachePolicy()
+        if method == "smtm":
+            return SMTMPolicy()
+        if method in ("lru", "fifo", "rand"):
+            return ReplacementPolicy(policy=method, **kw)
+        raise KeyError(method)
+
     def run_baseline(self, method: str, labels, **kw):
-        from repro.core.baselines import FoggyCache, LearnedCache, SMTM
-        s = self.s
-        cache = CacheConfig(num_classes=s.num_classes,
-                            num_layers=s.num_layers, sem_dim=s.sem_dim,
-                            theta=kw.pop("theta", s.theta))
-        R, K, F = labels.shape
-        fn = self.tap_fn()
-        # shared-set bootstrap for entry-based baselines
-        sems_cal, _ = self.tap_shared(self.shared_labels)
-        from repro.core.server import profile_initial_cache
-        entries, _ = profile_initial_cache(sems_cal,
-                                           jnp.asarray(self.shared_labels),
-                                           s.num_classes)
-        entries = np.asarray(entries)
-        lat_sum = correct = hits = total = 0
-        per_client = {}
-        for k in range(K):
-            if method == "learned":
-                m = LearnedCache(cfg=cache, cm=self.cm,
-                                 exit_layers=list(range(1, s.num_layers, 3)),
-                                 margin=kw.get("margin", 0.4))
-                m.fit(np.asarray(sems_cal), self.shared_labels)
-            elif method == "foggy":
-                m = FoggyCache(cfg=cache, cm=self.cm,
-                               key_layer=s.num_layers - 1)
-            elif method == "smtm":
-                m = SMTM(cfg=cache, cm=self.cm, entries=entries.copy(),
-                         round_frames=F)
-            else:
-                raise KeyError(method)
-            per_client[k] = m
-        for r in range(R):
-            for k in range(K):
-                m = per_client[k]
-                sems, logits = fn(r, k, labels[r, k])
-                sems, logits = np.asarray(sems), np.asarray(logits)
-                if method == "learned":
-                    out = m.round(sems, logits, labels_for_refit=labels[r, k])
-                else:
-                    out = m.round(sems, logits)
-                lat_sum += out.latency.sum()
-                correct += (out.pred == labels[r, k]).sum()
-                hits += out.hit.sum()
-                total += len(out.pred)
-        return {"latency": lat_sum / total, "accuracy": correct / total,
-                "hit_ratio": hits / total}
+        theta = kw.pop("theta", None)
+        cluster = self.cluster(policy=self.baseline_policy(method, **kw),
+                               theta=theta, frames=labels.shape[2])
+        res = self.drive(cluster, labels)
+        return {"latency": res.avg_latency, "accuracy": res.accuracy,
+                "hit_ratio": res.hit_ratio}
 
 
 def world(quick: bool) -> PaperWorld:

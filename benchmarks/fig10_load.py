@@ -1,14 +1,19 @@
 """Fig. 10: system-load knobs — (a) the update cycle F; (b) server response
-latency vs. client count (M/D/1-style queueing over ACA service times)."""
+latency vs. client count (M/D/1-style queueing over ACA service times).
+
+Both halves speak the engine's policy interface: (a) re-drives the cluster at
+each F, (b) times ``AcaPolicy.allocate`` on a synthetic AllocationContext —
+the exact call the server makes once per client per round."""
 
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
 
 from benchmarks.common import row, world
-from repro.core import aca as aca_mod
+from repro.core import AcaPolicy, AllocationContext
 
 
 def run(quick: bool = False):
@@ -17,7 +22,6 @@ def run(quick: bool = False):
     rows = []
     # (a) update cycle F
     for F in ([80, 150] if quick else [75, 150, 300, 600]):
-        import dataclasses
         w2 = type(w)(dataclasses.replace(w.s, frames=F,
                                          rounds=max(2, s.rounds * s.frames // F)))
         labels = w2.client_labels()
@@ -26,7 +30,9 @@ def run(quick: bool = False):
                         accuracy=res.accuracy))
     # (b) server response latency vs clients: measure one ACA allocation,
     # then model request queueing at l = N/F requests per frame-time.
-    req = aca_mod.AllocationRequest(
+    policy = AcaPolicy()
+    ctx = AllocationContext(
+        round_index=0, client_index=0,
         phi_global=np.random.default_rng(0).uniform(0, 100, s.num_classes),
         tau=np.random.default_rng(1).integers(0, 900, s.num_classes),
         r_est=np.linspace(0.1, 0.9, s.num_layers),
@@ -36,7 +42,7 @@ def run(quick: bool = False):
     t0 = time.perf_counter()
     n_trials = 200
     for _ in range(n_trials):
-        aca_mod.aca_allocate(req)
+        policy.allocate(ctx)
     service_s = (time.perf_counter() - t0) / n_trials
     frame_time = w.cm.full_latency() / 1e3          # ms -> s scale factor
     for n in ([60, 160] if quick else [20, 60, 100, 160]):

@@ -1,10 +1,12 @@
 """Fig. 7: latency under non-IID levels p ∈ {0, 1, 2, 10} — CoCa vs SMTM vs
 Edge-Only.  Cache methods speed up as heterogeneity rises (per-client class
-concentration = more temporal locality); Edge-Only is flat."""
+concentration = more temporal locality); Edge-Only is flat.  CoCa and SMTM
+run through the same ``cluster.step()`` loop — only the policy differs."""
 
 from __future__ import annotations
 
 from benchmarks.common import row, world
+from repro.core import AcaPolicy, SMTMPolicy
 
 
 def run(quick: bool = False):
@@ -14,13 +16,14 @@ def run(quick: bool = False):
     for p in ps:
         labels = w.client_labels(p=p)
         lat0, acc0 = w.edge_only(labels)
-        res = w.coca(labels)
-        sm = w.run_baseline("smtm", labels)
+        res = w.coca(labels, policy=AcaPolicy())
+        sm = w.drive(w.cluster(policy=SMTMPolicy(),
+                               frames=labels.shape[2]), labels)
         rows.append(row(f"fig7/p={p:g}/edge", lat0, accuracy=acc0))
         rows.append(row(f"fig7/p={p:g}/coca", res.avg_latency,
                         accuracy=res.accuracy,
                         reduction=1 - res.avg_latency / lat0))
-        rows.append(row(f"fig7/p={p:g}/smtm", sm["latency"],
-                        accuracy=sm["accuracy"],
-                        reduction=1 - sm["latency"] / lat0))
+        rows.append(row(f"fig7/p={p:g}/smtm", sm.avg_latency,
+                        accuracy=sm.accuracy,
+                        reduction=1 - sm.avg_latency / lat0))
     return rows

@@ -1,17 +1,16 @@
 """Fig. 8: ACA vs LRU / FIFO / RAND replacement at matched memory budgets,
-on a long-tail 100-class-style stream."""
+on a long-tail 100-class-style stream.  All four methods run through the
+same ``cluster.step()`` loop — ACA as the allocation policy, the classical
+replacements via :class:`~repro.core.engine.ReplacementPolicy` (which reads
+entries from the same bootstrapped global table, isolating the *residency
+policy* exactly as the paper does)."""
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, world
-from repro.core import (CacheConfig, SimulationConfig, bootstrap_server,
-                        run_simulation)
-from repro.core.policies import PolicyCache, run_policy_round
-from repro.core.server import profile_initial_cache
+from repro.core import AcaPolicy, ReplacementPolicy
 from repro.data import longtail_prior
 
 
@@ -22,37 +21,16 @@ def run(quick: bool = False):
     labels = w.client_labels(prior=longtail_prior(s.num_classes, 90.0))
     entry_bytes = float(s.sem_dim * 4)
     sizes = [5, 15] if quick else [5, 15, 30, 45]
-    layers = list(np.linspace(0, L - 1, max(L // 3, 2)).round().astype(int))
-    cal, _ = w.tap_shared(w.shared_labels)
-    entries, _ = profile_initial_cache(cal, jnp.asarray(w.shared_labels),
-                                       s.num_classes)
-    entries_np = np.asarray(entries)
-    cache = CacheConfig(num_classes=s.num_classes, num_layers=L,
-                        sem_dim=s.sem_dim, theta=s.theta)
+    layers = tuple(np.linspace(0, L - 1, max(L // 3, 2)).round().astype(int))
     rows = []
-    R, K, F = labels.shape
     for cap in sizes:
         budget = cap * len(layers) * entry_bytes
-        res = w.coca(labels, mem_budget=budget)
+        res = w.coca(labels, policy=AcaPolicy(), mem_budget=budget)
         rows.append(row(f"fig8/size={cap}/aca", res.avg_latency,
                         accuracy=res.accuracy, hit=res.hit_ratio))
         for pol in ("lru", "fifo", "rand"):
-            rng = np.random.default_rng(7)
-            lat = correct = total = 0.0
-            caches = {k: [PolicyCache(capacity=cap, policy=pol)
-                          for _ in layers] for k in range(K)}
-            tables = {k: entries_np.copy() for k in range(K)}
-            fn = w.tap_fn()
-            for r in range(R):
-                for k in range(K):
-                    sems, logits = fn(r, k, labels[r, k])
-                    out = run_policy_round(caches[k], layers, tables[k],
-                                           np.asarray(sems),
-                                           np.asarray(logits), cache, w.cm,
-                                           rng)
-                    lat += out.latency.sum()
-                    correct += (out.pred == labels[r, k]).sum()
-                    total += len(out.pred)
-            rows.append(row(f"fig8/size={cap}/{pol}", lat / total,
-                            accuracy=correct / total))
+            out = w.drive(w.cluster(policy=ReplacementPolicy(
+                policy=pol, capacity=cap, layers=layers, seed=7)), labels)
+            rows.append(row(f"fig8/size={cap}/{pol}", out.avg_latency,
+                            accuracy=out.accuracy))
     return rows

@@ -1,26 +1,28 @@
-"""Fig. 9: component ablation — Normal / DCA-only / GCU-only / DCA+GCU."""
+"""Fig. 9: component ablation — Normal / DCA-only / GCU-only / DCA+GCU.
+
+The four variants are one engine with the allocation policy and the GCU flag
+swapped: Normal = static all-layer allocation without global merges, DCA
+swaps in Alg. 1, GCU turns the Eq.-4/5 merges back on."""
 
 from __future__ import annotations
 
 from benchmarks.common import row, world
+from repro.core import AcaPolicy, StaticPolicy
 
 
 def run(quick: bool = False):
     w = world(quick)
     labels = w.client_labels()
-    L = w.s.num_layers
-    all_layers = tuple(range(L))
+    all_layers = tuple(range(w.s.num_layers))
     variants = {
-        "normal": dict(dynamic_allocation=False, static_layers=all_layers,
-                       global_updates=False),
-        "dca": dict(dynamic_allocation=True, global_updates=False),
-        "gcu": dict(dynamic_allocation=False, static_layers=all_layers,
-                    global_updates=True),
-        "dca+gcu": dict(dynamic_allocation=True, global_updates=True),
+        "normal": (StaticPolicy(all_layers), False),
+        "dca": (AcaPolicy(), False),
+        "gcu": (StaticPolicy(all_layers), True),
+        "dca+gcu": (AcaPolicy(), True),
     }
     rows = []
-    for name, kw in variants.items():
-        res = w.coca(labels, **kw)
+    for name, (policy, gcu) in variants.items():
+        res = w.coca(labels, policy=policy, global_updates=gcu)
         rows.append(row(f"fig9/{name}", res.avg_latency,
                         accuracy=res.accuracy, hit=res.hit_ratio))
     return rows

@@ -9,13 +9,11 @@ plateau; more -> lookup bloat creeps latency back up.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, world
-from repro.core import (CacheConfig, SimulationConfig, bootstrap_server,
-                        run_simulation)
+from repro.core import StaticPolicy
 
 
 def run(quick: bool = False):
@@ -30,20 +28,14 @@ def run(quick: bool = False):
                s.num_classes] if quick else [5, 15, 25, 35, 50])
     for n in counts:
         n = min(n, s.num_classes)
-        cache = CacheConfig(num_classes=s.num_classes, num_layers=L,
-                            sem_dim=s.sem_dim, theta=s.theta)
-        sim = SimulationConfig(cache=cache, round_frames=s.frames,
-                               mem_budget=1e12, dynamic_allocation=False,
-                               static_layers=layers)
-        server = bootstrap_server(jax.random.PRNGKey(0), sim, w.tap_shared,
-                                  w.shared_labels, w.cm)
-        phi = np.asarray(server.phi_global)
+        cluster = w.cluster(policy=StaticPolicy(layers), mem_budget=1e12)
+        phi = np.asarray(cluster.server.phi_global)
         keep = np.zeros_like(phi)
         top = np.argsort(-phi)[:n]
         keep[top] = phi[top]
-        server = server._replace(phi_global=jnp.asarray(keep))
-        res = run_simulation(sim, server, w.tap_fn(), labels, w.cm,
-                             labels.shape[0], labels.shape[1])
+        cluster.attach_server(
+            cluster.server._replace(phi_global=jnp.asarray(keep)))
+        res = w.drive(cluster, labels)
         rows.append(row(f"table1/n={n}", res.avg_latency,
                         accuracy=res.accuracy, hit=res.hit_ratio))
     return rows

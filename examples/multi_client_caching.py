@@ -1,45 +1,51 @@
 """Multi-client collaborative caching at paper scale: 5 clients, non-IID +
-long-tail streams, CoCa vs every baseline, plus the DCA/GCU ablation.
+long-tail streams, CoCa vs every baseline through ONE ``cluster.step()``
+loop (only the policy differs), plus the DCA/GCU ablation.
 
-    PYTHONPATH=src python examples/multi_client_caching.py
+    PYTHONPATH=src python examples/multi_client_caching.py [--quick]
 """
 
+import argparse
 import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
-import numpy as np
-
-from benchmarks.common import PaperWorld
+from benchmarks.common import QUICK, PaperWorld
+from repro.core import AcaPolicy, StaticPolicy
 from repro.data import longtail_prior
 
-# paper scale: 50 classes, 12 cache layers, binding memory budget
-w = PaperWorld(clients=5, rounds=6)
+ap = argparse.ArgumentParser()
+ap.add_argument("--quick", action="store_true",
+                help="CI-sized world (20 classes, 3 clients)")
+args = ap.parse_args()
+
+# paper scale: 50 classes, 24 cache layers, binding memory budget
+w = (PaperWorld(QUICK, rounds=4) if args.quick
+     else PaperWorld(clients=5, rounds=6))
 labels = w.client_labels(prior=longtail_prior(w.s.num_classes, 90.0))
 lat0, acc0 = w.edge_only(labels)
 print(f"{'method':14s} {'latency':>9s} {'reduction':>9s} {'accuracy':>8s}")
 print(f"{'edge-only':14s} {lat0:8.2f}ms {0.0:8.1f}% {acc0:8.3f}")
 
-res = w.coca(labels)
+res = w.coca(labels, policy=AcaPolicy())
 print(f"{'CoCa':14s} {res.avg_latency:8.2f}ms "
       f"{100 * (1 - res.avg_latency / lat0):8.1f}% {res.accuracy:8.3f}")
 
+# the baselines are the same cluster loop with the policy swapped
 for m in ("smtm", "learned", "foggy"):
     out = w.run_baseline(m, labels)
     print(f"{m:14s} {out['latency']:8.2f}ms "
           f"{100 * (1 - out['latency'] / lat0):8.1f}% {out['accuracy']:8.3f}")
 
 print("\nablation (Fig. 9):")
-L = w.s.num_layers
-for name, kw in {
-    "normal": dict(dynamic_allocation=False, static_layers=tuple(range(L)),
-                   global_updates=False),
-    "DCA": dict(dynamic_allocation=True, global_updates=False),
-    "GCU": dict(dynamic_allocation=False, static_layers=tuple(range(L)),
-                global_updates=True),
-    "DCA+GCU": dict(dynamic_allocation=True, global_updates=True),
+all_layers = tuple(range(w.s.num_layers))
+for name, (policy, gcu) in {
+    "normal": (StaticPolicy(all_layers), False),
+    "DCA": (AcaPolicy(), False),
+    "GCU": (StaticPolicy(all_layers), True),
+    "DCA+GCU": (AcaPolicy(), True),
 }.items():
-    r = w.coca(labels, **kw)
+    r = w.coca(labels, policy=policy, global_updates=gcu)
     print(f"  {name:8s} latency {r.avg_latency:7.2f}ms "
           f"accuracy {r.accuracy:.3f} hit {r.hit_ratio:.3f}")

@@ -1,18 +1,18 @@
-"""Quickstart: the CoCa semantic cache in 60 lines.
+"""Quickstart: the CoCa engine API in 60 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a 20-class stream world, bootstraps the server from a shared dataset,
-runs five collaborative rounds for three clients, and prints the latency /
-accuracy / hit-ratio trajectory — the paper's mechanism end-to-end.
+Builds a 20-class stream world, bootstraps a CocaCluster from a shared
+dataset, streams five collaborative rounds for three clients through
+``cluster.step()``, and prints the latency / accuracy / hit-ratio
+trajectory — the paper's mechanism end-to-end via ``repro.api``.
 """
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (CacheConfig, SimulationConfig, bootstrap_server,
-                        calibrate, run_simulation)
+from repro import api
 from repro.data import (StreamConfig, dirichlet_client_priors,
                         make_client_context, make_tap_model,
                         perturb_tap_model, sample_class_sequence,
@@ -24,36 +24,44 @@ scfg = StreamConfig(num_classes=I, num_layers=L, sem_dim=D)
 tap_model = make_tap_model(jax.random.PRNGKey(0), scfg)
 calib_model = perturb_tap_model(jax.random.PRNGKey(42), tap_model)
 
-cost = calibrate(np.full(L + 1, 5.0), np.full(L, D), head_cost=1.0)
-sim = SimulationConfig(
-    cache=CacheConfig(num_classes=I, num_layers=L, sem_dim=D, theta=0.1),
+cost = api.calibrate(np.full(L + 1, 5.0), np.full(L, D), head_cost=1.0)
+sim = api.SimulationConfig(
+    cache=api.CacheConfig(num_classes=I, num_layers=L, sem_dim=D, theta=0.1),
     round_frames=F, mem_budget=20_000.0)
 
-server = bootstrap_server(
-    jax.random.PRNGKey(0), sim,
+# one session object; the allocation policy (Alg. 1) is a plug-in
+cluster = api.CocaCluster(sim, cost, policy=api.AcaPolicy())
+cluster.bootstrap(
+    jax.random.PRNGKey(0),
     lambda lab: synthesize_taps(jax.random.PRNGKey(1), calib_model,
                                 jnp.asarray(lab), scfg),
-    np.tile(np.arange(I), 30), cost)
+    np.tile(np.arange(I), 30))
 
 rng = np.random.default_rng(0)
 clients, rounds = 3, 5
 priors = dirichlet_client_priors(rng, clients, I, p=2.0)
-labels = np.stack([np.stack([sample_class_sequence(rng, priors[k], F, 0.9)
-                             for k in range(clients)])
-                   for _ in range(rounds)])
 ctxs = [make_client_context(jax.random.PRNGKey(100 + k), scfg)
         for k in range(clients)]
 counter = [0]
 
 
-def taps(r, k, lab):
+def taps(lab, k):
     counter[0] += 1
     return synthesize_taps(jax.random.PRNGKey(1000 + counter[0]), tap_model,
                            jnp.asarray(lab), scfg, context=ctxs[k])
 
 
-result = run_simulation(sim, server, taps, labels, cost, rounds, clients)
-print(f"edge-only latency : {cost.full_latency():6.2f} ms")
+for r in range(rounds):
+    batches = []
+    for k in range(clients):
+        lab = sample_class_sequence(rng, priors[k], F, 0.9)
+        batches.append(api.FrameBatch(*taps(lab, k), labels=lab))
+    metrics = cluster.step(batches)                 # canonical RoundMetrics
+    print(f"round {r}: latency {metrics.avg_latency:6.2f} ms "
+          f"accuracy {metrics.accuracy:.3f} hit {metrics.hit_ratio:.3f}")
+
+result = cluster.result()
+print(f"\nedge-only latency : {cost.full_latency():6.2f} ms")
 print(f"CoCa avg latency  : {result.avg_latency:6.2f} ms "
       f"({100 * (1 - result.avg_latency / cost.full_latency()):.1f}% reduction)")
 print(f"accuracy          : {result.accuracy:.3f}")

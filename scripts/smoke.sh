@@ -11,3 +11,7 @@ python -m pytest -q
 
 echo "== quick benchmarks =="
 python -m benchmarks.run --quick
+
+echo "== public API examples =="
+python examples/quickstart.py
+python examples/multi_client_caching.py --quick

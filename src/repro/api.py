@@ -1,0 +1,26 @@
+"""The public CoCa engine API — one import for the whole session surface.
+
+    from repro import api
+
+    sim = api.SimulationConfig(cache=api.CacheConfig(...), ...)
+    cluster = api.CocaCluster(sim, cost_model, policy=api.AcaPolicy())
+    cluster.bootstrap(key, tap_shared, shared_labels)
+    metrics = cluster.step(frames)        # canonical api.RoundMetrics
+    summary = cluster.result()
+
+See docs/api.md for the lifecycle walkthrough and the migration table from
+the legacy ``run_simulation`` entry points.
+"""
+
+from repro.core.cost_model import CostModel, calibrate  # noqa: F401
+from repro.core.client import AbsorptionConfig  # noqa: F401
+from repro.core.engine import (  # noqa: F401
+    AcaPolicy, AdaptiveAbsorption, AllocationContext, AllocationPolicy,
+    ClientEngineContext, ClientEnginePolicy, CocaCluster, FixedPolicy,
+    FoggyCachePolicy, LearnedCachePolicy, ReplacementPolicy, SLOTheta,
+    SMTMPolicy, SimulationConfig, SimulationResult, StaticPolicy, ThetaPolicy,
+    bootstrap_server, bootstrap_server_from_taps, resolve_policy,
+)
+from repro.core.metrics import FrameBatch, RoundMetrics  # noqa: F401
+from repro.core.semantic_cache import CacheConfig, CacheTable  # noqa: F401
+from repro.core.server import ServerConfig, ServerState  # noqa: F401

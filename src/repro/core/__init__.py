@@ -1,4 +1,9 @@
-"""CoCa core — the paper's primary contribution as composable JAX modules."""
+"""CoCa core — the paper's primary contribution as composable JAX modules.
+
+The session-style entry point is :class:`repro.core.engine.CocaCluster`
+(also exported as :mod:`repro.api`); ``run_simulation`` /
+``run_simulation_reference`` survive as deprecated thin wrappers over it.
+"""
 from repro.core.semantic_cache import (  # noqa: F401
     CacheConfig, CacheTable, LookupResult, allocate_subtable, cosine_scores,
     discriminative_score, empty_table, l2_normalize, lookup_all_layers,
@@ -17,7 +22,14 @@ from repro.core.aca import (  # noqa: F401
     select_cache_layers, select_hotspot_classes,
 )
 from repro.core.cost_model import CostModel, calibrate, frame_latency  # noqa: F401
+from repro.core.metrics import FrameBatch, RoundMetrics  # noqa: F401
+from repro.core.engine import (  # noqa: F401
+    AcaPolicy, AdaptiveAbsorption, AllocationContext, AllocationPolicy,
+    ClientEngineContext, ClientEnginePolicy, CocaCluster, FixedPolicy,
+    FoggyCachePolicy, LearnedCachePolicy, ReplacementPolicy, SLOTheta,
+    SMTMPolicy, SimulationConfig, SimulationResult, StaticPolicy,
+    bootstrap_server, bootstrap_server_from_taps, resolve_policy, round_step,
+)
 from repro.core.simulation import (  # noqa: F401
-    SimulationConfig, SimulationResult, bootstrap_server, run_simulation,
-    run_simulation_reference,
+    run_simulation, run_simulation_reference,
 )

@@ -5,7 +5,11 @@ computed inline by the benchmarks.
 All three expose the same per-round interface as the CoCa client so the
 benchmarks drive them through one code path:
 
-    round(sems (F, L, d), logits (F, C)) -> (pred, hit, exit_layer, latency)
+    round(sems (F, L, d), logits (F, C)) -> RoundMetrics (per-frame record)
+
+and each has a policy adapter in :mod:`repro.core.engine`
+(``FoggyCachePolicy`` / ``SMTMPolicy`` / ``LearnedCachePolicy``) that runs it
+through the same ``CocaCluster.step()`` loop as CoCa itself.
 
 * **LearnedCache** — multi-exit heads: a linear classifier per exit layer,
   closed-form ridge fit on the shared dataset; exits when top-2 probability
@@ -24,12 +28,13 @@ benchmarks drive them through one code path:
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+import warnings
 
 import numpy as np
 
 from repro.core import aca as aca_mod
 from repro.core.cost_model import CostModel
+from repro.core.metrics import RoundMetrics
 from repro.core.semantic_cache import CacheConfig
 
 _EPS = 1e-8
@@ -39,11 +44,13 @@ def _norm_rows(x: np.ndarray) -> np.ndarray:
     return x / (np.linalg.norm(x, axis=-1, keepdims=True) + _EPS)
 
 
-class RoundResult(NamedTuple):
-    pred: np.ndarray
-    hit: np.ndarray
-    exit_layer: np.ndarray
-    latency: np.ndarray
+def __getattr__(name: str):
+    if name == "RoundResult":   # pre-engine duplicate of the round record
+        warnings.warn("RoundResult is now the canonical "
+                      "repro.core.metrics.RoundMetrics",
+                      DeprecationWarning, stacklevel=2)
+        return RoundMetrics
+    raise AttributeError(name)
 
 
 # ---------------------------------------------------------------------------
@@ -88,7 +95,7 @@ class LearnedCache:
             self.retrain_rounds * 300, 1)
 
     def round(self, sems: np.ndarray, logits: np.ndarray,
-              labels_for_refit: np.ndarray | None = None) -> RoundResult:
+              labels_for_refit: np.ndarray | None = None) -> RoundMetrics:
         F = sems.shape[0]
         L = self.cfg.num_layers
         blocks = np.asarray(self.cm.block_costs)
@@ -126,7 +133,8 @@ class LearnedCache:
                 self.fit(np.concatenate(self._buf_x),
                          np.concatenate(self._buf_y))
                 self._buf_x, self._buf_y = [], []
-        return RoundResult(pred, hit, exit_layer, latency)
+        return RoundMetrics.single(pred, hit, exit_layer, latency,
+                                   num_layers=L)
 
 
 # ---------------------------------------------------------------------------
@@ -207,7 +215,7 @@ class FoggyCache:
         self.local = _KnnStore(self.local_capacity)
         self.server = _KnnStore(self.server_capacity)
 
-    def round(self, sems: np.ndarray, logits: np.ndarray) -> RoundResult:
+    def round(self, sems: np.ndarray, logits: np.ndarray) -> RoundMetrics:
         F = sems.shape[0]
         L = self.cfg.num_layers
         blocks = np.asarray(self.cm.block_costs)
@@ -238,7 +246,8 @@ class FoggyCache:
                 self.server.insert(key, int(pred[f]))
             self.local.insert(key, int(pred[f]))
             latency[f] = lat
-        return RoundResult(pred, hit, exit_layer, latency)
+        return RoundMetrics.single(pred, hit, exit_layer, latency,
+                                   num_layers=L)
 
 
 # ---------------------------------------------------------------------------
@@ -260,7 +269,7 @@ class SMTM:
         self.phi_local = np.zeros(self.cfg.num_classes)
         self.tau = np.zeros(self.cfg.num_classes)
 
-    def round(self, sems: np.ndarray, logits: np.ndarray) -> RoundResult:
+    def round(self, sems: np.ndarray, logits: np.ndarray) -> RoundMetrics:
         import jax.numpy as jnp
         from repro.core.semantic_cache import CacheTable, lookup_all_layers
 
@@ -297,4 +306,5 @@ class SMTM:
             self.tau += 1
             self.tau[c] = 0
             self.phi_local[c] += 1
-        return RoundResult(pred, hit, exit_layer, lat)
+        return RoundMetrics.single(pred, hit, exit_layer, lat,
+                                   num_layers=L)

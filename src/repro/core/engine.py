@@ -1,0 +1,926 @@
+"""One CoCa engine: the policy-pluggable :class:`CocaCluster` session object.
+
+The paper's system is a single loop — clients stream frames through cache
+layers, the server periodically merges a 2-D global cache (Eq. 4/5) and
+re-allocates per-client sub-tables (Alg. 1) — and this module is that loop's
+one implementation.  Everything else (the ``run_simulation`` wrappers, the
+figure scripts, the baseline studies, the serving path's table plumbing)
+drives it through the same three calls:
+
+    cluster = CocaCluster(sim, cost_model, policy=AcaPolicy())
+    cluster.bootstrap(key, tap_shared, shared_labels)
+    for round_frames in stream:                  # any F, even ragged per client
+        metrics = cluster.step(round_frames)     # -> canonical RoundMetrics
+    summary = cluster.result()                   # -> SimulationResult
+
+Three pluggable axes:
+
+* **Allocation policies** decide each client's cache table at round start:
+  :class:`AcaPolicy` (Alg. 1), :class:`StaticPolicy` (budget-truncated fixed
+  layers — the DCA-off ablation), :class:`FixedPolicy` (frozen explicit
+  allocation).  The protocol is one method,
+  ``allocate(ctx: AllocationContext) -> (L, I) bool``.
+* **Client-engine policies** swap the whole client round for a baseline
+  system (:class:`FoggyCachePolicy`, :class:`SMTMPolicy`,
+  :class:`LearnedCachePolicy`, :class:`ReplacementPolicy` for LRU/FIFO/RAND)
+  while the cluster keeps the loop, the data plumbing and the metrics — the
+  paper's §VI comparisons as a policy swap.
+* **Per-round controllers**: ``theta_policy`` adapts Θ between rounds from
+  observed metrics (:class:`SLOTheta`, backed by the serving scheduler's
+  ``ThetaController``); ``absorption_policy`` re-derives the Γ/Δ absorption
+  thresholds from the shared validation set
+  (:class:`AdaptiveAbsorption`, wiring :mod:`repro.core.adaptive_thresholds`).
+
+The round itself is decomposed into pure, jit-friendly pieces —
+:func:`round_step` (vmapped client round → upload → ``lax.scan`` Eq.-4/5
+merge, one device computation, one bundled ``device_get``) — plus a thin host
+driver.  ``step()`` accepts variable-length frame batches: a new uniform F
+just retraces, ragged per-client F falls back to the per-client reference
+path (same round semantics, bit-identical metrics).  The ``mesh=`` class
+sharding of the server cache (:mod:`repro.distributed.sharding`) threads
+through unchanged: one all-gather per round at subtable allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Protocol, Sequence, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aca as aca_mod
+from repro.core.adaptive_thresholds import ThresholdTarget, calibrate_absorption
+from repro.core.client import (AbsorptionConfig, ClientState, init_client,
+                               make_upload, reset_round, run_round)
+from repro.core.cost_model import CostModel, frame_latency
+from repro.core.metrics import FrameBatch, RoundMetrics
+from repro.core.semantic_cache import (CacheConfig, CacheTable,
+                                       allocate_subtable, lookup_all_layers)
+from repro.core.server import (ServerConfig, ServerState, global_update,
+                               global_update_body, init_server,
+                               profile_initial_cache)
+
+# --------------------------------------------------------------------------
+# Configuration and result records (the session-level types)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SimulationConfig:
+    cache: CacheConfig
+    absorb: AbsorptionConfig = AbsorptionConfig()
+    server: ServerConfig = ServerConfig()
+    round_frames: int = 300                  # F (nominal cycle; Eq.-10 unit)
+    mem_budget: float = 64_000.0             # Π (bytes) per client
+    dynamic_allocation: bool = True          # DCA (Fig. 9 ablation)
+    global_updates: bool = True              # GCU (Fig. 9 ablation)
+    static_layers: tuple[int, ...] = ()      # used when DCA is off
+    straggler_deadline: float | None = None  # seconds; None = no deadline
+
+
+class SimulationResult(NamedTuple):
+    avg_latency: float
+    accuracy: float
+    hit_ratio: float
+    hit_accuracy: float
+    per_round_latency: np.ndarray
+    per_round_accuracy: np.ndarray
+    exit_histogram: np.ndarray
+    server: ServerState | None
+
+
+# TapFn: (round_index, client_index, labels) -> (sems (F,L,d), logits (F,C))
+TapFn = Callable[[int, int, np.ndarray], tuple[jax.Array, jax.Array]]
+
+
+# --------------------------------------------------------------------------
+# Allocation policies (table-cutting: ACA / static / fixed)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AllocationContext:
+    """The server's round-start view for one client — Alg. 1's inputs."""
+
+    round_index: int
+    client_index: int
+    phi_global: np.ndarray     # (I,) Φ — global class frequencies
+    tau: np.ndarray            # (I,) τᵏ — this client's recency timestamps
+    r_est: np.ndarray          # (L,) R — expected per-layer hit ratios
+    upsilon: np.ndarray        # (L,) Υ — saved seconds on a hit at layer j
+    entry_sizes: np.ndarray    # (L,) bytes per cache entry at layer j
+    mem_budget: float          # Π — client cache-size threshold in bytes
+    round_frames: int          # F — nominal update cycle (Eq. 10 recency unit)
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.r_est)
+
+    @property
+    def num_classes(self) -> int:
+        return len(self.phi_global)
+
+
+@runtime_checkable
+class AllocationPolicy(Protocol):
+    """Decides one client's cache allocation at a round boundary."""
+
+    def allocate(self, ctx: AllocationContext) -> np.ndarray:
+        """Return the (L, I) boolean allocation indicator Xᵏ."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class AcaPolicy:
+    """Algorithm 1 — the paper's Adaptive Cache Allocation."""
+
+    name = "aca"
+
+    def allocate(self, ctx: AllocationContext) -> np.ndarray:
+        return aca_mod.aca_allocate(aca_mod.AllocationRequest(
+            phi_global=ctx.phi_global, tau=ctx.tau, r_est=ctx.r_est,
+            upsilon=ctx.upsilon, entry_sizes=ctx.entry_sizes,
+            mem_budget=ctx.mem_budget, round_frames=ctx.round_frames))
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticPolicy:
+    """DCA-off baseline (§VI.G): Eq.-10 hot-spot classes at a fixed layer
+    set, truncated so the fixed layers fit the same byte budget Π."""
+
+    layers: tuple[int, ...] = ()
+    name = "static"
+
+    def allocate(self, ctx: AllocationContext) -> np.ndarray:
+        scores = aca_mod.class_scores(ctx.phi_global, ctx.tau,
+                                      ctx.round_frames)
+        hot = aca_mod.select_hotspot_classes(scores)
+        sizes = ctx.entry_sizes
+        per_class = float(sum(sizes[j] for j in self.layers)) or 1.0
+        max_classes = max(int(ctx.mem_budget // per_class), 1)
+        return aca_mod.fixed_allocate(hot[:max_classes], list(self.layers),
+                                      ctx.num_layers, ctx.num_classes)
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPolicy:
+    """Completely frozen allocation: explicit classes at explicit layers."""
+
+    classes: tuple[int, ...]
+    layers: tuple[int, ...]
+    name = "fixed"
+
+    def allocate(self, ctx: AllocationContext) -> np.ndarray:
+        return aca_mod.fixed_allocate(np.asarray(self.classes, int),
+                                      list(self.layers),
+                                      ctx.num_layers, ctx.num_classes)
+
+
+# --------------------------------------------------------------------------
+# Client-engine policies (baseline systems behind the same loop)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientEngineContext:
+    """What the cluster hands a baseline adapter to build one client engine."""
+
+    cache: CacheConfig
+    cost_model: CostModel
+    entries: np.ndarray | None       # (L, I, d) bootstrap centroids, if any
+    round_frames: int
+    shared: tuple | None             # (sems, logits, labels) calibration set
+    client_index: int
+    num_clients: int
+
+
+class ClientEnginePolicy(Protocol):
+    """Swaps the whole client round for a baseline system.
+
+    ``make_engine`` builds one per-client engine at first ``step()``;
+    ``run_round`` drives it for one :class:`FrameBatch` and returns a
+    single-client :class:`RoundMetrics` (the cluster stamps labels/client).
+    Engine policies bypass the global-cache merge — their cross-client
+    sharing (if any) lives inside the engines, as in the original systems.
+    """
+
+    def make_engine(self, ctx: ClientEngineContext): ...
+
+    def run_round(self, engine, batch: FrameBatch) -> RoundMetrics: ...
+
+
+def _require_entries(ctx: ClientEngineContext, who: str) -> np.ndarray:
+    if ctx.entries is None:
+        raise RuntimeError(
+            f"{who} needs the bootstrapped global table: call "
+            "cluster.bootstrap(...) (or attach_server) before step()")
+    return ctx.entries
+
+
+@dataclasses.dataclass
+class FoggyCachePolicy:
+    """FoggyCache (§VI.B) behind ``cluster.step()``: A-LSH + H-kNN reuse with
+    a server-side store consulted on local misses."""
+
+    key_layer: int | None = None     # default: the deepest tap
+    k: int = 5
+    homogeneity: float = 0.6
+    local_capacity: int = 200
+    server_capacity: int = 2000
+    network_cost: float = 0.0
+    seed: int = 0
+    name = "foggy"
+
+    def make_engine(self, ctx: ClientEngineContext):
+        from repro.core.baselines import FoggyCache
+        key_layer = (self.key_layer if self.key_layer is not None
+                     else ctx.cache.num_layers - 1)
+        return FoggyCache(cfg=ctx.cache, cm=ctx.cost_model,
+                          key_layer=key_layer, k=self.k,
+                          homogeneity=self.homogeneity,
+                          local_capacity=self.local_capacity,
+                          server_capacity=self.server_capacity,
+                          network_cost=self.network_cost,
+                          seed=self.seed + ctx.client_index)
+
+    def run_round(self, engine, batch: FrameBatch) -> RoundMetrics:
+        return engine.round(np.asarray(batch.sems), np.asarray(batch.logits))
+
+
+@dataclasses.dataclass
+class SMTMPolicy:
+    """SMTM (§VI.B): single-client semantic cache, local hot-spot ranking,
+    local EMA entry maintenance — no global merge, no layer selection."""
+
+    ema: float = 0.9
+    name = "smtm"
+
+    def make_engine(self, ctx: ClientEngineContext):
+        from repro.core.baselines import SMTM
+        entries = _require_entries(ctx, "SMTMPolicy")
+        return SMTM(cfg=ctx.cache, cm=ctx.cost_model, entries=entries.copy(),
+                    ema=self.ema, round_frames=ctx.round_frames)
+
+    def run_round(self, engine, batch: FrameBatch) -> RoundMetrics:
+        return engine.round(np.asarray(batch.sems), np.asarray(batch.logits))
+
+
+@dataclasses.dataclass
+class LearnedCachePolicy:
+    """LearnedCache (§VI.B): per-exit linear heads, periodically refit —
+    the refit bill amortised into per-frame latency."""
+
+    exit_layers: tuple[int, ...] | None = None   # default range(1, L, 3)
+    margin: float = 0.4
+    retrain_rounds: int = 3
+    name = "learned"
+
+    def make_engine(self, ctx: ClientEngineContext):
+        from repro.core.baselines import LearnedCache
+        if ctx.shared is None:
+            raise RuntimeError(
+                "LearnedCachePolicy needs the shared calibration set for the "
+                "initial head fit: call cluster.bootstrap(...) first")
+        exits = (self.exit_layers if self.exit_layers is not None
+                 else tuple(range(1, ctx.cache.num_layers, 3)))
+        m = LearnedCache(cfg=ctx.cache, cm=ctx.cost_model,
+                         exit_layers=list(exits), margin=self.margin,
+                         retrain_rounds=self.retrain_rounds)
+        sems, _, labels = ctx.shared
+        m.fit(np.asarray(sems), np.asarray(labels))
+        return m
+
+    def run_round(self, engine, batch: FrameBatch) -> RoundMetrics:
+        return engine.round(np.asarray(batch.sems), np.asarray(batch.logits),
+                            labels_for_refit=np.asarray(batch.labels))
+
+
+class _ReplacementEngine:
+    def __init__(self, caches, layers, table, cfg, cm, rng, insert_observed):
+        self.caches, self.layers, self.table = caches, layers, table
+        self.cfg, self.cm, self.rng = cfg, cm, rng
+        self.insert_observed = insert_observed
+
+    def round(self, sems: np.ndarray, logits: np.ndarray) -> RoundMetrics:
+        from repro.core.policies import run_policy_round
+        return run_policy_round(self.caches, self.layers, self.table,
+                                sems, logits, self.cfg, self.cm, self.rng,
+                                insert_observed=self.insert_observed)
+
+
+@dataclasses.dataclass
+class ReplacementPolicy:
+    """Classical replacement (LRU / FIFO / RAND, §VI.G) at fixed layers,
+    reading entries from the same bootstrapped global table as CoCa — the
+    ACA-vs-replacement comparison of Fig. 8 as a policy swap."""
+
+    policy: str = "lru"              # "lru" | "fifo" | "rand"
+    capacity: int = 15               # max classes resident per layer
+    layers: tuple[int, ...] | None = None
+    insert_observed: bool = False
+    seed: int = 7
+
+    @property
+    def name(self) -> str:
+        return self.policy
+
+    def make_engine(self, ctx: ClientEngineContext):
+        from repro.core.policies import PolicyCache
+        # one shared stream across a cluster's clients (the Fig. 8 study),
+        # restarted at client 0 so each cluster replays the same seed
+        if ctx.client_index == 0:
+            self._rng = np.random.default_rng(self.seed)
+        L = ctx.cache.num_layers
+        layers = (list(self.layers) if self.layers is not None else
+                  list(np.linspace(0, L - 1, max(L // 3, 2))
+                       .round().astype(int)))
+        entries = _require_entries(ctx, "ReplacementPolicy")
+        caches = [PolicyCache(capacity=self.capacity, policy=self.policy)
+                  for _ in layers]
+        return _ReplacementEngine(caches, layers, entries.copy(), ctx.cache,
+                                  ctx.cost_model, self._rng,
+                                  self.insert_observed)
+
+    def run_round(self, engine, batch: FrameBatch) -> RoundMetrics:
+        return engine.round(np.asarray(batch.sems), np.asarray(batch.logits))
+
+
+def resolve_policy(policy, sim: SimulationConfig):
+    """Resolve ``policy=`` inputs: None (from the config's DCA flags), a
+    registry name, or a policy object (returned unchanged)."""
+    if policy is None:
+        return (AcaPolicy() if sim.dynamic_allocation
+                else StaticPolicy(tuple(sim.static_layers)))
+    if isinstance(policy, str):
+        name = policy.lower()
+        if name == "aca":
+            return AcaPolicy()
+        if name == "static":
+            return StaticPolicy(tuple(sim.static_layers))
+        if name == "foggy":
+            return FoggyCachePolicy()
+        if name == "smtm":
+            return SMTMPolicy()
+        if name == "learned":
+            return LearnedCachePolicy()
+        if name in ("lru", "fifo", "rand"):
+            return ReplacementPolicy(policy=name)
+        raise KeyError(f"unknown policy name: {policy!r} (known: aca, "
+                       "static, foggy, smtm, learned, lru, fifo, rand)")
+    return policy
+
+
+# --------------------------------------------------------------------------
+# Per-round controllers (theta / absorption thresholds)
+# --------------------------------------------------------------------------
+
+
+class ThetaPolicy(Protocol):
+    """Between-round Θ adaptation from observed round metrics."""
+
+    def update(self, metrics: RoundMetrics, theta: float) -> float: ...
+
+
+@dataclasses.dataclass
+class SLOTheta:
+    """Adapt Θ to a per-frame latency SLO via the serving scheduler's
+    bang-bang :class:`~repro.serving.scheduler.ThetaController`: attainment
+    below target lowers Θ (more early exits), slack raises it (accuracy)."""
+
+    slo_latency: float               # per-frame latency budget (seconds)
+    target: float = 0.95
+    margin: float = 0.02
+    step: float = 0.1
+    lo: float = 0.01
+    hi: float = 0.5
+    _ctl: object = dataclasses.field(default=None, repr=False)
+
+    def update(self, metrics: RoundMetrics, theta: float) -> float:
+        from repro.serving.scheduler import ThetaController
+        if self._ctl is None:
+            self._ctl = ThetaController(theta=theta, target=self.target,
+                                        margin=self.margin, step=self.step,
+                                        lo=self.lo, hi=self.hi)
+        attainment = float((metrics.latency <= self.slo_latency).mean())
+        # quantised so repeated values re-hit the jit cache
+        return round(self._ctl.update(attainment), 6)
+
+
+class AbsorptionPolicy(Protocol):
+    """Between-round Γ/Δ recalibration; returns a new AbsorptionConfig."""
+
+    def update(self, cluster: "CocaCluster") -> AbsorptionConfig | None: ...
+
+
+@dataclasses.dataclass
+class AdaptiveAbsorption:
+    """Re-derive the Γ/Δ absorption thresholds each round from the server's
+    shared validation set replayed against the *current* global cache
+    (:mod:`repro.core.adaptive_thresholds` — the §VI.D sweep, automated).
+
+    ``+inf`` thresholds mean "absorb nothing" — the calibrator could not find
+    a threshold meeting the accuracy bar; values are quantised so unchanged
+    thresholds re-hit the jit cache.
+    """
+
+    target: ThresholdTarget = ThresholdTarget()
+    every: int = 1                   # recalibrate every N rounds
+    decimals: int = 3
+
+    def update(self, cluster: "CocaCluster") -> AbsorptionConfig | None:
+        if cluster.round_index % self.every:
+            return None
+        if cluster._shared is None or cluster.server is None:
+            return None
+        sems, logits, labels = cluster._shared
+        cfg = cluster.sim.cache
+        full = CacheTable(
+            entries=cluster._gathered_entries(),
+            class_mask=jnp.ones(cfg.num_classes, bool),
+            layer_mask=jnp.ones(cfg.num_layers, bool))
+        look = lookup_all_layers(full, jnp.asarray(sems), cfg)
+        hit = np.asarray(look.hit)
+        scores = np.asarray(look.scores)
+        el = np.minimum(np.asarray(look.exit_layer), cfg.num_layers - 1)
+        d_at_exit = scores[np.arange(len(el)), el]
+        cache_pred = np.asarray(look.pred)
+
+        logits_np = np.asarray(logits)
+        z = logits_np - logits_np.max(axis=1, keepdims=True)
+        p = np.exp(z)
+        p /= p.sum(axis=1, keepdims=True)
+        top2 = -np.sort(-p, axis=1)[:, :2]
+        margin = top2[:, 0] - top2[:, 1]
+        model_pred = logits_np.argmax(axis=1)
+        labels = np.asarray(labels)
+
+        gamma, delta = calibrate_absorption(
+            d_at_exit[hit], (cache_pred == labels)[hit],
+            margin[~hit], (model_pred == labels)[~hit], self.target)
+        q = (lambda v: float(v) if not np.isfinite(v)
+             else round(float(v), self.decimals))
+        cur = cluster.sim.absorb
+        return AbsorptionConfig(gamma_hit=q(gamma), delta_miss=q(delta),
+                                beta=cur.beta)
+
+
+# --------------------------------------------------------------------------
+# Pure round-step functions (the decomposed device computation)
+# --------------------------------------------------------------------------
+
+
+def _stack_tables(tables: list[CacheTable]) -> CacheTable:
+    return CacheTable(*(jnp.stack(leaf) for leaf in zip(*tables)))
+
+
+def _init_clients_batched(cfg: CacheConfig, num_clients: int) -> ClientState:
+    one = init_client(cfg)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (num_clients,) + x.shape), one)
+
+
+@partial(jax.jit, static_argnames=("cfg", "absorb", "scfg", "cm",
+                                   "global_updates", "deadline"))
+def round_step(states: ClientState, tables: CacheTable, sems: jax.Array,
+               logits: jax.Array, server: ServerState,
+               *, cfg: CacheConfig, absorb: AbsorptionConfig,
+               scfg: ServerConfig, cm: CostModel, global_updates: bool,
+               deadline: float | None):
+    """One full round for all K clients as a single device computation:
+    client round (vmapped) → uploads → Eq.-4/5 merges (``lax.scan``, client
+    order preserved).
+
+    ``states``/``tables``/``sems``/``logits`` carry a leading client axis K.
+    Returns ``(new states, new server, per-frame metrics dict)`` — the
+    metrics are (K, F) arrays (pred / hit / exit_layer / lat); nothing here
+    forces a host sync.
+    """
+    states = reset_round(states)                     # elementwise, vmap-free
+
+    out = jax.vmap(lambda s, t, se, lo: run_round(s, t, se, lo, cfg, absorb))(
+        states, tables, sems, logits)
+
+    n_hot = tables.class_mask.sum(axis=1)                          # (K,)
+    lat = jax.vmap(lambda e, lm, nh: frame_latency(cm, e, lm, nh))(
+        out.exit_layer, tables.layer_mask, n_hot)                  # (K, F)
+
+    metrics = {"pred": out.pred, "hit": out.hit,
+               "exit_layer": out.exit_layer, "lat": lat}
+
+    if global_updates:
+        if deadline is None:
+            include = jnp.ones((lat.shape[0],), bool)
+        else:
+            include = lat.sum(axis=1) <= deadline
+        uploads = make_upload(out.state)             # leading K axis on leaves
+
+        def merge(srv, inp):
+            up, inc = inp
+            new = global_update_body(srv, up, scfg)
+            srv = jax.tree_util.tree_map(
+                lambda n, o: jnp.where(inc, n, o), new, srv)
+            return srv, None
+
+        server, _ = jax.lax.scan(merge, server, (uploads, include))
+
+    return out.state, server, metrics
+
+
+# --------------------------------------------------------------------------
+# Server bootstrap (§III.3, §V.A)
+# --------------------------------------------------------------------------
+
+
+def bootstrap_server_from_taps(sim: SimulationConfig, sems: jax.Array,
+                               shared_labels: np.ndarray,
+                               cost_model: CostModel,
+                               r0: np.ndarray | None = None,
+                               mesh=None) -> ServerState:
+    """Server warm start from already-synthesised shared-set taps.
+
+    Entries = per-class per-layer centroids of the shared set; R = profiled
+    first-hit CDF measured by replaying the shared set against the freshly
+    built full table ("empirical relation tested on a shared dataset").
+
+    With ``mesh`` the profiled table is built class-sharded and the returned
+    ServerState lives on the mesh; the R-profiling replay (a dense full-table
+    lookup, same shape of work as subtable allocation) gathers first.
+    """
+    entries, counts = profile_initial_cache(sems, jnp.asarray(shared_labels),
+                                            sim.cache.num_classes, mesh=mesh)
+    if r0 is None:
+        lookup_entries = entries
+        if mesh is not None:
+            from repro.distributed.sharding import gather_cache
+            lookup_entries = gather_cache(entries, mesh)
+        full = CacheTable(entries=lookup_entries,
+                          class_mask=jnp.ones(sim.cache.num_classes, bool),
+                          layer_mask=jnp.ones(sim.cache.num_layers, bool))
+        look = lookup_all_layers(full, sems, sim.cache)
+        first = np.bincount(np.asarray(look.exit_layer),
+                            minlength=sim.cache.num_layers + 1)[:-1]
+        r0 = np.cumsum(first) / max(len(shared_labels), 1)
+    server = init_server(sim.cache, entries, counts, jnp.asarray(r0),
+                         jnp.asarray(cost_model.saved_time()))
+    if mesh is not None:
+        from repro.distributed.sharding import shard_server_state
+        server = shard_server_state(server, mesh)
+    return server
+
+
+def bootstrap_server(key: jax.Array, sim: SimulationConfig, tap_fn_shared,
+                     shared_labels: np.ndarray, cost_model: CostModel,
+                     r0: np.ndarray | None = None,
+                     mesh=None) -> ServerState:
+    """Classic entry point: synthesise the shared-set taps, then bootstrap."""
+    sems, _ = tap_fn_shared(shared_labels)
+    return bootstrap_server_from_taps(sim, sems, shared_labels, cost_model,
+                                      r0=r0, mesh=mesh)
+
+
+# --------------------------------------------------------------------------
+# The session object
+# --------------------------------------------------------------------------
+
+
+class CocaCluster:
+    """A CoCa deployment as a session: K clients + one server + a policy.
+
+    Parameters
+    ----------
+    sim : SimulationConfig — cache / absorption / server / budget knobs.
+        (The legacy ``dynamic_allocation`` / ``static_layers`` flags only
+        matter when ``policy=None``; a policy object wins otherwise.)
+    cost_model : CostModel — the analytic latency accounting.
+    policy : None | str | AllocationPolicy | ClientEnginePolicy.
+    num_clients : fixed here or inferred from the first ``step()``.
+    mesh : optional ``jax.sharding.Mesh`` — the server cache lives
+        class-sharded; one all-gather per round at subtable allocation.
+    vectorized : run rounds as one device computation (vmap over clients +
+        scanned merges).  ``False`` = per-client reference path — the parity
+        oracle.  Ragged frame batches always take the reference path.
+    theta_policy / absorption_policy : optional per-round controllers.
+    max_history : keep only the last N per-frame :class:`RoundMetrics`
+        records in ``cluster.history`` (None = keep all).  ``result()``
+        aggregates incrementally, so bounding the history does not change
+        the summary — set this for long-running streaming sessions.
+    """
+
+    def __init__(self, sim: SimulationConfig, cost_model: CostModel, *,
+                 policy=None, num_clients: int | None = None, mesh=None,
+                 vectorized: bool = True, server: ServerState | None = None,
+                 theta_policy: ThetaPolicy | None = None,
+                 absorption_policy: AbsorptionPolicy | None = None,
+                 max_history: int | None = None):
+        self.sim = sim
+        self._cm = cost_model
+        self._mesh = mesh
+        self._vectorized = vectorized
+        self._policy = resolve_policy(policy, sim)
+        self._is_engine_policy = hasattr(self._policy, "make_engine")
+        self._theta_policy = theta_policy
+        self._absorption_policy = absorption_policy
+
+        self._K = num_clients
+        self._states: ClientState | None = None
+        self._engines: list | None = None
+        self._server: ServerState | None = None
+        self._shared: tuple | None = None     # (sems, logits, labels)
+        self._alloc_entries = None            # gathered table (mesh path)
+        self._round = 0
+        self._max_history = max_history
+        self._history: list[RoundMetrics] = []
+        # incremental per-round aggregates — result() never needs the
+        # (possibly trimmed) per-frame history
+        self._agg_lat: list[float] = []
+        self._agg_frames: list[int] = []
+        self._agg_correct: list[int] = []
+        self._agg_hits = 0
+        self._agg_hit_cor = 0
+        self._agg_exit = np.zeros(sim.cache.num_layers + 1, np.int64)
+
+        self._host_phi = self._host_r = self._host_ups = None
+        self._host_tau = None
+        if server is not None:
+            self.attach_server(server)
+
+    # ----------------------------------------------------------- properties
+    @property
+    def policy(self):
+        return self._policy
+
+    @property
+    def server(self) -> ServerState | None:
+        return self._server
+
+    @property
+    def round_index(self) -> int:
+        return self._round
+
+    @property
+    def num_clients(self) -> int | None:
+        return self._K
+
+    @property
+    def history(self) -> list[RoundMetrics]:
+        return list(self._history)
+
+    # ------------------------------------------------------------ lifecycle
+    def bootstrap(self, key: jax.Array, taps, shared_labels=None,
+                  r0: np.ndarray | None = None,
+                  server: ServerState | None = None) -> "CocaCluster":
+        """Warm-start the server from the globally shared dataset.
+
+        ``taps`` — either a callable ``labels -> (sems, logits)`` (the classic
+        ``tap_fn_shared``) or a precomputed ``(sems, logits)`` pair.  The
+        shared set is retained for baseline head fits
+        (:class:`LearnedCachePolicy`) and for :class:`AdaptiveAbsorption`.
+        ``server`` — reuse an already-profiled ServerState (same shared set)
+        instead of re-running `profile_initial_cache` + the R replay.
+        """
+        if shared_labels is None:
+            raise ValueError("bootstrap() needs shared_labels")
+        if callable(taps):
+            sems, logits = taps(shared_labels)
+        else:
+            sems, logits = taps
+        self._shared = (sems, logits, np.asarray(shared_labels))
+        if server is not None:
+            return self.attach_server(server)
+        server = bootstrap_server_from_taps(
+            self.sim, sems, shared_labels, self._cm, r0=r0, mesh=self._mesh)
+        # bootstrap_server_from_taps already sharded it; attach directly
+        self._set_server(server)
+        return self
+
+    def attach_server(self, server: ServerState) -> "CocaCluster":
+        """Adopt an existing ServerState (sharding it onto the mesh if any)."""
+        if self._mesh is not None:
+            from repro.distributed.sharding import shard_server_state
+            server = shard_server_state(server, self._mesh)
+        self._set_server(server)
+        return self
+
+    def _set_server(self, server: ServerState) -> None:
+        self._server = server
+        self._alloc_entries = None
+        self._host_phi, self._host_r = jax.device_get(
+            (server.phi_global, server.r_est))
+        self._host_phi = np.asarray(self._host_phi)
+        self._host_r = np.asarray(self._host_r)
+        self._host_ups = np.asarray(jax.device_get(server.upsilon))
+
+    def _ensure_clients(self, k_from_frames: int) -> None:
+        if self._K is None:
+            self._K = k_from_frames
+        if k_from_frames != self._K:
+            raise ValueError(f"step() got {k_from_frames} frame batches for "
+                             f"a {self._K}-client cluster")
+        if self._states is None and not self._is_engine_policy:
+            self._states = _init_clients_batched(self.sim.cache, self._K)
+            self._host_tau = np.asarray(jax.device_get(self._states.tau))
+
+    # ----------------------------------------------------------- allocation
+    def _gathered_entries(self) -> jax.Array:
+        """The dense global table (the protocol's one collective per round).
+
+        The cache is invalidated wherever the server table can change (merge
+        steps, ``attach_server``), so repeated calls within a round — e.g.
+        an external ``allocate_tables()`` followed by ``step()`` — reuse one
+        gather, and with GCU off round 0's gather serves every round.
+        """
+        if self._mesh is None:
+            return self._server.entries
+        if self._alloc_entries is None:
+            from repro.distributed.sharding import gather_cache
+            self._alloc_entries = gather_cache(self._server.entries,
+                                               self._mesh)
+        return self._alloc_entries
+
+    def allocation_context(self, client: int) -> AllocationContext:
+        if self._server is None:
+            raise RuntimeError("no server: call bootstrap() or "
+                               "attach_server() before allocating")
+        tau = (self._host_tau[client] if self._host_tau is not None
+               else np.zeros(self.sim.cache.num_classes, np.int32))
+        return AllocationContext(
+            round_index=self._round, client_index=client,
+            phi_global=self._host_phi, tau=tau, r_est=self._host_r,
+            upsilon=self._host_ups, entry_sizes=self._cm.entry_sizes(),
+            mem_budget=self.sim.mem_budget,
+            round_frames=self.sim.round_frames)
+
+    def allocate_tables(self) -> list[CacheTable]:
+        """Round-start per-client tables under the active policy (also the
+        serving path's table source — see serving/engine.py)."""
+        if self._K is None:
+            raise RuntimeError("client count unknown: pass num_clients= at "
+                               "construction or step() once first")
+        entries = self._gathered_entries()
+        return [allocate_subtable(
+                    entries,
+                    jnp.asarray(self._policy.allocate(
+                        self.allocation_context(k))))
+                for k in range(self._K)]
+
+    # ----------------------------------------------------------------- step
+    def step(self, frames: Sequence) -> RoundMetrics:
+        """Run one round over per-client frame batches.
+
+        ``frames`` — K entries, each a :class:`FrameBatch` or a plain
+        ``(sems, logits, labels)`` triple.  Batches may have any F; ragged
+        per-client F (or ``vectorized=False``) takes the per-client
+        reference path, uniform F the single-device-computation path.
+        """
+        frames = [fb if isinstance(fb, FrameBatch) else FrameBatch(*fb)
+                  for fb in frames]
+        self._ensure_clients(len(frames))
+
+        if self._is_engine_policy:
+            metrics = self._step_engines(frames)
+        else:
+            if self._server is None:
+                raise RuntimeError("no server: call bootstrap() or "
+                                   "attach_server() before step()")
+            lengths = {fb.num_frames for fb in frames}
+            if self._vectorized and len(lengths) == 1:
+                metrics = self._step_vectorized(frames)
+            else:
+                metrics = self._step_reference(frames)
+
+        self._round += 1
+        self._history.append(metrics)
+        if self._max_history is not None:
+            del self._history[:-self._max_history]
+        self._agg_lat.append(metrics.latency_sum)
+        self._agg_frames.append(metrics.frames)
+        self._agg_correct.append(metrics.correct)
+        self._agg_hits += metrics.hits
+        self._agg_hit_cor += metrics.hit_correct
+        self._agg_exit += metrics.exit_histogram()
+        self._apply_controllers(metrics)
+        return metrics
+
+    def _apply_controllers(self, metrics: RoundMetrics) -> None:
+        if self._theta_policy is not None:
+            theta = self.sim.cache.theta
+            if isinstance(theta, tuple):
+                raise ValueError("theta_policy needs a scalar theta")
+            new = self._theta_policy.update(metrics, float(theta))
+            if new is not None and float(new) != float(theta):
+                self.sim = dataclasses.replace(
+                    self.sim, cache=dataclasses.replace(
+                        self.sim.cache, theta=float(new)))
+        if self._absorption_policy is not None:
+            new = self._absorption_policy.update(self)
+            if new is not None and new != self.sim.absorb:
+                self.sim = dataclasses.replace(self.sim, absorb=new)
+
+    def _step_vectorized(self, frames: list[FrameBatch]) -> RoundMetrics:
+        sim, K = self.sim, self._K
+        tables = _stack_tables(self.allocate_tables())
+        sems = jnp.stack([jnp.asarray(fb.sems) for fb in frames])
+        logits = jnp.stack([jnp.asarray(fb.logits) for fb in frames])
+
+        self._states, self._server, m = round_step(
+            self._states, tables, sems, logits, self._server,
+            cfg=sim.cache, absorb=sim.absorb, scfg=sim.server, cm=self._cm,
+            global_updates=sim.global_updates,
+            deadline=sim.straggler_deadline)
+        if sim.global_updates:
+            self._alloc_entries = None       # merges changed the table
+
+        # The single device→host transfer of the round: metrics ride along
+        # with the status vectors the next round's allocation needs.
+        m, self._host_phi, self._host_r, self._host_tau = jax.device_get(
+            (m, self._server.phi_global, self._server.r_est,
+             self._states.tau))
+        F = frames[0].num_frames
+        return RoundMetrics(
+            pred=np.asarray(m["pred"]).ravel().astype(np.int32),
+            hit=np.asarray(m["hit"]).ravel(),
+            exit_layer=np.asarray(m["exit_layer"]).ravel().astype(np.int32),
+            latency=np.asarray(m["lat"]).ravel(),
+            labels=np.concatenate([np.asarray(fb.labels) for fb in frames]),
+            client=np.repeat(np.arange(K, dtype=np.int32), F),
+            num_layers=sim.cache.num_layers)
+
+    def _step_reference(self, frames: list[FrameBatch]) -> RoundMetrics:
+        """Per-client Python loop — the parity oracle.  Same round semantics
+        (round-start allocation for every client, Eq.-4/5 merges applied in
+        client order at the round boundary); one host sync per client per
+        stage instead of one per round."""
+        sim, K = self.sim, self._K
+        tables = self.allocate_tables()
+        parts, include, new_states = [], [], []
+        for k, fb in enumerate(frames):
+            state_k = jax.tree_util.tree_map(lambda x: x[k], self._states)
+            out = run_round(reset_round(state_k), tables[k],
+                            jnp.asarray(fb.sems), jnp.asarray(fb.logits),
+                            sim.cache, sim.absorb)
+            new_states.append(out.state)
+            n_hot = tables[k].class_mask.sum()
+            lat = np.asarray(frame_latency(self._cm, out.exit_layer,
+                                           tables[k].layer_mask, n_hot))
+            parts.append(RoundMetrics.single(
+                np.asarray(out.pred), np.asarray(out.hit),
+                np.asarray(out.exit_layer), lat,
+                num_layers=sim.cache.num_layers, labels=fb.labels, client=k))
+            straggled = (sim.straggler_deadline is not None
+                         and lat.sum() > sim.straggler_deadline)
+            include.append(sim.global_updates and not straggled)
+
+        for k in range(K):
+            if include[k]:
+                self._server = global_update(
+                    self._server, make_upload(new_states[k]), sim.server)
+        if sim.global_updates:
+            self._alloc_entries = None       # merges changed the table
+        self._states = jax.tree_util.tree_map(
+            lambda *leaves: jnp.stack(leaves), *new_states)
+
+        self._host_phi = np.asarray(jax.device_get(self._server.phi_global))
+        self._host_r = np.asarray(jax.device_get(self._server.r_est))
+        self._host_tau = np.asarray(jax.device_get(self._states.tau))
+        return RoundMetrics.concat(parts)
+
+    def _step_engines(self, frames: list[FrameBatch]) -> RoundMetrics:
+        if self._engines is None:
+            entries = None
+            if self._server is not None:
+                entries = np.asarray(jax.device_get(self._gathered_entries()))
+            self._engines = [
+                self._policy.make_engine(ClientEngineContext(
+                    cache=self.sim.cache, cost_model=self._cm,
+                    entries=entries, round_frames=self.sim.round_frames,
+                    shared=self._shared, client_index=k, num_clients=self._K))
+                for k in range(self._K)]
+        parts = []
+        for k, fb in enumerate(frames):
+            out = self._policy.run_round(self._engines[k], fb)
+            parts.append(out._replace(
+                labels=np.asarray(fb.labels).reshape(-1),
+                client=np.full(out.frames, k, np.int32)))
+        return RoundMetrics.concat(parts)
+
+    # --------------------------------------------------------------- result
+    def result(self) -> SimulationResult:
+        """Aggregate the session's rounds into the classic summary record."""
+        if not self._agg_frames:
+            raise RuntimeError("result() before any step()")
+        lat_sum = np.array(self._agg_lat)
+        frames = np.array(self._agg_frames, np.int64)
+        correct = np.array(self._agg_correct, np.int64)
+        total_f = int(frames.sum())
+        return SimulationResult(
+            avg_latency=float(lat_sum.sum() / total_f),
+            accuracy=float(correct.sum() / total_f),
+            hit_ratio=self._agg_hits / total_f,
+            hit_accuracy=self._agg_hit_cor / max(self._agg_hits, 1),
+            per_round_latency=lat_sum / np.maximum(frames, 1),
+            per_round_accuracy=correct / np.maximum(frames, 1),
+            exit_histogram=self._agg_exit.copy(),
+            server=self._server)

@@ -1,0 +1,146 @@
+"""Canonical per-round records shared by every CoCa driver.
+
+Historically the repo carried three shapes of "what happened this round":
+``simulation.RoundMetrics`` (pre-aggregated scalars), ``baselines.RoundResult``
+and ``policies.PolicyRoundResult`` (per-frame arrays, one client).  They are
+unified here: :class:`RoundMetrics` stores the per-frame outcome — prediction,
+hit flag, exit layer, simulated latency — tagged with the producing client,
+and derives every aggregate the old types precomputed.  The engine
+(:mod:`repro.core.engine`), the classical baselines and the replacement-policy
+study all emit this one record, so figure scripts and tests consume a single
+interface regardless of which method produced the round.
+
+Aggregation is deliberately order-pinned (frames concatenated client-major,
+float64 accumulation): the vectorised engine and the per-client reference
+driver produce bit-identical aggregates from bit-identical per-frame arrays.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+
+class FrameBatch(NamedTuple):
+    """One client's frames for one round — the unit ``CocaCluster.step`` eats.
+
+    ``sems``   — (F, L, d) pooled semantic taps (any array-like),
+    ``logits`` — (F, C) full-model outputs,
+    ``labels`` — (F,) ground-truth classes (metrics + refit only; the cache
+                 machinery itself never reads them).
+    Rounds may carry any F, and different clients may carry different F in
+    the same round (true streaming) — the engine adapts.
+    """
+
+    sems: object
+    logits: object
+    labels: np.ndarray
+
+    @property
+    def num_frames(self) -> int:
+        return int(np.shape(self.labels)[0])
+
+
+class RoundMetrics(NamedTuple):
+    """The canonical per-round record: per-frame outcomes, client-tagged.
+
+    All arrays are flat ``(N,)`` with frames concatenated client-major
+    (client 0's frames, then client 1's, ...).  ``labels`` is ``-1`` where
+    the producer had no ground truth (the cluster stamps real labels in).
+    """
+
+    pred: np.ndarray          # (N,) int32 — final prediction per frame
+    hit: np.ndarray           # (N,) bool — resolved by the cache
+    exit_layer: np.ndarray    # (N,) int32 — first hitting layer, L if none
+    latency: np.ndarray       # (N,) float — simulated per-frame seconds
+    labels: np.ndarray        # (N,) int — ground truth (-1 = unknown)
+    client: np.ndarray        # (N,) int32 — producing client per frame
+    num_layers: int           # L (histogram sizing)
+
+    # ------------------------------------------------------------- builders
+    @classmethod
+    def single(cls, pred, hit, exit_layer, latency, *, num_layers: int,
+               labels=None, client: int = 0) -> "RoundMetrics":
+        """Wrap one client's per-frame arrays (the old RoundResult shape)."""
+        pred = np.asarray(pred, np.int32)
+        n = pred.shape[0]
+        lab = (np.full(n, -1, np.int64) if labels is None
+               else np.asarray(labels))
+        return cls(pred=pred, hit=np.asarray(hit, bool),
+                   exit_layer=np.asarray(exit_layer, np.int32),
+                   latency=np.asarray(latency),
+                   labels=lab, client=np.full(n, client, np.int32),
+                   num_layers=int(num_layers))
+
+    @classmethod
+    def concat(cls, parts: Sequence["RoundMetrics"]) -> "RoundMetrics":
+        """Concatenate per-client records (client-major frame order)."""
+        assert parts, "cannot concat zero RoundMetrics"
+        L = parts[0].num_layers
+        assert all(p.num_layers == L for p in parts)
+        return cls(*(np.concatenate([getattr(p, f) for p in parts])
+                     for f in ("pred", "hit", "exit_layer", "latency",
+                               "labels", "client")), num_layers=L)
+
+    def with_labels(self, labels) -> "RoundMetrics":
+        """Stamp ground truth onto a record produced without it."""
+        return self._replace(labels=np.asarray(labels).reshape(-1))
+
+    def for_client(self, k: int) -> "RoundMetrics":
+        keep = self.client == k
+        return RoundMetrics(*(getattr(self, f)[keep] for f in
+                              ("pred", "hit", "exit_layer", "latency",
+                               "labels", "client")),
+                            num_layers=self.num_layers)
+
+    # ------------------------------------------------------------ aggregates
+    @property
+    def frames(self) -> int:
+        return int(self.pred.shape[0])
+
+    @property
+    def correct(self) -> int:
+        return int((self.pred == self.labels).sum())
+
+    @property
+    def hits(self) -> int:
+        return int(self.hit.sum())
+
+    @property
+    def hit_correct(self) -> int:
+        return int(((self.pred == self.labels) & self.hit).sum())
+
+    @property
+    def latency_sum(self) -> float:
+        # float64 accumulation over the client-major frame order: the same
+        # per-frame values always aggregate to the same bits, whichever
+        # driver (vectorised / reference / baseline adapter) produced them.
+        return float(self.latency.sum(dtype=np.float64))
+
+    @property
+    def avg_latency(self) -> float:
+        return self.latency_sum / max(self.frames, 1)
+
+    @property
+    def accuracy(self) -> float:
+        return self.correct / max(self.frames, 1)
+
+    @property
+    def hit_ratio(self) -> float:
+        return self.hits / max(self.frames, 1)
+
+    @property
+    def hit_accuracy(self) -> float:
+        return self.hit_correct / max(self.hits, 1)
+
+    def exit_histogram(self) -> np.ndarray:
+        """(L+1,) int64 — frames per exit layer; bin L = no hit."""
+        return np.bincount(np.asarray(self.exit_layer),
+                           minlength=self.num_layers + 1).astype(np.int64)
+
+    def exit_blocks(self, num_blocks: int | None = None) -> np.ndarray:
+        """(N,) blocks each frame's request occupies a serving slot for —
+        the input :func:`repro.serving.batching.simulate` consumes."""
+        nb = num_blocks if num_blocks is not None else self.num_layers + 1
+        return np.where(self.hit, np.minimum(self.exit_layer + 1, nb), nb)

@@ -11,11 +11,12 @@ are read from the same global table CoCa uses, so the comparison isolates the
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+import warnings
 
 import numpy as np
 
 from repro.core.cost_model import CostModel
+from repro.core.metrics import RoundMetrics
 from repro.core.semantic_cache import CacheConfig
 
 
@@ -46,18 +47,11 @@ class PolicyCache:
         self._meta[cls] = self._clock
 
 
-class PolicyRoundResult(NamedTuple):
-    pred: np.ndarray
-    hit: np.ndarray
-    exit_layer: np.ndarray
-    latency: np.ndarray
-
-
 def run_policy_round(caches: list[PolicyCache], layers: list[int],
                      entries: np.ndarray, sems: np.ndarray, logits: np.ndarray,
                      cfg: CacheConfig, cm: CostModel,
                      rng: np.random.Generator,
-                     insert_observed: bool = False) -> PolicyRoundResult:
+                     insert_observed: bool = False) -> RoundMetrics:
     """One F-frame round under a replacement policy.
 
     ``entries`` — (L, I, d) class-centroid table shared with CoCa (the paper
@@ -124,5 +118,14 @@ def run_policy_round(caches: list[PolicyCache], layers: list[int],
                 else:   # EMA refresh of the stored entry
                     e = 0.8 * entries[j, out_cls] + 0.2 * tap
                     entries[j, out_cls] = e / (np.linalg.norm(e) + 1e-8)
-    return PolicyRoundResult(pred=pred, hit=hit, exit_layer=exit_layer,
-                             latency=latency)
+    return RoundMetrics.single(pred, hit, exit_layer, latency,
+                               num_layers=cfg.num_layers)
+
+
+def __getattr__(name: str):
+    if name == "PolicyRoundResult":   # pre-engine duplicate of the record
+        warnings.warn("PolicyRoundResult is now the canonical "
+                      "repro.core.metrics.RoundMetrics",
+                      DeprecationWarning, stacklevel=2)
+        return RoundMetrics
+    raise AttributeError(name)

@@ -1,179 +1,53 @@
-"""Multi-client round-by-round CoCa driver (§IV.A workflow, Fig. 3).
+"""Thin compatibility wrappers over the CoCa engine (§IV.A workflow, Fig. 3).
 
-Per round:  (1) the server runs ACA on every client's status (τ, Φ, R, Υ, Π)
-against the round-start global state and ships personalised sub-tables of the
-global cache;  (2) the clients run F frames each against their fixed caches —
-**concurrently**, exactly as in the paper's deployment — collecting (τ, φ, U)
-and per-layer hit statistics;  (3) the server merges the uploads in client
-order (Eq. 4/5, order-sensitive) and refreshes its hit-ratio estimate.
+The round loop itself lives in :mod:`repro.core.engine`: ``run_simulation``
+drives a :class:`~repro.core.engine.CocaCluster` in its vectorised mode
+(vmap over clients, ``lax.scan`` over the Eq.-4/5 merges, one bundled
+``device_get`` per round) and ``run_simulation_reference`` drives the same
+cluster down its per-client reference path (one host sync per client per
+stage) — the parity oracle.  Both resolve the legacy
+``dynamic_allocation``/``static_layers`` flags to an
+:class:`~repro.core.engine.AllocationPolicy` and feed the tap stream to
+``cluster.step()`` round by round.
 
-The engine is vectorised: ``run_round`` is ``vmap``-ed across clients, the
-per-client Eq.-4/5 merges of a round are folded into one ``lax.scan`` (which
-preserves their sequential semantics), and the whole round is a single jitted
-computation.  Host↔device traffic is one bundled ``device_get`` per round:
-the previous round's metrics come back together with the status vectors the
-ACA allocator needs for the next round.  ``run_simulation_reference`` keeps
-the plain per-client Python loop (same round-boundary semantics) as the
-parity oracle.
-
-Ablation switches reproduce Fig. 9:  ``dynamic_allocation=False`` (DCA off)
-freezes a static allocation;  ``global_updates=False`` (GCU off) skips Eq. 4.
-``straggler_deadline`` emulates the fault-tolerance story: a client whose
-(simulated) round latency exceeds the deadline has its upload dropped that
-round — the protocol is stateless across rounds on the server side, so
-stragglers only cost freshness, never correctness.
+New code should use the engine API directly (see docs/api.md for the
+migration table); these wrappers emit a :class:`DeprecationWarning` and are
+kept for the existing figure scripts and parity tests.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Callable, NamedTuple
+import warnings
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aca as aca_mod
-from repro.core.client import (AbsorptionConfig, ClientState, init_client,
-                               make_upload, reset_round, run_round)
-from repro.core.cost_model import CostModel, frame_latency
-from repro.core.semantic_cache import (CacheConfig, CacheTable,
-                                       allocate_subtable, empty_table)
-from repro.core.server import (ServerConfig, ServerState, global_update,
-                               global_update_body, init_server)
+from repro.core.cost_model import CostModel
+from repro.core.engine import (  # noqa: F401  (re-exported compat surface)
+    CocaCluster, FrameBatch, SimulationConfig, SimulationResult, TapFn,
+    bootstrap_server, bootstrap_server_from_taps, resolve_policy, round_step)
+from repro.core.server import ServerState
+
+__all__ = [
+    "SimulationConfig", "SimulationResult", "TapFn", "bootstrap_server",
+    "run_simulation", "run_simulation_reference",
+]
 
 
-@dataclasses.dataclass(frozen=True)
-class SimulationConfig:
-    cache: CacheConfig
-    absorb: AbsorptionConfig = AbsorptionConfig()
-    server: ServerConfig = ServerConfig()
-    round_frames: int = 300                  # F
-    mem_budget: float = 64_000.0             # Π (bytes) per client
-    dynamic_allocation: bool = True          # DCA (Fig. 9 ablation)
-    global_updates: bool = True              # GCU (Fig. 9 ablation)
-    static_layers: tuple[int, ...] = ()      # used when DCA is off
-    straggler_deadline: float | None = None  # seconds; None = no deadline
+def _warn(old: str) -> None:
+    warnings.warn(
+        f"{old} is a compatibility wrapper; use repro.core.engine.CocaCluster "
+        "(see docs/api.md for the migration table)",
+        DeprecationWarning, stacklevel=3)
 
 
-class RoundMetrics(NamedTuple):
-    latency_sum: float
-    frames: int
-    correct: int
-    hits: int
-    hit_correct: int
-    exit_layers: np.ndarray      # histogram over L+1 bins
-
-
-class SimulationResult(NamedTuple):
-    avg_latency: float
-    accuracy: float
-    hit_ratio: float
-    hit_accuracy: float
-    per_round_latency: np.ndarray
-    per_round_accuracy: np.ndarray
-    exit_histogram: np.ndarray
-    server: ServerState
-
-
-# TapFn: (round_index, client_index, labels) -> (sems (F,L,d), logits (F,C))
-TapFn = Callable[[int, int, np.ndarray], tuple[jax.Array, jax.Array]]
-
-
-def _allocate_from_status(sim: SimulationConfig, phi_global: np.ndarray,
-                          tau: np.ndarray, r_est: np.ndarray,
-                          upsilon: np.ndarray, entries: jax.Array,
-                          cm: CostModel) -> CacheTable:
-    """Host-side ACA allocation from already-fetched status vectors."""
-    if sim.dynamic_allocation:
-        req = aca_mod.AllocationRequest(
-            phi_global=phi_global, tau=tau, r_est=r_est, upsilon=upsilon,
-            entry_sizes=cm.entry_sizes(), mem_budget=sim.mem_budget,
-            round_frames=sim.round_frames)
-        x = aca_mod.aca_allocate(req)
-    else:
-        scores = aca_mod.class_scores(phi_global, tau, sim.round_frames)
-        hot = aca_mod.select_hotspot_classes(scores)
-        # memory-fair static baseline (§VI.G: same total memory as ACA):
-        # truncate the hot set so the fixed layers fit the byte budget
-        sizes = cm.entry_sizes()
-        per_class = float(sum(sizes[j] for j in sim.static_layers)) or 1.0
-        max_classes = max(int(sim.mem_budget // per_class), 1)
-        x = aca_mod.fixed_allocate(hot[:max_classes], list(sim.static_layers),
-                                   sim.cache.num_layers, sim.cache.num_classes)
-    return allocate_subtable(entries, jnp.asarray(x))
-
-
-def _allocate(sim: SimulationConfig, server: ServerState, client: ClientState,
-              cm: CostModel) -> CacheTable:
-    return _allocate_from_status(
-        sim, np.asarray(server.phi_global), np.asarray(client.tau),
-        np.asarray(server.r_est), np.asarray(server.upsilon),
-        server.entries, cm)
-
-
-def _stack_tables(tables: list[CacheTable]) -> CacheTable:
-    return CacheTable(*(jnp.stack(leaf) for leaf in zip(*tables)))
-
-
-def _init_clients_batched(cfg: CacheConfig, num_clients: int) -> ClientState:
-    one = init_client(cfg)
-    return jax.tree_util.tree_map(
-        lambda x: jnp.broadcast_to(x, (num_clients,) + x.shape), one)
-
-
-@partial(jax.jit, static_argnames=("cfg", "absorb", "scfg", "cm",
-                                   "global_updates", "deadline"))
-def _round_step(states: ClientState, tables: CacheTable, sems: jax.Array,
-                logits: jax.Array, labels: jax.Array, server: ServerState,
-                *, cfg: CacheConfig, absorb: AbsorptionConfig,
-                scfg: ServerConfig, cm: CostModel, global_updates: bool,
-                deadline: float | None):
-    """One full round for all K clients as a single device computation.
-
-    ``states``/``tables``/``sems``/``logits``/``labels`` carry a leading
-    client axis K.  Returns (new states, new server, metrics dict); nothing
-    here forces a host sync.
-    """
-    L = cfg.num_layers
-    states = reset_round(states)                     # elementwise, vmap-free
-
-    out = jax.vmap(lambda s, t, se, lo: run_round(s, t, se, lo, cfg, absorb))(
-        states, tables, sems, logits)
-
-    n_hot = tables.class_mask.sum(axis=1)                          # (K,)
-    lat = jax.vmap(lambda e, lm, nh: frame_latency(cm, e, lm, nh))(
-        out.exit_layer, tables.layer_mask, n_hot)                  # (K, F)
-    lat_per_client = lat.sum(axis=1)                               # (K,)
-
-    correct_mask = out.pred == labels                              # (K, F)
-    metrics = {
-        "lat_sum": lat.sum(),
-        "correct": correct_mask.sum(),
-        "hits": out.hit.sum(),
-        "hit_correct": (correct_mask & out.hit).sum(),
-        "exit_hist": jnp.zeros((L + 1,), jnp.int32)
-                        .at[out.exit_layer.ravel()].add(1),
-    }
-
-    if global_updates:
-        if deadline is None:
-            include = jnp.ones(lat_per_client.shape, bool)
-        else:
-            include = lat_per_client <= deadline
-        uploads = make_upload(out.state)             # leading K axis on leaves
-
-        def merge(srv, inp):
-            up, inc = inp
-            new = global_update_body(srv, up, scfg)
-            srv = jax.tree_util.tree_map(
-                lambda n, o: jnp.where(inc, n, o), new, srv)
-            return srv, None
-
-        server, _ = jax.lax.scan(merge, server, (uploads, include))
-
-    return out.state, server, metrics
+def _drive(cluster: CocaCluster, tap_fn: TapFn, labels_per_round: np.ndarray,
+           num_rounds: int, num_clients: int) -> SimulationResult:
+    for r in range(num_rounds):
+        cluster.step([
+            FrameBatch(*tap_fn(r, k, labels_per_round[r, k]),
+                       labels=np.asarray(labels_per_round[r, k]))
+            for k in range(num_clients)])
+    return cluster.result()
 
 
 def run_simulation(sim: SimulationConfig, server: ServerState,
@@ -183,82 +57,14 @@ def run_simulation(sim: SimulationConfig, server: ServerState,
     """Drive ``num_rounds`` rounds over ``num_clients`` clients (vectorised).
 
     ``labels_per_round`` — (rounds, clients, F) ground-truth class streams.
-
-    Per round the only host↔device round-trip is one bundled ``device_get``
-    of (round metrics, Φ, R, client τ) — the ACA allocator's inputs for the
-    next round ride along with the metrics of the round that just finished.
-
-    ``mesh`` — optional :class:`jax.sharding.Mesh`; the server's global
-    cache then lives class-sharded across devices
-    (:func:`repro.distributed.sharding.shard_server_state`) and stays
-    sharded through the Eq.-4/5 merges inside ``_round_step``.  The one
-    collective per round is the all-gather of ``entries`` right before
-    client subtable allocation (``allocate_subtable`` cuts dense per-client
-    tables, so it needs every class column).
+    ``mesh`` — optional :class:`jax.sharding.Mesh`; the server's global cache
+    then lives class-sharded with one all-gather per round at subtable
+    allocation (see :meth:`CocaCluster.allocate_tables`).
     """
-    K = num_clients
-    L = sim.cache.num_layers
-    states = _init_clients_batched(sim.cache, K)
-    if mesh is not None:
-        from repro.distributed.sharding import (gather_cache,
-                                                shard_server_state)
-        server = shard_server_state(server, mesh)
-
-    lat_sum = np.zeros(num_rounds)
-    frames = np.zeros(num_rounds, np.int64)
-    correct = np.zeros(num_rounds, np.int64)
-    hits = hit_cor = 0
-    exit_hist = np.zeros(L + 1, np.int64)
-
-    # Initial status pull (pre-loop; not a per-round sync).
-    host_ups = np.asarray(server.upsilon)
-    host_phi, host_r, host_tau = jax.device_get(
-        (server.phi_global, server.r_est, states.tau))
-
-    for r in range(num_rounds):
-        # The protocol's single collective: gather the class-sharded table
-        # so per-client dense subtables can be cut from it.  With GCU off
-        # the table never changes, so round 0's gather serves every round.
-        if mesh is None:
-            alloc_entries = server.entries
-        elif r == 0 or sim.global_updates:
-            alloc_entries = gather_cache(server.entries, mesh)
-        tables = _stack_tables([
-            _allocate_from_status(sim, host_phi, host_tau[k], host_r,
-                                  host_ups, alloc_entries, cost_model)
-            for k in range(K)])
-        taps = [tap_fn(r, k, labels_per_round[r, k]) for k in range(K)]
-        sems = jnp.stack([t[0] for t in taps])
-        logits = jnp.stack([t[1] for t in taps])
-        labels = jnp.asarray(labels_per_round[r])
-
-        states, server, metrics = _round_step(
-            states, tables, sems, logits, labels, server,
-            cfg=sim.cache, absorb=sim.absorb, scfg=sim.server, cm=cost_model,
-            global_updates=sim.global_updates,
-            deadline=sim.straggler_deadline)
-
-        # The single device→host transfer of the round.
-        m, host_phi, host_r, host_tau = jax.device_get(
-            (metrics, server.phi_global, server.r_est, states.tau))
-
-        lat_sum[r] = float(m["lat_sum"])
-        frames[r] = K * labels_per_round.shape[2]
-        correct[r] = int(m["correct"])
-        hits += int(m["hits"])
-        hit_cor += int(m["hit_correct"])
-        exit_hist += m["exit_hist"].astype(np.int64)
-
-    total_f = int(frames.sum())
-    return SimulationResult(
-        avg_latency=float(lat_sum.sum() / total_f),
-        accuracy=float(correct.sum() / total_f),
-        hit_ratio=hits / total_f,
-        hit_accuracy=hit_cor / max(hits, 1),
-        per_round_latency=lat_sum / np.maximum(frames, 1),
-        per_round_accuracy=correct / np.maximum(frames, 1),
-        exit_histogram=exit_hist,
-        server=server)
+    _warn("run_simulation")
+    cluster = CocaCluster(sim, cost_model, policy=resolve_policy(None, sim),
+                          num_clients=num_clients, mesh=mesh, server=server)
+    return _drive(cluster, tap_fn, labels_per_round, num_rounds, num_clients)
 
 
 def run_simulation_reference(sim: SimulationConfig, server: ServerState,
@@ -266,99 +72,20 @@ def run_simulation_reference(sim: SimulationConfig, server: ServerState,
                              cost_model: CostModel, num_rounds: int,
                              num_clients: int) -> SimulationResult:
     """Per-client Python-loop driver — the parity oracle for the vectorised
-    engine.  Same round semantics (round-start allocation for every client,
-    Eq.-4/5 merges applied in client order at the round boundary, matching
-    the paper's concurrent-clients workflow); one host sync per client per
-    stage instead of one per round.
-    """
-    clients = [init_client(sim.cache) for _ in range(num_clients)]
-    lat_sum = np.zeros(num_rounds)
-    frames = np.zeros(num_rounds, np.int64)
-    correct = np.zeros(num_rounds, np.int64)
-    hits = hit_cor = 0
-    exit_hist = np.zeros(sim.cache.num_layers + 1, np.int64)
-
-    for r in range(num_rounds):
-        tables = [_allocate(sim, server, clients[k], cost_model)
-                  for k in range(num_clients)]
-        include = []
-        for k in range(num_clients):
-            table = tables[k]
-            labels = labels_per_round[r, k]
-            sems, logits = tap_fn(r, k, labels)
-            state = reset_round(clients[k])
-            out = run_round(state, table, sems, logits, sim.cache, sim.absorb)
-            clients[k] = out.state
-
-            n_hot = table.class_mask.sum()
-            lat = frame_latency(cost_model, out.exit_layer, table.layer_mask,
-                                n_hot)
-            lat_np = np.asarray(lat)
-            pred = np.asarray(out.pred)
-            hit = np.asarray(out.hit)
-
-            lat_sum[r] += lat_np.sum()
-            frames[r] += len(labels)
-            correct[r] += int((pred == labels).sum())
-            hits += int(hit.sum())
-            hit_cor += int(((pred == labels) & hit).sum())
-            exit_hist += np.bincount(np.asarray(out.exit_layer),
-                                     minlength=sim.cache.num_layers + 1)
-
-            straggled = (sim.straggler_deadline is not None
-                         and lat_np.sum() > sim.straggler_deadline)
-            include.append(sim.global_updates and not straggled)
-        for k in range(num_clients):
-            if include[k]:
-                server = global_update(server, make_upload(clients[k]),
-                                       sim.server)
-
-    total_f = int(frames.sum())
-    return SimulationResult(
-        avg_latency=float(lat_sum.sum() / total_f),
-        accuracy=float(correct.sum() / total_f),
-        hit_ratio=hits / total_f,
-        hit_accuracy=hit_cor / max(hits, 1),
-        per_round_latency=lat_sum / np.maximum(frames, 1),
-        per_round_accuracy=correct / np.maximum(frames, 1),
-        exit_histogram=exit_hist,
-        server=server)
+    engine (same round semantics: round-start allocation for every client,
+    Eq.-4/5 merges applied in client order at the round boundary)."""
+    _warn("run_simulation_reference")
+    cluster = CocaCluster(sim, cost_model, policy=resolve_policy(None, sim),
+                          num_clients=num_clients, vectorized=False,
+                          server=server)
+    return _drive(cluster, tap_fn, labels_per_round, num_rounds, num_clients)
 
 
-def bootstrap_server(key: jax.Array, sim: SimulationConfig, tap_fn_shared,
-                     shared_labels: np.ndarray, cost_model: CostModel,
-                     r0: np.ndarray | None = None,
-                     mesh=None) -> ServerState:
-    """Server warm start from the globally shared dataset (§III.3, §V.A).
-
-    Entries = per-class per-layer centroids of the shared set; R = profiled
-    first-hit CDF measured by replaying the shared set against the freshly
-    built full table ("empirical relation tested on a shared dataset").
-
-    With ``mesh`` the profiled table is built class-sharded and the returned
-    ServerState lives on the mesh; the R-profiling replay (a dense full-table
-    lookup, same shape of work as subtable allocation) gathers first.
-    """
-    from repro.core.semantic_cache import CacheTable, lookup_all_layers
-    from repro.core.server import profile_initial_cache
-    sems, _ = tap_fn_shared(shared_labels)
-    entries, counts = profile_initial_cache(sems, jnp.asarray(shared_labels),
-                                            sim.cache.num_classes, mesh=mesh)
-    if r0 is None:
-        lookup_entries = entries
-        if mesh is not None:
-            from repro.distributed.sharding import gather_cache
-            lookup_entries = gather_cache(entries, mesh)
-        full = CacheTable(entries=lookup_entries,
-                          class_mask=jnp.ones(sim.cache.num_classes, bool),
-                          layer_mask=jnp.ones(sim.cache.num_layers, bool))
-        look = lookup_all_layers(full, sems, sim.cache)
-        first = np.bincount(np.asarray(look.exit_layer),
-                            minlength=sim.cache.num_layers + 1)[:-1]
-        r0 = np.cumsum(first) / max(len(shared_labels), 1)
-    server = init_server(sim.cache, entries, counts, jnp.asarray(r0),
-                         jnp.asarray(cost_model.saved_time()))
-    if mesh is not None:
-        from repro.distributed.sharding import shard_server_state
-        server = shard_server_state(server, mesh)
-    return server
+def __getattr__(name: str):
+    if name == "RoundMetrics":   # pre-engine duplicate of the record
+        warnings.warn("repro.core.simulation.RoundMetrics moved to "
+                      "repro.core.metrics.RoundMetrics (the one canonical "
+                      "round record)", DeprecationWarning, stacklevel=2)
+        from repro.core.metrics import RoundMetrics
+        return RoundMetrics
+    raise AttributeError(name)

@@ -16,14 +16,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import (CacheConfig, CacheTable, SimulationConfig,
-                        bootstrap_server, calibrate, run_simulation)
+from repro.core import (AcaPolicy, CacheConfig, CocaCluster, FrameBatch,
+                        SimulationConfig, calibrate)
 from repro.data import (StreamConfig, dirichlet_client_priors,
                         make_client_context, make_tap_model,
                         perturb_tap_model, sample_class_sequence,
                         synthesize_taps)
-from repro.launch.mesh import make_debug_mesh, make_production_mesh
-from repro.serving.batching import BatchingConfig, simulate
+from repro.serving.batching import BatchingConfig, simulate_metrics
 
 
 def main() -> None:
@@ -51,11 +50,13 @@ def main() -> None:
                            mem_budget=float(8 * I * scfg.sem_dim))
     shared = np.tile(np.arange(I), 20)
     tm_cal = perturb_tap_model(jax.random.PRNGKey(42), tm, 0.35)
-    server = bootstrap_server(
-        jax.random.PRNGKey(0), sim,
+    cluster = CocaCluster(sim, cm, policy=AcaPolicy(),
+                          num_clients=args.clients)
+    cluster.bootstrap(
+        jax.random.PRNGKey(0),
         lambda lab: synthesize_taps(jax.random.PRNGKey(1), tm_cal,
                                     jnp.asarray(lab), scfg),
-        shared, cm)
+        shared)
 
     priors = dirichlet_client_priors(rng, args.clients, I, args.noniid)
     labels = np.stack([
@@ -71,18 +72,20 @@ def main() -> None:
         return synthesize_taps(jax.random.PRNGKey(1000 + ctr[0]), tm,
                                jnp.asarray(lab), scfg, context=ctxs[k])
 
-    res = run_simulation(sim, server, tap_fn, labels, cm, args.rounds,
-                         args.clients)
+    for r in range(args.rounds):
+        cluster.step([FrameBatch(*tap_fn(r, k, labels[r, k]),
+                                 labels=labels[r, k])
+                      for k in range(args.clients)])
+    res = cluster.result()
     full = cm.full_latency()
     print(f"[serve] avg latency {res.avg_latency:.2f} vs edge-only {full:.2f} "
           f"-> reduction {100 * (1 - res.avg_latency / full):.1f}%")
     print(f"[serve] accuracy {res.accuracy:.3f} hit ratio {res.hit_ratio:.3f} "
           f"hit accuracy {res.hit_accuracy:.3f}")
 
-    # continuous-batching view: exit layers -> throughput multiple
-    exits = np.repeat(np.arange(n_taps + 1), res.exit_histogram)
-    stats = simulate(np.minimum(exits + 1, n_taps + 1),
-                     BatchingConfig(num_blocks=n_taps + 1))
+    # continuous-batching view: per-frame exit layers -> throughput multiple
+    stats = simulate_metrics(cluster.history,
+                             BatchingConfig(num_blocks=n_taps + 1))
     print(f"[serve] continuous batching throughput x{stats.throughput_gain:.2f} "
           f"(occupancy {stats.mean_slot_occupancy:.2f})")
 

@@ -37,6 +37,16 @@ class ServingStats(NamedTuple):
     requests: int
 
 
+def simulate_metrics(metrics, cfg: BatchingConfig) -> ServingStats:
+    """Drive :func:`simulate` from a canonical
+    :class:`~repro.core.metrics.RoundMetrics` record (or a list of them) —
+    the engine's per-frame exit layers become slot-occupancy ticks."""
+    from repro.core.metrics import RoundMetrics
+    records = [metrics] if isinstance(metrics, RoundMetrics) else list(metrics)
+    blocks = np.concatenate([m.exit_blocks(cfg.num_blocks) for m in records])
+    return simulate(blocks, cfg)
+
+
 def simulate(exit_blocks: np.ndarray, cfg: BatchingConfig) -> ServingStats:
     """``exit_blocks`` — (N,) blocks each request must execute (exit layer+1;
     no-hit requests carry ``num_blocks``)."""

@@ -16,9 +16,11 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.semantic_cache import CacheConfig, CacheTable, lookup_all_layers
+from repro.core.semantic_cache import (CacheConfig, CacheTable,
+                                       allocate_subtable, lookup_all_layers)
 from repro.distributed.sharding import (SERVE_POLICY, ShardingPolicy,
                                         activation_sharding, batch_specs,
                                         cache_partition, make_param_shardings,
@@ -32,6 +34,33 @@ def coca_cache_config(cfg: ModelConfig, theta: float = 0.10,
     return CacheConfig(num_classes=cfg.num_classes,
                        num_layers=len(cfg.tap_layers()),
                        sem_dim=cfg.sem_dim, alpha=alpha, theta=theta)
+
+
+def allocate_serving_table(server, policy, cache_cfg: CacheConfig,
+                           cost_model, *, mem_budget: float,
+                           tau: np.ndarray | None = None,
+                           round_frames: int = 300, round_index: int = 0,
+                           client_index: int = 0) -> CacheTable:
+    """Cut one client's serving :class:`CacheTable` from a live CoCa server
+    with any :class:`~repro.core.engine.AllocationPolicy` — the serving path
+    shares the engine's allocation machinery instead of carrying its own.
+
+    ``server`` — a :class:`~repro.core.server.ServerState` (e.g. from
+    ``CocaCluster.bootstrap``); ``tau`` — the client's recency vector
+    (cold start = zeros).  The returned table plugs straight into
+    ``make_prefill_step`` / ``make_decode_step``.
+    """
+    from repro.core.engine import AllocationContext
+    I = cache_cfg.num_classes
+    ctx = AllocationContext(
+        round_index=round_index, client_index=client_index,
+        phi_global=np.asarray(jax.device_get(server.phi_global)),
+        tau=(np.zeros(I, np.int32) if tau is None else np.asarray(tau)),
+        r_est=np.asarray(jax.device_get(server.r_est)),
+        upsilon=np.asarray(jax.device_get(server.upsilon)),
+        entry_sizes=cost_model.entry_sizes(), mem_budget=mem_budget,
+        round_frames=round_frames)
+    return allocate_subtable(server.entries, jnp.asarray(policy.allocate(ctx)))
 
 
 def empty_serving_table(cfg: ModelConfig) -> CacheTable:

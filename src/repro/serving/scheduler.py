@@ -49,6 +49,11 @@ class ThetaController:
 
     attainment < target - margin  -> lower Θ (more early exits, faster)
     attainment > target + margin  -> raise Θ (spend slack on accuracy)
+
+    This is also the engine's per-round theta hook:
+    ``CocaCluster(theta_policy=SLOTheta(...))`` (repro.core.engine) computes
+    attainment from each round's canonical metrics and drives this
+    controller between ``step()`` calls.
     """
 
     theta: float

@@ -1,0 +1,235 @@
+"""Round-level coverage for the replacement policies (core/policies.py) and
+parity of every baseline policy adapter against its directly-driven engine —
+the same frames through ``cluster.step()`` must yield the same per-frame
+record as hand-rolling the per-round loop."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import calibrate
+from repro.core.baselines import SMTM, LearnedCache
+from repro.core.policies import PolicyCache, run_policy_round
+
+I, L, D, F, K, R = 10, 4, 16, 24, 2, 2
+
+
+def _world(theta=0.05):
+    cache = api.CacheConfig(num_classes=I, num_layers=L, sem_dim=D,
+                            theta=theta)
+    sim = api.SimulationConfig(cache=cache, round_frames=F,
+                               mem_budget=8_000.0)
+    cm = calibrate(np.linspace(2.0, 1.0, L + 1), np.full(L, D), head_cost=0.5)
+    key = jax.random.PRNGKey(0)
+    centroids = jax.random.normal(key, (L, I, D))
+
+    def taps_for(labels, seed):
+        k = jax.random.PRNGKey(seed)
+        lab = jnp.asarray(labels)
+        sems = centroids[:, lab, :].transpose(1, 0, 2) + \
+            0.6 * jax.random.normal(k, (len(labels), L, D))
+        logits = (jax.nn.one_hot(lab, I) * 4.0
+                  + jax.random.normal(jax.random.fold_in(k, 1),
+                                      (len(labels), I)))
+        return sems, logits
+
+    def tap_shared(labels):
+        return taps_for(labels, 999)
+
+    def tap_fn(r, k_, labels):
+        return taps_for(labels, 7 + 13 * r + 131 * k_)
+
+    rng = np.random.default_rng(3)
+    labels = rng.integers(0, I, size=(R, K, F))
+    shared = np.tile(np.arange(I), 8)
+    return sim, cm, tap_shared, shared, tap_fn, labels
+
+
+def _bootstrapped(sim, cm, tap_shared, shared, policy, frames=F):
+    import dataclasses
+    sim = dataclasses.replace(sim, round_frames=frames)
+    cluster = api.CocaCluster(sim, cm, policy=policy)
+    cluster.bootstrap(jax.random.PRNGKey(0), tap_shared, shared)
+    return cluster
+
+
+def _drive(cluster, tap_fn, labels):
+    for r in range(labels.shape[0]):
+        cluster.step([api.FrameBatch(*tap_fn(r, k, labels[r, k]),
+                                     labels=labels[r, k])
+                      for k in range(labels.shape[1])])
+    return cluster.result()
+
+
+# ---------------------------------------------------------------------------
+# run_policy_round unit semantics
+# ---------------------------------------------------------------------------
+
+def _policy_inputs():
+    sim, cm, tap_shared, shared, tap_fn, labels = _world()
+    sems, logits = tap_fn(0, 0, labels[0, 0])
+    entries = np.array(jax.random.normal(jax.random.PRNGKey(5), (L, I, D)))
+    entries /= np.linalg.norm(entries, axis=-1, keepdims=True)
+    return (sim.cache, cm, np.asarray(sems), np.asarray(logits),
+            labels[0, 0], entries)
+
+
+def test_run_policy_round_returns_canonical_record():
+    cfg, cm, sems, logits, labels, entries = _policy_inputs()
+    caches = [PolicyCache(capacity=4, policy="lru") for _ in (1, 3)]
+    out = run_policy_round(caches, [1, 3], entries.copy(), sems, logits,
+                           cfg, cm, np.random.default_rng(0))
+    assert isinstance(out, api.RoundMetrics)
+    assert out.frames == F
+    assert out.num_layers == L
+    assert np.isfinite(out.latency).all()
+    assert out.exit_histogram().sum() == F
+    assert (out.labels == -1).all()          # no ground truth attached here
+    assert set(np.unique(out.client)) == {0}
+
+
+def test_run_policy_round_respects_capacity_and_is_deterministic():
+    cfg, cm, sems, logits, labels, entries = _policy_inputs()
+    for pol in ("lru", "fifo", "rand"):
+        caches = [PolicyCache(capacity=3, policy=pol) for _ in (0, 2)]
+        out1 = run_policy_round(caches, [0, 2], entries.copy(), sems, logits,
+                                cfg, cm, np.random.default_rng(7))
+        assert all(len(c.classes) <= 3 for c in caches)
+        caches2 = [PolicyCache(capacity=3, policy=pol) for _ in (0, 2)]
+        out2 = run_policy_round(caches2, [0, 2], entries.copy(), sems,
+                                logits, cfg, cm, np.random.default_rng(7))
+        np.testing.assert_array_equal(out1.pred, out2.pred)
+        np.testing.assert_array_equal(out1.latency, out2.latency)
+
+
+def test_policy_cache_eviction_orders():
+    rng = np.random.default_rng(0)
+    lru = PolicyCache(capacity=2, policy="lru")
+    lru.touch(1, rng); lru.touch(2, rng); lru.touch(1, rng); lru.touch(3, rng)
+    assert sorted(lru.classes) == [1, 3]     # 2 was least-recently used
+
+    fifo = PolicyCache(capacity=2, policy="fifo")
+    fifo.touch(1, rng); fifo.touch(2, rng); fifo.touch(1, rng)
+    fifo.touch(3, rng)
+    assert sorted(fifo.classes) == [2, 3]    # 1 entered first -> evicted
+
+
+def test_run_policy_round_insert_observed_mutates_entries():
+    cfg, cm, sems, logits, labels, entries = _policy_inputs()
+    table = entries.copy()
+    caches = [PolicyCache(capacity=4, policy="lru") for _ in (1, 3)]
+    run_policy_round(caches, [1, 3], table, sems, logits, cfg, cm,
+                     np.random.default_rng(0), insert_observed=True)
+    assert not np.allclose(table, entries)   # observed taps were stored
+
+
+# ---------------------------------------------------------------------------
+# adapter parity: cluster.step() == the hand-rolled per-round loop
+# ---------------------------------------------------------------------------
+
+def test_replacement_adapter_matches_direct_loop():
+    sim, cm, tap_shared, shared, tap_fn, labels = _world()
+    layers = (1, 3)
+    cluster = _bootstrapped(sim, cm, tap_shared, shared,
+                            api.ReplacementPolicy(policy="lru", capacity=4,
+                                                  layers=layers, seed=7))
+    _drive(cluster, tap_fn, labels)
+
+    entries = np.asarray(cluster.server.entries)
+    rng = np.random.default_rng(7)
+    caches = {k: [PolicyCache(capacity=4, policy="lru") for _ in layers]
+              for k in range(K)}
+    tables = {k: entries.copy() for k in range(K)}
+    direct = []
+    for r in range(R):
+        for k in range(K):
+            sems, logits = tap_fn(r, k, labels[r, k])
+            direct.append(run_policy_round(
+                caches[k], list(layers), tables[k], np.asarray(sems),
+                np.asarray(logits), sim.cache, cm, rng))
+    got = api.RoundMetrics.concat(cluster.history)
+    want = api.RoundMetrics.concat(direct)
+    np.testing.assert_array_equal(got.pred, want.pred)
+    np.testing.assert_array_equal(got.hit, want.hit)
+    np.testing.assert_array_equal(got.exit_layer, want.exit_layer)
+    np.testing.assert_array_equal(got.latency, want.latency)
+
+
+def test_replacement_policy_object_is_reusable_across_clusters():
+    """A seeded policy must replay the same stream for every cluster it
+    drives — the RNG restarts when the first client engine is built."""
+    sim, cm, tap_shared, shared, tap_fn, labels = _world()
+    policy = api.ReplacementPolicy(policy="rand", capacity=3, layers=(1, 3),
+                                   seed=11)
+    runs = []
+    for _ in range(2):
+        cluster = _bootstrapped(sim, cm, tap_shared, shared, policy)
+        _drive(cluster, tap_fn, labels)
+        runs.append(api.RoundMetrics.concat(cluster.history))
+    np.testing.assert_array_equal(runs[0].pred, runs[1].pred)
+    np.testing.assert_array_equal(runs[0].latency, runs[1].latency)
+
+
+def test_smtm_adapter_matches_direct_loop():
+    sim, cm, tap_shared, shared, tap_fn, labels = _world()
+    cluster = _bootstrapped(sim, cm, tap_shared, shared, api.SMTMPolicy())
+    _drive(cluster, tap_fn, labels)
+
+    entries = np.asarray(cluster.server.entries)
+    engines = [SMTM(cfg=sim.cache, cm=cm, entries=entries.copy(),
+                    round_frames=F) for _ in range(K)]
+    direct = []
+    for r in range(R):
+        for k in range(K):
+            sems, logits = tap_fn(r, k, labels[r, k])
+            direct.append(engines[k].round(np.asarray(sems),
+                                           np.asarray(logits)))
+    got = api.RoundMetrics.concat(cluster.history)
+    want = api.RoundMetrics.concat(direct)
+    np.testing.assert_array_equal(got.pred, want.pred)
+    np.testing.assert_array_equal(got.latency, want.latency)
+
+
+def test_learned_adapter_matches_direct_loop_including_refits():
+    sim, cm, tap_shared, shared, tap_fn, labels = _world()
+    policy = api.LearnedCachePolicy(margin=0.4, retrain_rounds=2)
+    cluster = _bootstrapped(sim, cm, tap_shared, shared, policy)
+    _drive(cluster, tap_fn, labels)
+
+    sems_cal, _ = tap_shared(shared)
+    engines = []
+    for _ in range(K):
+        m = LearnedCache(cfg=sim.cache, cm=cm,
+                         exit_layers=list(range(1, L, 3)), margin=0.4,
+                         retrain_rounds=2)
+        m.fit(np.asarray(sems_cal), shared)
+        engines.append(m)
+    direct = []
+    for r in range(R):
+        for k in range(K):
+            sems, logits = tap_fn(r, k, labels[r, k])
+            direct.append(engines[k].round(np.asarray(sems),
+                                           np.asarray(logits),
+                                           labels_for_refit=labels[r, k]))
+    got = api.RoundMetrics.concat(cluster.history)
+    want = api.RoundMetrics.concat(direct)
+    np.testing.assert_array_equal(got.pred, want.pred)
+    np.testing.assert_array_equal(got.latency, want.latency)
+
+
+def test_resolve_policy_registry():
+    sim, cm, *_ = _world()
+    assert isinstance(api.resolve_policy(None, sim), api.AcaPolicy)
+    import dataclasses
+    static_sim = dataclasses.replace(sim, dynamic_allocation=False,
+                                     static_layers=(0, 2))
+    pol = api.resolve_policy(None, static_sim)
+    assert isinstance(pol, api.StaticPolicy) and pol.layers == (0, 2)
+    assert isinstance(api.resolve_policy("foggy", sim), api.FoggyCachePolicy)
+    assert api.resolve_policy("lru", sim).policy == "lru"
+    with pytest.raises(KeyError):
+        api.resolve_policy("nope", sim)
+    obj = api.FixedPolicy(classes=(1, 2), layers=(0,))
+    assert api.resolve_policy(obj, sim) is obj
