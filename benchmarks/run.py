@@ -20,6 +20,7 @@ MODULES = [
     "fig6_absorption",
     "fig7_noniid",
     "table3_longtail",
+    "table4_dynamics",
     "fig8_aca",
     "fig9_ablation",
     "fig10_load",

@@ -1,0 +1,165 @@
+"""Table IV (ours): hit ratio / latency under concept drift and client churn.
+
+The paper's §VI sweeps hold the world fixed per run; this benchmark runs the
+*dynamic* regimes its robustness claims are about — piecewise hot-class
+rotation (concept drift), clients leaving and rejoining with stale caches
+(churn), and both at once — through the scenario subsystem
+(:mod:`repro.data.scenarios`) and the engine's dynamic-membership lifecycle.
+
+Methods (all the same ``cluster.step()`` loop, only the policy differs):
+
+* ``coca``   — :class:`AcaPolicy`, per-round frequency+recency re-allocation.
+* ``static`` — the allocation ACA would cut after round 0, **frozen** for the
+  whole run (`FixedPolicy`): the staleness strawman — it tracks neither the
+  drifting hot set nor the membership.
+* ``smtm`` / ``foggy`` — the §VI.B baseline engines under the same streams.
+
+Emits ``benchmarks/BENCH_dynamics.json`` with per-regime hit ratio, latency
+and accuracy; the headline expectation is CoCa ≥ static on hit ratio under
+drift (re-allocation tracks the rotation; the frozen table goes stale).
+
+    PYTHONPATH=src python -m benchmarks.table4_dynamics [--quick]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+if __package__ in (None, ""):                      # plain-script invocation
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.common import row, world
+from repro.core import AcaPolicy, FixedPolicy, FoggyCachePolicy, SMTMPolicy
+from repro.data import (ClientSpec, Drift, Scenario, Stationary,
+                        drive_scenario, longtail_prior, make_client_context,
+                        synthesize_taps)
+
+BENCH_DYNAMICS_JSON = Path(__file__).resolve().parent / "BENCH_dynamics.json"
+
+
+def _scenario(w, *, drift: bool, churn: bool, rounds: int | None = None,
+              shift: int | None = None) -> Scenario:
+    s = w.s
+    rounds = rounds or s.rounds
+    prior = longtail_prior(s.num_classes, rho=50.0)
+    shift = shift if shift is not None else max(s.num_classes // 3, 1)
+    specs = []
+    for k in range(s.clients):
+        proc = (Drift(prior=prior, every=2, shift=shift) if drift
+                else Stationary(prior=prior))
+        leave = rejoin = None
+        join = 0
+        if churn and k == s.clients - 1 and rounds >= 3:
+            # one client drops out mid-run and rejoins with its stale cache
+            leave, rejoin = max(rounds // 3, 1), max(2 * rounds // 3, 2)
+        if churn and k == s.clients - 2 and rounds >= 3:
+            join = 1                          # and one client joins late
+        specs.append(ClientSpec(process=proc, join_round=join,
+                                leave_round=leave, rejoin_round=rejoin))
+    return Scenario(num_classes=s.num_classes, rounds=rounds,
+                    frames=s.frames, clients=tuple(specs), seed=s.seed)
+
+
+def _tap_fn(w, clients: int):
+    """(round, client)-keyed taps: every method replays identical streams."""
+    ctxs = [make_client_context(jax.random.PRNGKey(100 + k), w.scfg,
+                                group_key=jax.random.PRNGKey(7000 + k % 2))
+            for k in range(clients)]
+
+    def fn(r, k, lab):
+        key = jax.random.PRNGKey(50021 * r + 131 * k + 7)
+        return synthesize_taps(key, w.tm, jnp.asarray(lab), w.scfg,
+                               context=ctxs[k])
+    return fn
+
+
+def _frozen_static_policy(w, scenario: Scenario, tap_fn) -> FixedPolicy:
+    """The allocation ACA cuts after observing round 0, frozen forever."""
+    probe_spec = Scenario(
+        num_classes=scenario.num_classes, rounds=1, frames=scenario.frames,
+        clients=tuple(ClientSpec(process=c.process, stay_prob=c.stay_prob)
+                      for c in scenario.clients),
+        seed=scenario.seed)
+    probe = w.cluster(policy=AcaPolicy(), num_clients=probe_spec.num_clients)
+    drive_scenario(probe, probe_spec, tap_fn)
+    x = AcaPolicy().allocate(probe.allocation_context(0))
+    return FixedPolicy(classes=tuple(np.flatnonzero(x.any(axis=0))),
+                       layers=tuple(np.flatnonzero(x.any(axis=1))))
+
+
+def _run_method(w, method: str, scenario: Scenario, tap_fn):
+    if method == "coca":
+        policy = AcaPolicy()
+    elif method == "static":
+        policy = _frozen_static_policy(w, scenario, tap_fn)
+    elif method == "smtm":
+        policy = SMTMPolicy()
+    elif method == "foggy":
+        policy = FoggyCachePolicy()
+    else:
+        raise KeyError(method)
+    cluster = w.cluster(policy=policy, num_clients=scenario.num_clients)
+    res = drive_scenario(cluster, scenario, tap_fn)
+    return {"hit_ratio": float(res.hit_ratio),
+            "latency_ms": float(res.avg_latency),
+            "accuracy": float(res.accuracy)}
+
+
+def run(quick: bool = False):
+    w = world(quick)
+    s = w.s
+    tap_fn = _tap_fn(w, s.clients)
+    regimes = {
+        "stationary": dict(drift=False, churn=False),
+        "drift": dict(drift=True, churn=False),
+        "drift+churn": dict(drift=True, churn=True),
+    }
+    if not quick:
+        regimes["drift-mild"] = dict(drift=True, churn=False, shift=1)
+        regimes["churn"] = dict(drift=False, churn=True)
+    methods = ["coca", "static", "smtm"] + ([] if quick else ["foggy"])
+
+    rows, report = [], {}
+    for regime, kw in regimes.items():
+        scenario = _scenario(w, **kw)
+        entry = {"rounds": scenario.rounds, "frames": scenario.frames,
+                 "clients": scenario.num_clients, "methods": {}}
+        for m in methods:
+            out = _run_method(w, m, scenario, tap_fn)
+            entry["methods"][m] = out
+            rows.append(row(f"table4/{regime}/{m}", out["latency_ms"],
+                            hit_ratio=out["hit_ratio"],
+                            accuracy=out["accuracy"]))
+        report[regime] = entry
+
+    BENCH_DYNAMICS_JSON.write_text(json.dumps({
+        "generated_by": "benchmarks/table4_dynamics.py",
+        "quick": bool(quick),
+        "world": {"num_classes": s.num_classes, "num_layers": s.num_layers,
+                  "sem_dim": s.sem_dim, "clients": s.clients,
+                  "rounds": s.rounds, "frames": s.frames,
+                  "theta": s.theta, "seed": s.seed},
+        "regimes": report,
+    }, indent=2) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CPU-friendly quick profile")
+    args = ap.parse_args()
+    for r in run(quick=args.quick):
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+    drift = json.loads(BENCH_DYNAMICS_JSON.read_text())["regimes"]["drift"]
+    coca, static = (drift["methods"][m]["hit_ratio"]
+                    for m in ("coca", "static"))
+    print(f"# drift hit ratio: coca={coca:.3f} static={static:.3f} -> "
+          f"{BENCH_DYNAMICS_JSON.name}")

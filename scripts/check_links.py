@@ -17,6 +17,15 @@ REPO = Path(__file__).resolve().parent.parent
 DOC_GLOBS = ["README.md", "PAPER.md", "ROADMAP.md", "docs/*.md"]
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 
+# The documentation set every session must keep intact: each page must exist
+# and be reachable from the README (a page nothing links to is dead docs).
+REQUIRED_PAGES = [
+    "docs/api.md",
+    "docs/architecture.md",
+    "docs/benchmarks.md",
+    "docs/scenarios.md",
+]
+
 
 def check() -> list[str]:
     broken = []
@@ -32,6 +41,12 @@ def check() -> list[str]:
                 resolved = (md.parent / path).resolve()
                 if not resolved.exists():
                     broken.append(f"{md.relative_to(REPO)}: {target}")
+    readme = (REPO / "README.md").read_text()
+    for page in REQUIRED_PAGES:
+        if not (REPO / page).exists():
+            broken.append(f"required page missing: {page}")
+        elif page not in readme:
+            broken.append(f"README.md does not link required page: {page}")
     return broken
 
 

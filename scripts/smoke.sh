@@ -1,10 +1,29 @@
 #!/usr/bin/env bash
-# Smoke gate: tier-1 tests + the quick benchmark profile.
-# Usage: scripts/smoke.sh  (from the repo root)
+# Smoke gate: tier-1 tests + the quick benchmark profile + public examples.
+# Usage: scripts/smoke.sh [--quick]   (from the repo root)
+#   --quick : fail-fast tests + a 3-round churn+drift scenario through the
+#             dynamic-world engine path, skipping the full benchmark sweep.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+QUICK=0
+if [[ "${1:-}" == "--quick" ]]; then
+  QUICK=1
+elif [[ -n "${1:-}" ]]; then
+  echo "unknown argument: $1 (usage: scripts/smoke.sh [--quick])" >&2
+  exit 2
+fi
+
+if [[ "$QUICK" == "1" ]]; then
+  echo "== tier-1 tests (fail-fast) =="
+  python -m pytest -x -q
+
+  echo "== churn+drift scenario (3 rounds, dynamic-world engine path) =="
+  python examples/dynamic_world.py --quick --rounds 3
+  exit 0
+fi
 
 echo "== tier-1 tests =="
 python -m pytest -q
@@ -15,3 +34,4 @@ python -m benchmarks.run --quick
 echo "== public API examples =="
 python examples/quickstart.py
 python examples/multi_client_caching.py --quick
+python examples/dynamic_world.py --quick

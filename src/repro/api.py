@@ -24,3 +24,7 @@ from repro.core.engine import (  # noqa: F401
 from repro.core.metrics import FrameBatch, RoundMetrics  # noqa: F401
 from repro.core.semantic_cache import CacheConfig, CacheTable  # noqa: F401
 from repro.core.server import ServerConfig, ServerState  # noqa: F401
+from repro.data.scenarios import (  # noqa: F401
+    Burst, ClientSpec, Drift, Scenario, ScenarioError, Stationary,
+    TraceReplay, drive_scenario, zipf_prior,
+)

@@ -39,6 +39,18 @@ just retraces, ragged per-client F falls back to the per-client reference
 path (same round semantics, bit-identical metrics).  The ``mesh=`` class
 sharding of the server cache (:mod:`repro.distributed.sharding`) threads
 through unchanged: one all-gather per round at subtable allocation.
+
+The cluster membership is **dynamic**: clients join (``add_client``), leave
+(``remove_client`` — state retained), and rejoin with their stale status
+vectors (``rejoin_client``).  Inactive slots are masked out of the round
+entirely — the vectorized path gathers only active slots into the one fused
+``round_step`` dispatch, so the server's Eq.-4/5 merge scan never sees an
+inactive client's upload, and the active policy re-allocates for the new
+membership at the next ``step()``.  Declarative dynamic worlds (concept
+drift, bursts, churn schedules) live in :mod:`repro.data.scenarios`; client
+*failures* route into this lifecycle via
+:class:`repro.distributed.fault_tolerance.ClientChurn` — a dropped client is
+churn, not a crash.
 """
 
 from __future__ import annotations
@@ -200,8 +212,11 @@ class ClientEngineContext:
 class ClientEnginePolicy(Protocol):
     """Swaps the whole client round for a baseline system.
 
-    ``make_engine`` builds one per-client engine at first ``step()``;
-    ``run_round`` drives it for one :class:`FrameBatch` and returns a
+    ``make_engine`` builds one per-client engine at first ``step()``
+    (lazily for slots added or wiped by churn afterwards); an optional
+    ``reset(num_clients)`` hook is called once per fresh engine *set*,
+    before any ``make_engine``, so policies can re-arm cluster-shared state.
+    ``run_round`` drives an engine for one :class:`FrameBatch` and returns a
     single-client :class:`RoundMetrics` (the cluster stamps labels/client).
     Engine policies bypass the global-cache merge — their cross-client
     sharing (if any) lives inside the engines, as in the original systems.
@@ -327,11 +342,15 @@ class ReplacementPolicy:
     def name(self) -> str:
         return self.policy
 
+    def reset(self, num_clients: int) -> None:
+        # one shared stream across a cluster's clients (the Fig. 8 study),
+        # restarted per engine *set* so each cluster replays the same seed;
+        # lazily rebuilt engines (churn rejoins/joins) keep sharing it
+        self._rng = np.random.default_rng(self.seed)
+
     def make_engine(self, ctx: ClientEngineContext):
         from repro.core.policies import PolicyCache
-        # one shared stream across a cluster's clients (the Fig. 8 study),
-        # restarted at client 0 so each cluster replays the same seed
-        if ctx.client_index == 0:
+        if not hasattr(self, "_rng"):        # engine built without reset()
             self._rng = np.random.default_rng(self.seed)
         L = ctx.cache.num_layers
         layers = (list(self.layers) if self.layers is not None else
@@ -602,6 +621,13 @@ class CocaCluster:
     vectorized : run rounds as one device computation (vmap over clients +
         scanned merges).  ``False`` = per-client reference path — the parity
         oracle.  Ragged frame batches always take the reference path.
+
+    Membership is dynamic: ``add_client()`` grows the cluster,
+    ``remove_client(k)`` deactivates a slot (its client state is retained),
+    ``rejoin_client(k)`` reactivates it with the stale state (``fresh=True``
+    wipes it).  ``step()`` then takes one frame batch per *active* client,
+    in ascending slot order (``cluster.active_clients``).  A change in the
+    active count retraces the jitted round step once per new count.
     theta_policy / absorption_policy : optional per-round controllers.
     max_history : keep only the last N per-frame :class:`RoundMetrics`
         records in ``cluster.history`` (None = keep all).  ``result()``
@@ -625,6 +651,8 @@ class CocaCluster:
         self._absorption_policy = absorption_policy
 
         self._K = num_clients
+        self._active = (np.ones(num_clients, bool)
+                        if num_clients is not None else None)
         self._states: ClientState | None = None
         self._engines: list | None = None
         self._server: ServerState | None = None
@@ -663,6 +691,16 @@ class CocaCluster:
     @property
     def num_clients(self) -> int | None:
         return self._K
+
+    @property
+    def active_clients(self) -> list[int]:
+        """Ascending slot indices of the currently active clients — the
+        order ``step()`` expects its frame batches in."""
+        if self._K is None:
+            return []
+        if self._active is None:
+            return list(range(self._K))
+        return [int(k) for k in np.flatnonzero(self._active)]
 
     @property
     def history(self) -> list[RoundMetrics]:
@@ -716,12 +754,92 @@ class CocaCluster:
     def _ensure_clients(self, k_from_frames: int) -> None:
         if self._K is None:
             self._K = k_from_frames
-        if k_from_frames != self._K:
-            raise ValueError(f"step() got {k_from_frames} frame batches for "
-                             f"a {self._K}-client cluster")
+        if self._active is None:
+            self._active = np.ones(self._K, bool)
+        n_active = int(self._active.sum())
+        if k_from_frames != n_active:
+            raise ValueError(
+                f"step() got {k_from_frames} frame batches for a cluster "
+                f"with {n_active} active clients ({self._K} slots)")
         if self._states is None and not self._is_engine_policy:
             self._states = _init_clients_batched(self.sim.cache, self._K)
             self._host_tau = np.asarray(jax.device_get(self._states.tau))
+
+    # ---------------------------------------------------------------- churn
+    def _require_slots(self) -> None:
+        if self._K is None:
+            raise RuntimeError("client count unknown: pass num_clients= at "
+                               "construction or step() once first")
+        if self._active is None:
+            self._active = np.ones(self._K, bool)
+
+    def _check_slot(self, client: int) -> None:
+        if not 0 <= client < self._K:
+            raise ValueError(f"client {client} out of range for a "
+                             f"{self._K}-slot cluster")
+
+    def add_client(self) -> int:
+        """Grow the cluster by one fresh, active slot; returns its index.
+
+        The new client starts with zeroed status vectors and, like every
+        other client, receives its table from the active policy at the next
+        ``step()`` — joining is an allocation event, not a protocol change.
+        """
+        self._require_slots()
+        k = self._K
+        self._K += 1
+        self._active = np.append(self._active, True)
+        if self._states is not None:
+            fresh = init_client(self.sim.cache)
+            self._states = jax.tree_util.tree_map(
+                lambda s, f: jnp.concatenate([s, f[None]]),
+                self._states, fresh)
+            self._host_tau = np.asarray(jax.device_get(self._states.tau))
+        if self._engines is not None:
+            self._engines.append(None)       # built lazily at the next step
+        return k
+
+    def remove_client(self, client: int) -> None:
+        """Deactivate a slot (leave / failure).  The client's state — status
+        vectors, engine — is retained verbatim so :meth:`rejoin_client` can
+        bring it back with a stale cache; the slot is simply masked out of
+        every subsequent round (no frames, no Eq.-4/5 upload, no
+        allocation)."""
+        self._require_slots()
+        self._check_slot(client)
+        if not self._active[client]:
+            raise ValueError(f"client {client} is already inactive")
+        if self._active.sum() == 1:
+            raise ValueError("cannot remove the last active client "
+                             "(every round needs at least one)")
+        self._active[client] = False
+
+    def rejoin_client(self, client: int, *, fresh: bool = False) -> None:
+        """Reactivate a previously removed slot.
+
+        ``fresh=False`` (default) resumes with the stale status vectors the
+        client left with — the paper-faithful "device comes back after an
+        outage" case; the next global update cycle re-syncs it.
+        ``fresh=True`` wipes the slot to a cold start (also how late
+        *joiners* in a scenario schedule enter).
+        """
+        self._require_slots()
+        self._check_slot(client)
+        if self._active[client]:
+            raise ValueError(f"client {client} is already active")
+        self._active[client] = True
+        if fresh:
+            if self._states is not None:
+                blank = init_client(self.sim.cache)
+                self._states = jax.tree_util.tree_map(
+                    lambda s, b: s.at[client].set(b), self._states, blank)
+                if self._host_tau is not None:
+                    # device_get arrays can be read-only; replace, not mutate
+                    tau = np.array(self._host_tau)
+                    tau[client] = 0
+                    self._host_tau = tau
+            if self._engines is not None:
+                self._engines[client] = None
 
     # ----------------------------------------------------------- allocation
     def _gathered_entries(self) -> jax.Array:
@@ -754,8 +872,11 @@ class CocaCluster:
             round_frames=self.sim.round_frames)
 
     def allocate_tables(self) -> list[CacheTable]:
-        """Round-start per-client tables under the active policy (also the
-        serving path's table source — see serving/engine.py)."""
+        """Round-start tables for the *active* clients under the active
+        policy, in ascending slot order (also the serving path's table
+        source — see serving/engine.py).  Inactive slots get no allocation:
+        a membership change re-runs the policy for the new active set at the
+        very next round."""
         if self._K is None:
             raise RuntimeError("client count unknown: pass num_clients= at "
                                "construction or step() once first")
@@ -764,7 +885,7 @@ class CocaCluster:
                     entries,
                     jnp.asarray(self._policy.allocate(
                         self.allocation_context(k))))
-                for k in range(self._K)]
+                for k in self.active_clients]
 
     # ----------------------------------------------------------------- step
     def step(self, frames: Sequence) -> RoundMetrics:
@@ -775,6 +896,8 @@ class CocaCluster:
         per-client F (or ``vectorized=False``) takes the per-client
         reference path, uniform F the single-device-computation path.
         """
+        if not frames:
+            raise ValueError("step() needs at least one frame batch")
         frames = [fb if isinstance(fb, FrameBatch) else FrameBatch(*fb)
                   for fb in frames]
         self._ensure_clients(len(frames))
@@ -820,16 +943,28 @@ class CocaCluster:
                 self.sim = dataclasses.replace(self.sim, absorb=new)
 
     def _step_vectorized(self, frames: list[FrameBatch]) -> RoundMetrics:
-        sim, K = self.sim, self._K
+        sim = self.sim
+        act = np.flatnonzero(self._active)               # ascending slots
+        all_active = len(act) == self._K
         tables = _stack_tables(self.allocate_tables())
         sems = jnp.stack([jnp.asarray(fb.sems) for fb in frames])
         logits = jnp.stack([jnp.asarray(fb.logits) for fb in frames])
 
-        self._states, self._server, m = round_step(
-            self._states, tables, sems, logits, self._server,
+        # Churn masking: only the active slots enter the fused round_step —
+        # inactive clients contribute no frames and no Eq.-4/5 upload, and
+        # their retained (stale) state is written back untouched.
+        idx = None if all_active else jnp.asarray(act)
+        states_in = (self._states if all_active else
+                     jax.tree_util.tree_map(lambda x: x[idx], self._states))
+        new_states, self._server, m = round_step(
+            states_in, tables, sems, logits, self._server,
             cfg=sim.cache, absorb=sim.absorb, scfg=sim.server, cm=self._cm,
             global_updates=sim.global_updates,
             deadline=sim.straggler_deadline)
+        self._states = (new_states if all_active else
+                        jax.tree_util.tree_map(
+                            lambda full, new: full.at[idx].set(new),
+                            self._states, new_states))
         if sim.global_updates:
             self._alloc_entries = None       # merges changed the table
 
@@ -845,7 +980,7 @@ class CocaCluster:
             exit_layer=np.asarray(m["exit_layer"]).ravel().astype(np.int32),
             latency=np.asarray(m["lat"]).ravel(),
             labels=np.concatenate([np.asarray(fb.labels) for fb in frames]),
-            client=np.repeat(np.arange(K, dtype=np.int32), F),
+            client=np.repeat(act.astype(np.int32), F),
             num_layers=sim.cache.num_layers)
 
     def _step_reference(self, frames: list[FrameBatch]) -> RoundMetrics:
@@ -853,18 +988,19 @@ class CocaCluster:
         (round-start allocation for every client, Eq.-4/5 merges applied in
         client order at the round boundary); one host sync per client per
         stage instead of one per round."""
-        sim, K = self.sim, self._K
+        sim = self.sim
+        act = self.active_clients
         tables = self.allocate_tables()
         parts, include, new_states = [], [], []
-        for k, fb in enumerate(frames):
+        for (t, k), fb in zip(zip(tables, act), frames):
             state_k = jax.tree_util.tree_map(lambda x: x[k], self._states)
-            out = run_round(reset_round(state_k), tables[k],
+            out = run_round(reset_round(state_k), t,
                             jnp.asarray(fb.sems), jnp.asarray(fb.logits),
                             sim.cache, sim.absorb)
             new_states.append(out.state)
-            n_hot = tables[k].class_mask.sum()
+            n_hot = t.class_mask.sum()
             lat = np.asarray(frame_latency(self._cm, out.exit_layer,
-                                           tables[k].layer_mask, n_hot))
+                                           t.layer_mask, n_hot))
             parts.append(RoundMetrics.single(
                 np.asarray(out.pred), np.asarray(out.hit),
                 np.asarray(out.exit_layer), lat,
@@ -873,14 +1009,16 @@ class CocaCluster:
                          and lat.sum() > sim.straggler_deadline)
             include.append(sim.global_updates and not straggled)
 
-        for k in range(K):
-            if include[k]:
+        for i in range(len(act)):
+            if include[i]:
                 self._server = global_update(
-                    self._server, make_upload(new_states[k]), sim.server)
+                    self._server, make_upload(new_states[i]), sim.server)
         if sim.global_updates:
             self._alloc_entries = None       # merges changed the table
-        self._states = jax.tree_util.tree_map(
-            lambda *leaves: jnp.stack(leaves), *new_states)
+        for k, st in zip(act, new_states):
+            self._states = jax.tree_util.tree_map(
+                lambda full, new, k=k: full.at[k].set(new),
+                self._states, st)
 
         self._host_phi = np.asarray(jax.device_get(self._server.phi_global))
         self._host_r = np.asarray(jax.device_get(self._server.r_est))
@@ -889,17 +1027,27 @@ class CocaCluster:
 
     def _step_engines(self, frames: list[FrameBatch]) -> RoundMetrics:
         if self._engines is None:
+            self._engines = [None] * self._K
+            if hasattr(self._policy, "reset"):   # fresh engine set
+                self._policy.reset(self._K)
+        if len(self._engines) < self._K:                 # add_client grew K
+            self._engines += [None] * (self._K - len(self._engines))
+        act = self.active_clients
+        if any(self._engines[k] is None for k in act):
             entries = None
             if self._server is not None:
                 entries = np.asarray(jax.device_get(self._gathered_entries()))
-            self._engines = [
-                self._policy.make_engine(ClientEngineContext(
-                    cache=self.sim.cache, cost_model=self._cm,
-                    entries=entries, round_frames=self.sim.round_frames,
-                    shared=self._shared, client_index=k, num_clients=self._K))
-                for k in range(self._K)]
+            for k in act:                                # ascending slots
+                if self._engines[k] is None:
+                    self._engines[k] = self._policy.make_engine(
+                        ClientEngineContext(
+                            cache=self.sim.cache, cost_model=self._cm,
+                            entries=entries,
+                            round_frames=self.sim.round_frames,
+                            shared=self._shared, client_index=k,
+                            num_clients=self._K))
         parts = []
-        for k, fb in enumerate(frames):
+        for k, fb in zip(act, frames):
             out = self._policy.run_round(self._engines[k], fb)
             parts.append(out._replace(
                 labels=np.asarray(fb.labels).reshape(-1),

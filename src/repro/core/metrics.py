@@ -13,6 +13,11 @@ interface regardless of which method produced the round.
 Aggregation is deliberately order-pinned (frames concatenated client-major,
 float64 accumulation): the vectorised engine and the per-client reference
 driver produce bit-identical aggregates from bit-identical per-frame arrays.
+
+The ``client`` tags carry *slot indices*, which matters under churn
+(:mod:`repro.data.scenarios`): in a round where slot 1 is inactive the
+record holds frames for clients 0 and 2 only, and ``for_client(1)`` is
+empty — per-client trajectories stay addressable across membership changes.
 """
 
 from __future__ import annotations

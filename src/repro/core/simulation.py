@@ -33,11 +33,25 @@ __all__ = [
 ]
 
 
+_WARNED: set[str] = set()
+
+
 def _warn(old: str) -> None:
+    # once per entry point per process, not once per call — a figure sweep
+    # driving hundreds of legacy runs should not emit hundreds of identical
+    # warnings (tests reset via _reset_deprecation_warnings)
+    if old in _WARNED:
+        return
+    _WARNED.add(old)
     warnings.warn(
         f"{old} is a compatibility wrapper; use repro.core.engine.CocaCluster "
         "(see docs/api.md for the migration table)",
         DeprecationWarning, stacklevel=3)
+
+
+def _reset_deprecation_warnings() -> None:
+    """Re-arm the once-per-process deprecation warnings (test hook)."""
+    _WARNED.clear()
 
 
 def _drive(cluster: CocaCluster, tap_fn: TapFn, labels_per_round: np.ndarray,
@@ -70,14 +84,15 @@ def run_simulation(sim: SimulationConfig, server: ServerState,
 def run_simulation_reference(sim: SimulationConfig, server: ServerState,
                              tap_fn: TapFn, labels_per_round: np.ndarray,
                              cost_model: CostModel, num_rounds: int,
-                             num_clients: int) -> SimulationResult:
+                             num_clients: int, mesh=None) -> SimulationResult:
     """Per-client Python-loop driver — the parity oracle for the vectorised
     engine (same round semantics: round-start allocation for every client,
-    Eq.-4/5 merges applied in client order at the round boundary)."""
+    Eq.-4/5 merges applied in client order at the round boundary).
+    ``mesh=`` forwards like :func:`run_simulation`'s."""
     _warn("run_simulation_reference")
     cluster = CocaCluster(sim, cost_model, policy=resolve_policy(None, sim),
                           num_clients=num_clients, vectorized=False,
-                          server=server)
+                          server=server, mesh=mesh)
     return _drive(cluster, tap_fn, labels_per_round, num_rounds, num_clients)
 
 

@@ -3,3 +3,7 @@ from repro.data.streams import (  # noqa: F401
     make_client_context, make_tap_model, perturb_tap_model,
     sample_class_sequence, synthesize_taps,
 )
+from repro.data.scenarios import (  # noqa: F401
+    Burst, ClientSpec, Drift, RoundPlan, Scenario, ScenarioError, Stationary,
+    TraceReplay, drive_scenario, play, scenario_labels, zipf_prior,
+)

@@ -1,0 +1,412 @@
+"""Declarative dynamic-world scenarios: drift, bursts, churn, trace replay.
+
+The paper's central claims (§I, §VI) are about robustness on *non-stationary*
+edge streams — classes whose popularity drifts, traffic that arrives in
+bursts, devices that join and leave the cooperative cluster.  This module is
+the workload side of that story: a :class:`Scenario` is a declarative spec
+composing, per client, a **stream process** (what classes arrive, round by
+round) with a **churn schedule** (when the client is present), and
+:func:`drive_scenario` plays it through a
+:class:`~repro.core.engine.CocaCluster` using the engine's dynamic-membership
+lifecycle (``add_client`` / ``remove_client`` / ``rejoin_client``).
+
+Stream processes (all produce per-round ``(F,)`` label arrays):
+
+* :class:`Stationary` — fixed class marginal (uniform / explicit /
+  :func:`~repro.data.streams.longtail_prior` / :func:`zipf_prior`), sampled
+  with the Markov temporal locality of
+  :func:`~repro.data.streams.sample_class_sequence`.
+* :class:`Drift` — piecewise-stationary concept drift: the class marginal is
+  **rotated** (hot classes move to previously cold ids) at scheduled rounds,
+  the regime where a frozen allocation goes stale.
+* :class:`Burst` — burst traffic: occasional single-class bursts of
+  ``burst_len`` near-consecutive frames over a base marginal.
+* :class:`TraceReplay` — replay an explicit label trace (real workload logs).
+
+Determinism: every per-round, per-client draw uses an independent generator
+seeded from ``(scenario.seed, round, client)``, so streams are bit-reproducible
+and independent of churn history or iteration order — the property the
+drift-determinism tests in ``tests/test_scenarios.py`` pin down.  Label
+generation is host-side NumPy (like the rest of :mod:`repro.data.streams`);
+the round itself stays one fused jit dispatch in the engine regardless of the
+scenario driving it.
+
+Spec errors raise :class:`ScenarioError` at construction time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, NamedTuple
+
+import numpy as np
+
+from repro.core.metrics import FrameBatch
+from repro.data.streams import sample_class_sequence
+
+
+class ScenarioError(ValueError):
+    """An invalid Scenario / process / churn-schedule specification."""
+
+
+def zipf_prior(num_classes: int, a: float = 1.1) -> np.ndarray:
+    """Zipf class marginal: p(i) ∝ (i+1)^-a (a=0 → uniform)."""
+    if a < 0:
+        raise ScenarioError(f"zipf exponent must be >= 0, got {a}")
+    w = (1.0 + np.arange(num_classes)) ** -a
+    return w / w.sum()
+
+
+def _resolve_prior(prior, num_classes: int, who: str) -> np.ndarray:
+    if prior is None:
+        return np.full(num_classes, 1.0 / num_classes)
+    p = np.asarray(prior, float)
+    if p.shape != (num_classes,):
+        raise ScenarioError(f"{who}: prior has shape {p.shape}, expected "
+                            f"({num_classes},)")
+    if (p < 0).any() or not np.isfinite(p).all() or p.sum() <= 0:
+        raise ScenarioError(f"{who}: prior must be non-negative, finite, "
+                            "and sum to > 0")
+    return p / p.sum()
+
+
+# --------------------------------------------------------------------------
+# stream processes
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Stationary:
+    """Fixed class marginal — the world every pre-PR-4 experiment ran in."""
+
+    prior: object = None         # None = uniform; else (I,) weights
+
+    def validate(self, sc: "Scenario", who: str) -> None:
+        _resolve_prior(self.prior, sc.num_classes, who)
+
+    def prior_at(self, round_index: int, num_classes: int) -> np.ndarray:
+        return _resolve_prior(self.prior, num_classes, "Stationary")
+
+    def labels(self, rng: np.random.Generator, round_index: int,
+               frames: int, stay_prob: float, num_classes: int) -> np.ndarray:
+        return sample_class_sequence(
+            rng, self.prior_at(round_index, num_classes), frames, stay_prob)
+
+
+@dataclasses.dataclass(frozen=True)
+class Drift:
+    """Piecewise-stationary concept drift by hot-class rotation.
+
+    The base marginal is rolled by ``shift`` class ids at each drift event —
+    every ``every`` rounds, or at the explicit ``schedule`` rounds.  Between
+    events the stream is stationary, so each segment still has the temporal
+    locality caching exploits; *across* events the hot-spot set moves, which
+    is exactly what invalidates a frozen allocation (CacheNet's staleness
+    argument) and what ACA's frequency+recency scoring should track.
+    """
+
+    prior: object = None         # base marginal (None = long-tail-free uniform
+    #                              — pair with longtail_prior for a hot set)
+    every: int = 2               # drift period in rounds (ignored w/ schedule)
+    shift: int = 1               # class ids the marginal rotates by per event
+    schedule: tuple[int, ...] | None = None   # explicit drift rounds
+
+    def validate(self, sc: "Scenario", who: str) -> None:
+        _resolve_prior(self.prior, sc.num_classes, who)
+        if self.schedule is None:
+            if self.every < 1:
+                raise ScenarioError(f"{who}: Drift.every must be >= 1, "
+                                    f"got {self.every}")
+        else:
+            for r in self.schedule:
+                if not 1 <= r < sc.rounds:
+                    raise ScenarioError(
+                        f"{who}: Drift.schedule round {r} outside "
+                        f"[1, {sc.rounds})")
+            if list(self.schedule) != sorted(set(self.schedule)):
+                raise ScenarioError(f"{who}: Drift.schedule must be strictly "
+                                    "increasing")
+        if self.shift % max(sc.num_classes, 1) == 0:
+            raise ScenarioError(f"{who}: Drift.shift={self.shift} is a no-op "
+                                f"modulo {sc.num_classes} classes")
+
+    def rotations(self, round_index: int) -> int:
+        """Drift events that have happened at or before ``round_index``."""
+        if self.schedule is not None:
+            return int(sum(1 for r in self.schedule if r <= round_index))
+        return round_index // self.every
+
+    def prior_at(self, round_index: int, num_classes: int) -> np.ndarray:
+        base = _resolve_prior(self.prior, num_classes, "Drift")
+        return np.roll(base, self.shift * self.rotations(round_index))
+
+    def labels(self, rng: np.random.Generator, round_index: int,
+               frames: int, stay_prob: float, num_classes: int) -> np.ndarray:
+        return sample_class_sequence(
+            rng, self.prior_at(round_index, num_classes), frames, stay_prob)
+
+
+@dataclasses.dataclass(frozen=True)
+class Burst:
+    """Burst traffic: single-class runs of ``burst_len`` frames over a base
+    marginal — flash crowds on top of the ordinary Markov stream."""
+
+    prior: object = None
+    burst_prob: float = 0.05     # per-frame chance of starting a burst
+    burst_len: int = 20
+    burst_classes: tuple[int, ...] | None = None  # None = drawn from prior
+
+    def validate(self, sc: "Scenario", who: str) -> None:
+        _resolve_prior(self.prior, sc.num_classes, who)
+        if not 0.0 <= self.burst_prob <= 1.0:
+            raise ScenarioError(f"{who}: burst_prob must be in [0, 1]")
+        if self.burst_len < 1:
+            raise ScenarioError(f"{who}: burst_len must be >= 1")
+        if self.burst_classes is not None:
+            for c in self.burst_classes:
+                if not 0 <= c < sc.num_classes:
+                    raise ScenarioError(f"{who}: burst class {c} outside "
+                                        f"[0, {sc.num_classes})")
+            if not self.burst_classes:
+                raise ScenarioError(f"{who}: burst_classes must be non-empty "
+                                    "when given")
+
+    def prior_at(self, round_index: int, num_classes: int) -> np.ndarray:
+        return _resolve_prior(self.prior, num_classes, "Burst")
+
+    def labels(self, rng: np.random.Generator, round_index: int,
+               frames: int, stay_prob: float, num_classes: int) -> np.ndarray:
+        prior = self.prior_at(round_index, num_classes)
+        seq = np.empty(frames, np.int32)
+        cur = rng.choice(num_classes, p=prior)
+        in_burst = 0
+        for t in range(frames):
+            if in_burst > 0:
+                in_burst -= 1
+            elif rng.random() < self.burst_prob:
+                cur = (rng.choice(np.asarray(self.burst_classes))
+                       if self.burst_classes is not None
+                       else rng.choice(num_classes, p=prior))
+                in_burst = self.burst_len - 1
+            elif t > 0 and rng.random() >= stay_prob:
+                cur = rng.choice(num_classes, p=prior)
+            seq[t] = cur
+        return seq
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceReplay:
+    """Replay an explicit label trace: ``(rounds, F)`` plays row ``r`` at
+    round ``r``; a flat ``(N,)`` trace is consumed ``frames`` at a time."""
+
+    trace: object = ()           # array-like of class labels
+
+    def _arr(self) -> np.ndarray:
+        return np.asarray(self.trace, np.int64)
+
+    def validate(self, sc: "Scenario", who: str) -> None:
+        t = self._arr()
+        if t.ndim not in (1, 2):
+            raise ScenarioError(f"{who}: trace must be 1-D or 2-D, "
+                                f"got shape {t.shape}")
+        if t.size == 0:
+            raise ScenarioError(f"{who}: trace is empty")
+        if t.min() < 0 or t.max() >= sc.num_classes:
+            raise ScenarioError(f"{who}: trace labels outside "
+                                f"[0, {sc.num_classes})")
+        if t.ndim == 2:
+            if t.shape[1] != sc.frames or t.shape[0] < sc.rounds:
+                raise ScenarioError(
+                    f"{who}: 2-D trace needs shape (>= {sc.rounds} rounds, "
+                    f"{sc.frames} frames), got {t.shape}")
+        elif t.shape[0] < sc.rounds * sc.frames:
+            raise ScenarioError(
+                f"{who}: flat trace has {t.shape[0]} labels, needs "
+                f"{sc.rounds} * {sc.frames} = {sc.rounds * sc.frames}")
+
+    def labels(self, rng: np.random.Generator, round_index: int,
+               frames: int, stay_prob: float, num_classes: int) -> np.ndarray:
+        t = self._arr()
+        if t.ndim == 2:
+            return t[round_index].astype(np.int32)
+        lo = round_index * frames
+        return t[lo:lo + frames].astype(np.int32)
+
+
+# --------------------------------------------------------------------------
+# the scenario spec: per-client process + churn schedule
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientSpec:
+    """One client's stream process and presence schedule.
+
+    Lifecycle (round indices, all validated):
+    ``join_round`` — first round the client is present (0 = founding member;
+    later = a cold joiner).  ``leave_round`` — first round it is *absent*
+    (churned out; the engine retains its state).  ``rejoin_round`` — round it
+    comes back; with ``rejoin_fresh=False`` it resumes with the stale status
+    vectors it left with, the paper-faithful outage case.
+    """
+
+    process: object = Stationary()
+    stay_prob: float = 0.9
+    join_round: int = 0
+    leave_round: int | None = None
+    rejoin_round: int | None = None
+    rejoin_fresh: bool = False
+
+    def active_at(self, round_index: int) -> bool:
+        if round_index < self.join_round:
+            return False
+        if self.leave_round is not None and round_index >= self.leave_round:
+            return (self.rejoin_round is not None
+                    and round_index >= self.rejoin_round)
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A complete dynamic world: class space, horizon, and per-client specs.
+
+    Construction validates the whole spec (:class:`ScenarioError` on any
+    inconsistency), so a Scenario that exists is playable.
+    """
+
+    num_classes: int
+    rounds: int
+    frames: int
+    clients: tuple[ClientSpec, ...]
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.num_classes < 2:
+            raise ScenarioError(f"num_classes must be >= 2, "
+                                f"got {self.num_classes}")
+        if self.rounds < 1 or self.frames < 1:
+            raise ScenarioError(f"rounds and frames must be >= 1, got "
+                                f"rounds={self.rounds} frames={self.frames}")
+        if not self.clients:
+            raise ScenarioError("a Scenario needs at least one ClientSpec")
+        for k, c in enumerate(self.clients):
+            who = f"client {k}"
+            if not 0.0 <= c.stay_prob <= 1.0:
+                raise ScenarioError(f"{who}: stay_prob must be in [0, 1]")
+            if not 0 <= c.join_round < self.rounds:
+                raise ScenarioError(f"{who}: join_round {c.join_round} "
+                                    f"outside [0, {self.rounds})")
+            if c.leave_round is not None:
+                if not c.join_round < c.leave_round <= self.rounds:
+                    raise ScenarioError(
+                        f"{who}: leave_round {c.leave_round} must be in "
+                        f"({c.join_round}, {self.rounds}]")
+            if c.rejoin_round is not None:
+                if c.leave_round is None:
+                    raise ScenarioError(f"{who}: rejoin_round without "
+                                        "leave_round")
+                if not c.leave_round < c.rejoin_round < self.rounds:
+                    raise ScenarioError(
+                        f"{who}: rejoin_round {c.rejoin_round} must be in "
+                        f"({c.leave_round}, {self.rounds})")
+            if not hasattr(c.process, "labels"):
+                raise ScenarioError(f"{who}: process {c.process!r} has no "
+                                    "labels() method")
+            if hasattr(c.process, "validate"):
+                c.process.validate(self, who)
+        for r in range(self.rounds):
+            if not any(c.active_at(r) for c in self.clients):
+                raise ScenarioError(f"round {r} has no active client "
+                                    "(every round needs at least one)")
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.clients)
+
+    def active_at(self, round_index: int) -> list[int]:
+        return [k for k, c in enumerate(self.clients)
+                if c.active_at(round_index)]
+
+    def rng_for(self, round_index: int, client: int) -> np.random.Generator:
+        """The independent, order-free generator for one (round, client)."""
+        return np.random.default_rng(
+            np.random.SeedSequence((self.seed, round_index, client)))
+
+
+class RoundPlan(NamedTuple):
+    """One round of a played scenario: churn events + per-client labels."""
+
+    round_index: int
+    active: list[int]             # ascending — the step() batch order
+    joins: list[int]              # cold entrants this round (fresh state)
+    leaves: list[int]             # churned out since last round
+    rejoins: list[int]            # back from a leave (stale state by default)
+    labels: dict                  # client -> (F,) int labels
+
+
+def play(scenario: Scenario) -> Iterator[RoundPlan]:
+    """Yield the per-round churn events and label streams of a scenario."""
+    prev: set[int] = set(scenario.active_at(0))
+    for r in range(scenario.rounds):
+        now = set(scenario.active_at(r))
+        joins = [k for k in sorted(now - prev)
+                 if scenario.clients[k].join_round == r]
+        rejoins = [k for k in sorted(now - prev)
+                   if scenario.clients[k].rejoin_round == r]
+        leaves = sorted(prev - now)
+        labels = {}
+        for k in sorted(now):
+            c = scenario.clients[k]
+            labels[k] = np.asarray(c.process.labels(
+                scenario.rng_for(r, k), r, scenario.frames, c.stay_prob,
+                scenario.num_classes), np.int32)
+        yield RoundPlan(round_index=r, active=sorted(now), joins=joins,
+                        leaves=leaves, rejoins=rejoins, labels=labels)
+        prev = now
+
+
+def scenario_labels(scenario: Scenario) -> list[dict]:
+    """All rounds' label dicts (deterministic in ``scenario.seed``)."""
+    return [plan.labels for plan in play(scenario)]
+
+
+# --------------------------------------------------------------------------
+# the engine driver
+# --------------------------------------------------------------------------
+
+
+def drive_scenario(cluster, scenario: Scenario, tap_fn):
+    """Play a scenario through a :class:`~repro.core.engine.CocaCluster`.
+
+    ``cluster`` must be constructed with
+    ``num_clients=scenario.num_clients`` (slot k of the cluster is client
+    spec k; churn needs the slot count up front).  ``tap_fn`` is the usual
+    ``(round, client, labels) -> (sems, logits)`` tap synthesiser.  Churn is
+    applied through the engine lifecycle — leaves via ``remove_client``
+    (state retained), rejoins via ``rejoin_client`` (stale by default),
+    late joins via ``rejoin_client(fresh=True)`` — then the active clients'
+    frames run as one ``step()``.  Returns ``cluster.result()``.
+    """
+    if cluster.num_clients != scenario.num_clients:
+        raise ScenarioError(
+            f"cluster has num_clients={cluster.num_clients}, scenario "
+            f"needs {scenario.num_clients} (pass num_clients= at "
+            "construction)")
+    for k in range(scenario.num_clients):
+        if not scenario.clients[k].active_at(0):
+            cluster.remove_client(k)         # joins later; park the slot
+    for plan in play(scenario):
+        # arrivals before departures: a handover round (the only remaining
+        # client leaves exactly as another rejoins) must stay playable
+        for k in plan.joins:
+            cluster.rejoin_client(k, fresh=True)
+        for k in plan.rejoins:
+            cluster.rejoin_client(
+                k, fresh=scenario.clients[k].rejoin_fresh)
+        for k in plan.leaves:
+            cluster.remove_client(k)
+        cluster.step([
+            FrameBatch(*tap_fn(plan.round_index, k, plan.labels[k]),
+                       labels=plan.labels[k])
+            for k in plan.active])
+    return cluster.result()

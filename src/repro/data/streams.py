@@ -7,6 +7,11 @@ imbalance ratio ``ρ`` (exponential decay in class sample counts), and temporal
 locality (consecutive frames share a class with probability ``stay_prob`` —
 the paper's "batches share the same class label" construction).
 
+This module is the *stationary* layer: class marginals and tap synthesis.
+Time-varying worlds — concept drift, burst traffic, trace replay, client
+churn schedules — compose these primitives declaratively in
+:mod:`repro.data.scenarios` (see docs/scenarios.md).
+
 The *tap model* emulates a blocked classifier: per (layer, class) ground-truth
 centroids on the unit sphere, with per-layer noise that decreases with depth —
 shallow taps are weakly discriminative, deep taps strongly, reproducing the

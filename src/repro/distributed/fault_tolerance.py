@@ -19,6 +19,16 @@ Three mechanisms, each exercised by tests/test_fault_tolerance.py:
    §IV; freshness, not correctness, is lost).  At the training layer,
    ``StragglerPolicy`` skips a slow data shard's microbatch by re-weighting
    the gradient accumulation (bounded-staleness semantics).
+
+4. **Client churn** — :class:`ClientChurn` routes client *failures* into the
+   engine's dynamic-membership lifecycle
+   (:meth:`~repro.core.engine.CocaCluster.remove_client` /
+   :meth:`~repro.core.engine.CocaCluster.rejoin_client`): a client that
+   stops delivering frames is churned out of the round — not a crash, not a
+   stalled cluster — and rejoins with its stale cache when it reappears
+   (wiped instead if it stayed away longer than ``stale_limit`` rounds).
+   Scheduled churn (the scenario specs of :mod:`repro.data.scenarios`) uses
+   the same lifecycle; this class is the unscheduled path.
 """
 
 from __future__ import annotations
@@ -57,6 +67,83 @@ def elastic_remesh(old_mesh, *, lost_data_ranks: int):
     n_needed = int(np.prod(shape))
     devices = np.asarray(jax.devices()[:n_needed]).reshape(shape)
     return jax.sharding.Mesh(devices, names)
+
+
+class ClientChurn:
+    """Failure-driven churn for a :class:`~repro.core.engine.CocaCluster`.
+
+    Wraps ``cluster.step()`` with a presence protocol: each round the caller
+    hands over *whatever frames actually arrived* as a ``{client: batch}``
+    dict, and the guard reconciles cluster membership with it —
+
+    * an active client with no frames this round is **removed** (its state
+      is retained; the server's Eq.-4/5 merge simply never sees it);
+    * a known client that reappears **rejoins**, with its stale state if the
+      outage lasted at most ``stale_limit`` rounds, wiped otherwise;
+    * a never-seen client id equal to the next slot index **joins** via
+      ``add_client()``.
+
+    The cluster itself never throws for a missing client — a dropped client
+    is churn, not a crash.
+    """
+
+    def __init__(self, cluster, stale_limit: int = 8):
+        self.cluster = cluster
+        self.stale_limit = stale_limit
+        self._away: dict[int, int] = {}      # client -> rounds missed so far
+
+    @property
+    def away_rounds(self) -> dict[int, int]:
+        return dict(self._away)
+
+    def step(self, frames_by_client: dict):
+        """Reconcile membership with the arrived frames, then run the round.
+
+        ``frames_by_client`` — ``{client_index: FrameBatch-or-triple}`` for
+        every client that delivered this round.  Returns the round's
+        :class:`~repro.core.metrics.RoundMetrics`.
+        """
+        if not frames_by_client:
+            raise ValueError("no client delivered frames this round; "
+                             "nothing to step")
+        cluster = self.cluster
+        present = sorted(frames_by_client)
+        if cluster.num_clients is None:
+            # first contact: the present set defines the founding membership
+            if present != list(range(len(present))):
+                raise ValueError(f"first round must present contiguous "
+                                 f"client ids 0..n-1, got {present}")
+            return cluster.step([frames_by_client[k] for k in present])
+        # validate every id before mutating anything: a rejected round must
+        # leave the cluster membership exactly as it found it
+        new_ids = [k for k in present if k >= cluster.num_clients]
+        if new_ids != list(range(cluster.num_clients,
+                                 cluster.num_clients + len(new_ids))):
+            raise ValueError(
+                f"client ids {new_ids} skip slots (cluster has "
+                f"{cluster.num_clients}); new clients must take the next "
+                "indices")
+        for _ in new_ids:                    # genuinely new clients join
+            cluster.add_client()
+        # arrivals before departures: a handover round (the only active
+        # client fails exactly as a returning one reappears) must churn,
+        # not trip the engine's last-active-client guard
+        active = set(cluster.active_clients)
+        for k in present:
+            if k in active:
+                continue
+            if k in self._away:              # back from an outage
+                cluster.rejoin_client(
+                    k, fresh=self._away[k] > self.stale_limit)
+                del self._away[k]
+            else:
+                cluster.rejoin_client(k, fresh=True)   # parked slot, cold
+        for k in sorted(active - set(present)):
+            cluster.remove_client(k)         # failure -> leave, state kept
+            self._away.setdefault(k, 0)
+        for k in list(self._away):
+            self._away[k] += 1
+        return cluster.step([frames_by_client[k] for k in present])
 
 
 @dataclasses.dataclass

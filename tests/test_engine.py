@@ -109,9 +109,11 @@ def test_cluster_round_metrics_match_reference_mode_per_frame():
 
 
 def test_run_simulation_wrapper_matches_cluster():
+    from repro.core.simulation import _reset_deprecation_warnings
     sim, cm, tap_shared, shared, tap_fn, labels = _world()
     server = api.bootstrap_server(jax.random.PRNGKey(0), sim, tap_shared,
                                   shared, cm)
+    _reset_deprecation_warnings()            # the warning fires once/process
     with pytest.warns(DeprecationWarning):
         old = run_simulation(sim, server, tap_fn, labels, cm, R, K)
     res = _drive(api.CocaCluster(sim, cm, server=server), tap_fn, labels)
@@ -283,9 +285,11 @@ def test_simulate_metrics_consumes_round_records():
 # ---------------------------------------------------------------------------
 
 def test_old_entry_points_warn_but_work():
+    from repro.core.simulation import _reset_deprecation_warnings
     sim, cm, tap_shared, shared, tap_fn, labels = _world()
     server = api.bootstrap_server(jax.random.PRNGKey(0), sim, tap_shared,
                                   shared, cm)
+    _reset_deprecation_warnings()
     with pytest.warns(DeprecationWarning):
         run_simulation(sim, server, tap_fn, labels, cm, 1, K)
 

@@ -1,0 +1,454 @@
+"""The dynamic-world subsystem: Scenario specs, churn lifecycle, drift
+determinism, and vectorized-vs-reference parity under churn + drift.
+
+Headline guarantees pinned here:
+* a churn+drift scenario through the vectorized ``CocaCluster.step()`` path
+  matches the per-client reference driver **bit-for-bit** on a fixed seed;
+* a client that leaves and rejoins (stale cache) converges back to its
+  never-left twin in a stationary world;
+* scenario label streams are deterministic functions of
+  ``(seed, round, client)``;
+* invalid specs raise :class:`ScenarioError` at construction.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import calibrate
+from repro.data import (Burst, ClientSpec, Drift, Scenario, ScenarioError,
+                        Stationary, TraceReplay, drive_scenario,
+                        longtail_prior, play, scenario_labels, zipf_prior)
+from repro.data.scenarios import RoundPlan
+
+I, L, D, F, K, R = 10, 4, 16, 24, 3, 6
+
+
+def _world(theta=0.05, **sim_kw):
+    cache = api.CacheConfig(num_classes=I, num_layers=L, sem_dim=D,
+                            theta=theta)
+    sim = api.SimulationConfig(cache=cache, round_frames=F,
+                               mem_budget=8_000.0, **sim_kw)
+    cm = calibrate(np.linspace(2.0, 1.0, L + 1), np.full(L, D), head_cost=0.5)
+
+    centroids = jax.random.normal(jax.random.PRNGKey(0), (L, I, D))
+
+    def taps_for(labels, seed):
+        k = jax.random.PRNGKey(seed)
+        lab = jnp.asarray(labels)
+        sems = centroids[:, lab, :].transpose(1, 0, 2) + \
+            0.6 * jax.random.normal(k, (len(labels), L, D))
+        logits = (jax.nn.one_hot(lab, I) * 4.0
+                  + jax.random.normal(jax.random.fold_in(k, 1),
+                                      (len(labels), I)))
+        return sems, logits
+
+    def tap_shared(labels):
+        return taps_for(labels, 999)
+
+    def tap_fn(r, k_, labels):
+        return taps_for(labels, 7 + 13 * r + 131 * k_)
+
+    shared = np.tile(np.arange(I), 8)
+    return sim, cm, tap_shared, shared, tap_fn
+
+
+def _server(sim, cm, tap_shared, shared):
+    return api.bootstrap_server(jax.random.PRNGKey(0), sim, tap_shared,
+                                shared, cm)
+
+
+def _churn_drift_scenario(rounds=R, seed=3):
+    return Scenario(num_classes=I, rounds=rounds, frames=F, seed=seed,
+                    clients=(
+        ClientSpec(process=Drift(prior=longtail_prior(I, 10.0),
+                                 every=2, shift=3)),
+        ClientSpec(process=Stationary(zipf_prior(I, 1.0)),
+                   leave_round=2, rejoin_round=4),
+        ClientSpec(process=Burst(burst_prob=0.1, burst_len=5),
+                   join_round=1),
+    ))
+
+
+# ---------------------------------------------------------------------------
+# Scenario spec validation
+# ---------------------------------------------------------------------------
+
+def test_scenario_validation_errors():
+    ok = ClientSpec()
+    with pytest.raises(ScenarioError):          # no clients
+        Scenario(num_classes=I, rounds=2, frames=F, clients=())
+    with pytest.raises(ScenarioError):          # bad horizon
+        Scenario(num_classes=I, rounds=0, frames=F, clients=(ok,))
+    with pytest.raises(ScenarioError):          # join outside horizon
+        Scenario(num_classes=I, rounds=2, frames=F,
+                 clients=(ok, ClientSpec(join_round=5)))
+    with pytest.raises(ScenarioError):          # leave before join
+        Scenario(num_classes=I, rounds=4, frames=F,
+                 clients=(ok, ClientSpec(join_round=2, leave_round=1)))
+    with pytest.raises(ScenarioError):          # rejoin without leave
+        Scenario(num_classes=I, rounds=4, frames=F,
+                 clients=(ok, ClientSpec(rejoin_round=2)))
+    with pytest.raises(ScenarioError):          # rejoin not after leave
+        Scenario(num_classes=I, rounds=4, frames=F,
+                 clients=(ok, ClientSpec(leave_round=2, rejoin_round=2)))
+    with pytest.raises(ScenarioError):          # round with nobody active
+        Scenario(num_classes=I, rounds=4, frames=F,
+                 clients=(ClientSpec(leave_round=2),
+                          ClientSpec(leave_round=2)))
+    with pytest.raises(ScenarioError):          # prior of the wrong shape
+        Scenario(num_classes=I, rounds=2, frames=F,
+                 clients=(ClientSpec(process=Stationary(np.ones(I + 1))),))
+    with pytest.raises(ScenarioError):          # negative prior mass
+        Scenario(num_classes=I, rounds=2, frames=F,
+                 clients=(ClientSpec(process=Stationary(-np.ones(I))),))
+    with pytest.raises(ScenarioError):          # drift that never drifts
+        Scenario(num_classes=I, rounds=4, frames=F,
+                 clients=(ClientSpec(process=Drift(shift=I)),))
+    with pytest.raises(ScenarioError):          # drift schedule out of range
+        Scenario(num_classes=I, rounds=4, frames=F,
+                 clients=(ClientSpec(process=Drift(schedule=(0,))),))
+    with pytest.raises(ScenarioError):          # burst_prob out of range
+        Scenario(num_classes=I, rounds=2, frames=F,
+                 clients=(ClientSpec(process=Burst(burst_prob=1.5)),))
+    with pytest.raises(ScenarioError):          # trace too short
+        Scenario(num_classes=I, rounds=2, frames=F,
+                 clients=(ClientSpec(process=TraceReplay(np.zeros(F))),))
+    with pytest.raises(ScenarioError):          # trace labels out of range
+        Scenario(num_classes=I, rounds=1, frames=F,
+                 clients=(ClientSpec(process=TraceReplay(
+                     np.full(F, I, np.int64))),))
+    with pytest.raises(ScenarioError):          # not a process at all
+        Scenario(num_classes=I, rounds=1, frames=F,
+                 clients=(ClientSpec(process=object()),))
+
+
+def test_scenario_churn_plan_events():
+    plans = list(play(_churn_drift_scenario()))
+    assert [p.active for p in plans] == [[0, 1], [0, 1, 2], [0, 2], [0, 2],
+                                         [0, 1, 2], [0, 1, 2]]
+    assert plans[1].joins == [2] and plans[2].leaves == [1]
+    assert plans[4].rejoins == [1]
+    for p in plans:
+        assert isinstance(p, RoundPlan)
+        assert sorted(p.labels) == p.active
+        for lab in p.labels.values():
+            assert lab.shape == (F,) and lab.min() >= 0 and lab.max() < I
+
+
+# ---------------------------------------------------------------------------
+# stream-process behaviour + determinism
+# ---------------------------------------------------------------------------
+
+def test_scenario_labels_deterministic_under_fixed_seed():
+    spec = _churn_drift_scenario(seed=11)
+    a, b = scenario_labels(spec), scenario_labels(spec)
+    for ra, rb in zip(a, b):
+        assert sorted(ra) == sorted(rb)
+        for k in ra:
+            np.testing.assert_array_equal(ra[k], rb[k])
+    # a different seed must actually change the streams
+    c = scenario_labels(_churn_drift_scenario(seed=12))
+    assert any((a[r][k] != c[r][k]).any() for r in range(len(a))
+               for k in a[r])
+
+
+def test_drift_rotates_the_hot_set():
+    prior = longtail_prior(I, 50.0)
+    d = Drift(prior=prior, every=2, shift=3)
+    p0, p2 = d.prior_at(0, I), d.prior_at(2, I)
+    assert d.rotations(0) == 0 and d.rotations(2) == 1 and d.rotations(5) == 2
+    np.testing.assert_allclose(p0, prior / prior.sum())
+    np.testing.assert_allclose(p2, np.roll(p0, 3))
+    assert int(np.argmax(p0)) != int(np.argmax(p2))
+    # explicit schedules override the period
+    ds = Drift(prior=prior, schedule=(3,), shift=3)
+    assert ds.rotations(2) == 0 and ds.rotations(3) == 1
+    # drifted streams are dominated by the *current* hot classes
+    lab = ds.labels(np.random.default_rng(0), 4, 2000, 0.0, I)
+    hot = int(np.argmax(ds.prior_at(4, I)))
+    assert np.bincount(lab, minlength=I).argmax() == hot
+
+
+def test_burst_process_emits_single_class_runs():
+    b = Burst(burst_prob=0.2, burst_len=8, burst_classes=(7,))
+    lab = b.labels(np.random.default_rng(0), 0, 400, 0.5, I)
+    runs = np.diff(np.flatnonzero(np.diff(lab) != 0))
+    assert (lab == 7).mean() > 0.3          # bursts dominate the stream
+    assert runs.max() >= 8                  # and arrive as contiguous runs
+
+
+def test_trace_replay_consumes_rows_and_flat_slices():
+    t2 = np.arange(2 * F).reshape(2, F) % I
+    p2 = TraceReplay(t2)
+    np.testing.assert_array_equal(
+        p2.labels(np.random.default_rng(0), 1, F, 0.9, I), t2[1])
+    flat = TraceReplay(np.arange(2 * F) % I)
+    np.testing.assert_array_equal(
+        flat.labels(np.random.default_rng(0), 1, F, 0.9, I),
+        (np.arange(2 * F) % I)[F:2 * F])
+
+
+# ---------------------------------------------------------------------------
+# churn lifecycle on the engine
+# ---------------------------------------------------------------------------
+
+def test_cluster_churn_lifecycle_and_errors():
+    sim, cm, tap_shared, shared, tap_fn = _world()
+    cluster = api.CocaCluster(sim, cm, num_clients=K,
+                              server=_server(sim, cm, tap_shared, shared))
+    assert cluster.active_clients == [0, 1, 2]
+    cluster.remove_client(1)
+    assert cluster.active_clients == [0, 2]
+    with pytest.raises(ValueError):
+        cluster.remove_client(1)            # already inactive
+    with pytest.raises(ValueError):
+        cluster.rejoin_client(0)            # already active
+    with pytest.raises(ValueError):
+        cluster.remove_client(99)           # no such slot
+    rng = np.random.default_rng(0)
+    lab = rng.integers(0, I, size=(K, F))
+    with pytest.raises(ValueError):         # 3 batches for 2 active clients
+        cluster.step([(*tap_fn(0, k, lab[k]), lab[k]) for k in range(K)])
+    m = cluster.step([(*tap_fn(0, k, lab[k]), lab[k]) for k in (0, 2)])
+    assert sorted(set(m.client.tolist())) == [0, 2]
+    cluster.rejoin_client(1)
+    k_new = cluster.add_client()
+    assert k_new == K and cluster.active_clients == [0, 1, 2, 3]
+    lab4 = rng.integers(0, I, size=(K + 1, F))
+    m = cluster.step([(*tap_fn(1, k, lab4[k]), lab4[k]) for k in range(K + 1)])
+    assert sorted(set(m.client.tolist())) == [0, 1, 2, 3]
+
+
+def test_churn_scenario_vectorized_matches_reference_bit_for_bit():
+    sim, cm, tap_shared, shared, tap_fn = _world()
+    server = _server(sim, cm, tap_shared, shared)
+    spec = _churn_drift_scenario()
+    vec = api.CocaCluster(sim, cm, server=server, num_clients=K)
+    ref = api.CocaCluster(sim, cm, server=server, num_clients=K,
+                          vectorized=False)
+    r1 = drive_scenario(vec, spec, tap_fn)
+    r2 = drive_scenario(ref, spec, tap_fn)
+    assert r1.avg_latency == r2.avg_latency          # bitwise, not approx
+    assert r1.hit_ratio == r2.hit_ratio
+    np.testing.assert_array_equal(r1.exit_histogram, r2.exit_histogram)
+    for m1, m2 in zip(vec.history, ref.history):
+        np.testing.assert_array_equal(m1.pred, m2.pred)
+        np.testing.assert_array_equal(m1.hit, m2.hit)
+        np.testing.assert_array_equal(m1.latency, m2.latency)
+        np.testing.assert_array_equal(m1.client, m2.client)
+    assert r1.hit_ratio > 0
+
+
+def test_remove_and_rejoin_converges_to_never_left():
+    """Stale-cache rejoin in a stationary world: after the rejoined client
+    runs a few more rounds, its metrics converge to the never-left twin."""
+    sim, cm, tap_shared, shared, tap_fn = _world()
+    server = _server(sim, cm, tap_shared, shared)
+    stay = api.CocaCluster(sim, cm, server=server, num_clients=K)
+    churn = api.CocaCluster(sim, cm, server=server, num_clients=K)
+    rng = np.random.default_rng(5)
+    labels = rng.integers(0, I, size=(8, K, F))
+
+    def batches(r, ks):
+        return [(*tap_fn(r, k, labels[r, k]), labels[r, k]) for k in ks]
+
+    for r in range(8):
+        stay.step(batches(r, range(K)))
+        if r == 2:
+            churn.remove_client(2)
+        if r == 5:
+            churn.rejoin_client(2)           # stale status vectors
+        churn.step(batches(r, churn.active_clients))
+    m_stay = stay.history[-1].for_client(2)
+    m_churn = churn.history[-1].for_client(2)
+    assert m_churn.frames == m_stay.frames == F
+    assert abs(m_churn.hit_ratio - m_stay.hit_ratio) < 0.15
+    assert abs(m_churn.accuracy - m_stay.accuracy) < 0.15
+    assert abs(m_churn.avg_latency / m_stay.avg_latency - 1.0) < 0.25
+
+
+def test_engine_policy_cluster_supports_churn():
+    sim, cm, tap_shared, shared, tap_fn = _world()
+    cluster = api.CocaCluster(sim, cm, policy=api.SMTMPolicy(), num_clients=K)
+    cluster.bootstrap(jax.random.PRNGKey(0), tap_shared, shared)
+    rng = np.random.default_rng(1)
+    lab = rng.integers(0, I, size=(3, K, F))
+    cluster.step([(*tap_fn(0, k, lab[0, k]), lab[0, k]) for k in range(K)])
+    cluster.remove_client(0)
+    m = cluster.step([(*tap_fn(1, k, lab[1, k]), lab[1, k]) for k in (1, 2)])
+    assert sorted(set(m.client.tolist())) == [1, 2]
+    cluster.rejoin_client(0)
+    m = cluster.step([(*tap_fn(2, k, lab[2, k]), lab[2, k]) for k in range(K)])
+    assert sorted(set(m.client.tolist())) == [0, 1, 2]
+
+
+def test_cluster_never_runs_empty():
+    sim, cm, tap_shared, shared, tap_fn = _world()
+    cluster = api.CocaCluster(sim, cm, num_clients=2,
+                              server=_server(sim, cm, tap_shared, shared))
+    cluster.remove_client(0)
+    with pytest.raises(ValueError):
+        cluster.remove_client(1)            # would empty the active set
+    assert cluster.active_clients == [1]
+    with pytest.raises(ValueError):
+        cluster.step([])                    # zero batches is always an error
+
+
+def test_replacement_policy_shared_stream_survives_churn():
+    """The Fig. 8 invariant: one RNG stream shared by all engines of a
+    cluster, re-armed per engine *set* — a churn rebuild of slot 0 must not
+    reseed it, and a second cluster must replay the same stream."""
+    sim, cm, tap_shared, shared, tap_fn = _world()
+    server = _server(sim, cm, tap_shared, shared)
+    rng = np.random.default_rng(2)
+    lab = rng.integers(0, I, size=(3, K, F))
+
+    def run_cluster(churn):
+        pol = api.ReplacementPolicy(policy="lru", capacity=3)
+        cluster = api.CocaCluster(sim, cm, policy=pol, num_clients=K,
+                                  server=server)
+        cluster.step([(*tap_fn(0, k, lab[0, k]), lab[0, k])
+                      for k in range(K)])
+        shared_rng = pol._rng
+        if churn:
+            cluster.remove_client(0)
+            cluster.rejoin_client(0, fresh=True)   # rebuilds engine 0 only
+        cluster.step([(*tap_fn(1, k, lab[1, k]), lab[1, k])
+                      for k in range(K)])
+        assert pol._rng is shared_rng       # never forked mid-session
+        return cluster
+
+    run_cluster(churn=False)
+    run_cluster(churn=True)
+
+
+def test_drive_scenario_handover_round():
+    """A valid scenario where the only remaining client leaves exactly as
+    another rejoins must stay playable (arrivals apply before departures)."""
+    sim, cm, tap_shared, shared, tap_fn = _world()
+    spec = Scenario(num_classes=I, rounds=3, frames=F, clients=(
+        ClientSpec(leave_round=1, rejoin_round=2),
+        ClientSpec(leave_round=2),
+    ))
+    cluster = api.CocaCluster(sim, cm, num_clients=2,
+                              server=_server(sim, cm, tap_shared, shared))
+    res = drive_scenario(cluster, spec, tap_fn)
+    assert res.avg_latency > 0
+    assert [sorted(set(m.client.tolist())) for m in cluster.history] == \
+        [[0, 1], [1], [0]]
+
+
+def test_drive_scenario_requires_matching_slot_count():
+    sim, cm, tap_shared, shared, tap_fn = _world()
+    cluster = api.CocaCluster(sim, cm,
+                              server=_server(sim, cm, tap_shared, shared))
+    with pytest.raises(ScenarioError):
+        drive_scenario(cluster, _churn_drift_scenario(), tap_fn)
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance: a dropped client is churn, not a crash
+# ---------------------------------------------------------------------------
+
+def test_client_churn_guard_converts_failures_to_membership():
+    from repro.core.metrics import FrameBatch
+    from repro.distributed.fault_tolerance import ClientChurn
+    sim, cm, tap_shared, shared, tap_fn = _world()
+    cluster = api.CocaCluster(sim, cm,
+                              server=_server(sim, cm, tap_shared, shared))
+    guard = ClientChurn(cluster, stale_limit=1)
+    rng = np.random.default_rng(0)
+
+    def fb(r, k):
+        lab = rng.integers(0, I, size=F)
+        return FrameBatch(*tap_fn(r, k, lab), labels=lab)
+
+    guard.step({k: fb(0, k) for k in range(K)})
+    assert cluster.active_clients == [0, 1, 2]
+    guard.step({0: fb(1, 0), 2: fb(1, 2)})       # client 1 fails silently
+    assert cluster.active_clients == [0, 2]
+    assert guard.away_rounds == {1: 1}
+    m = guard.step({k: fb(2, k) for k in range(K)})   # 1 is back (stale ok)
+    assert cluster.active_clients == [0, 1, 2]
+    assert guard.away_rounds == {}
+    assert sorted(set(m.client.tolist())) == [0, 1, 2]
+    guard.step({k: fb(3, k) for k in range(K + 1)})   # a new client joins
+    assert cluster.active_clients == [0, 1, 2, 3]
+    with pytest.raises(ValueError):                   # ids must not skip
+        guard.step({0: fb(4, 0), 9: fb(4, 1)})
+    # the rejected round must not have mutated membership (ids validated
+    # before any add_client)
+    assert cluster.num_clients == K + 1
+    assert cluster.active_clients == [0, 1, 2, 3]
+
+
+def test_client_churn_guard_handover_round():
+    """The last active client failing in the same round a churned-out client
+    returns is churn, not a crash."""
+    from repro.core.metrics import FrameBatch
+    from repro.distributed.fault_tolerance import ClientChurn
+    sim, cm, tap_shared, shared, tap_fn = _world()
+    cluster = api.CocaCluster(sim, cm,
+                              server=_server(sim, cm, tap_shared, shared))
+    guard = ClientChurn(cluster)
+    rng = np.random.default_rng(3)
+
+    def fb(r, k):
+        lab = rng.integers(0, I, size=F)
+        return FrameBatch(*tap_fn(r, k, lab), labels=lab)
+
+    guard.step({0: fb(0, 0), 1: fb(0, 1)})
+    guard.step({0: fb(1, 0)})                 # client 1 fails
+    assert cluster.active_clients == [0]
+    m = guard.step({1: fb(2, 1)})             # 0 fails as 1 returns
+    assert cluster.active_clients == [1]
+    assert sorted(set(m.client.tolist())) == [1]
+
+
+# ---------------------------------------------------------------------------
+# legacy wrapper: warn once, forward mesh
+# ---------------------------------------------------------------------------
+
+def test_run_simulation_warns_once_not_per_call():
+    from repro.core import run_simulation
+    from repro.core.simulation import _reset_deprecation_warnings
+    sim, cm, tap_shared, shared, tap_fn = _world()
+    server = _server(sim, cm, tap_shared, shared)
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, I, size=(1, K, F))
+    _reset_deprecation_warnings()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        run_simulation(sim, server, tap_fn, labels, cm, 1, K)
+        run_simulation(sim, server, tap_fn, labels, cm, 1, K)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)
+           and "compatibility wrapper" in str(w.message)]
+    assert len(dep) == 1                     # once per process, not per call
+
+
+def test_run_simulation_reference_forwards_mesh(rng):
+    """The reference wrapper accepts and forwards ``mesh=`` (parity with
+    ``run_simulation``); a 1-device mesh must reproduce the no-mesh run."""
+    import inspect
+    from repro.core import run_simulation_reference
+    from repro.core.simulation import run_simulation_reference as rsr
+    assert "mesh" in inspect.signature(rsr).parameters
+    sim, cm, tap_shared, shared, tap_fn = _world()
+    server = _server(sim, cm, tap_shared, shared)
+    labels = np.asarray(rng.integers(0, I, size=(2, K, F)))
+    mesh = jax.make_mesh((1,), ("data",))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        plain = run_simulation_reference(sim, server, tap_fn, labels, cm,
+                                         2, K)
+        meshed = run_simulation_reference(sim, server, tap_fn, labels, cm,
+                                          2, K, mesh=mesh)
+    np.testing.assert_allclose(meshed.per_round_latency,
+                               plain.per_round_latency)
+    np.testing.assert_array_equal(meshed.exit_histogram,
+                                  plain.exit_histogram)
