@@ -1,7 +1,10 @@
-"""End-to-end serving driver (the paper's scenario): a REAL transformer
-backbone (AST-Base smoke config) classifies a frame stream through the
-pjit-compiled ``serve_step`` with the CoCa semantic cache inside the step,
-and exited requests free their slots (continuous batching).
+"""End-to-end ONLINE serving (the paper's scenario): a REAL transformer
+backbone (AST-Base smoke config) supplies the semantic taps, and the
+closed-loop serving session (`repro.serving.loop`) does the rest — Poisson
+arrivals hit the EDF+shedding scheduler, each tick's admitted batch runs
+through the jit-compiled prefill and the fused cache lookup on the live
+ACA-cut table, early exits retire their slots (continuous batching), and
+per-window SLO attainment drives Θ + re-allocation.
 
     PYTHONPATH=src python examples/serve_stream.py
 """
@@ -13,25 +16,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.semantic_cache import CacheTable, l2_normalize
-from repro.launch.mesh import make_debug_mesh
+from repro.core import (AcaPolicy, CacheConfig, CocaCluster,
+                        SimulationConfig, calibrate)
+from repro.data import PoissonArrivals, RequestStream, Stationary
 from repro.models import init_params, prefill
-from repro.serving.batching import BatchingConfig, simulate
-from repro.serving.engine import coca_cache_config, make_prefill_step
+from repro.serving.batching import BatchingConfig
+from repro.serving.loop import ServeLoopConfig, ServingSession, \
+    throughput_gain
 
 cfg = dataclasses.replace(get_config("coca-ast", smoke=True), tap_every=1)
-mesh = make_debug_mesh()
 params = init_params(jax.random.PRNGKey(0), cfg)
 B, S = 8, 8
-cc = coca_cache_config(cfg, theta=0.05)
+n_taps = len(cfg.tap_layers())
+num_blocks = n_taps + 1
 
-# --- build a cache table from "previous inferences": run a batch of frames
-# per class and average their taps (the profile bootstrap) ------------------
 rng0 = np.random.default_rng(7)
 class_dirs = rng0.normal(size=(cfg.num_classes, cfg.d_model))
 
 
-def class_batch(cls_ids, key):
+def class_batch(cls_ids):
     """Frames whose frontend embeddings carry a strong class direction and
     whose tokens come from a class-specific vocabulary block — the stand-in
     for 'frames of the same class look alike'."""
@@ -40,43 +43,56 @@ def class_batch(cls_ids, key):
                                    c * 37 % (cfg.vocab_size - 8) + 8,
                                    size=S) for c in cls_ids])
     fe = (rng0.normal(size=(n, cfg.frontend_len, cfg.d_model)) * 0.3
-          + 2.0 * class_dirs[cls_ids][:, None, :])
+          + 2.0 * class_dirs[np.asarray(cls_ids)][:, None, :])
     return {"tokens": jnp.asarray(toks, jnp.int32),
             "frontend": jnp.asarray(fe.astype(np.float32))}
 
 
-frames_per_class = 4
-all_taps = []
-for cls in range(cfg.num_classes):
-    batch = class_batch([cls] * frames_per_class, None)
-    _, _, taps, _ = prefill(params, batch, cfg)
-    all_taps.append(np.asarray(taps))
-entries = np.stack([np.asarray(t).mean(0) for t in all_taps], axis=1)
-table = CacheTable(entries=l2_normalize(jnp.asarray(entries)),
-                   class_mask=jnp.ones(cc.num_classes, bool),
-                   layer_mask=jnp.ones(cc.num_layers, bool))
+@jax.jit
+def tap_step(p, batch):
+    _, _, taps, cls = prefill(p, batch, cfg)
+    return taps, cls
 
-# --- serve a stream through the compiled prefill step ----------------------
-step, (p_sh, b_sh, t_sh) = make_prefill_step(cfg, mesh, global_batch=B)
-jstep = jax.jit(step)
-rng = np.random.default_rng(0)
-hits = exits = total = 0
-exit_blocks = []
-with mesh:
-    for wave in range(6):
-        classes = rng.integers(0, cfg.num_classes, B)
-        batch = class_batch(classes, None)
-        out = jstep(params, batch, table)
-        coca = out["coca"]
-        hit = np.asarray(coca.hit)
-        el = np.asarray(coca.exit_layer)
-        hits += hit.sum()
-        total += B
-        exit_blocks += list(np.where(hit, el + 1, cc.num_layers + 1))
-        print(f"wave {wave}: hits {hit.sum()}/{B} "
-              f"mean exit tap {el[hit].mean() if hit.any() else float('nan'):.1f}")
 
-print(f"\nhit ratio: {hits / total:.2f}")
-stats = simulate(np.asarray(exit_blocks),
-                 BatchingConfig(num_blocks=cc.num_layers + 1, max_slots=B))
-print(f"continuous-batching throughput multiple: x{stats.throughput_gain:.2f}")
+# --- bootstrap the global cache from "previous inferences": a shared set of
+# real frames per class, profiled into per-class per-layer centroids --------
+shared_labels = np.repeat(np.arange(cfg.num_classes), 4)
+sems, logits = tap_step(params, class_batch(shared_labels))
+
+cache = CacheConfig(num_classes=cfg.num_classes, num_layers=n_taps,
+                    sem_dim=cfg.sem_dim, theta=0.05)
+cm = calibrate(np.full(num_blocks, 5.0), np.full(n_taps, cfg.sem_dim),
+               head_cost=1.0)
+sim = SimulationConfig(cache=cache, round_frames=64,
+                       mem_budget=float(8 * cfg.num_classes * cfg.sem_dim))
+cluster = CocaCluster(sim, cm, policy=AcaPolicy(), num_clients=1)
+cluster.bootstrap(jax.random.PRNGKey(0), (sems, logits), shared_labels)
+
+
+# --- the online session: real-backbone taps per admitted batch -------------
+def tap_fn(_w, labels):
+    """Pad each tick's admitted batch to the compiled shape B, slice back."""
+    n = len(labels)
+    padded = np.resize(np.asarray(labels), B)
+    taps, cls = tap_step(params, class_batch(padded))
+    return taps[:n], cls[:n]
+
+
+workload = RequestStream(num_classes=cfg.num_classes,
+                         arrivals=PoissonArrivals(rate=1.2 * B / num_blocks),
+                         process=Stationary(), seed=3)
+loop_cfg = ServeLoopConfig(
+    batching=BatchingConfig(num_blocks=num_blocks, max_slots=B),
+    windows=4, window_ticks=24, slo_ticks=3.0 * num_blocks, target=0.9)
+
+res = ServingSession(cluster, loop_cfg, workload, tap_fn).run()
+for rep in res.windows:
+    print(f"window {rep.window}: theta={rep.theta:.4f} "
+          f"attainment={rep.stats.attainment:.3f} served={rep.stats.served} "
+          f"shed={rep.stats.shed} hits={rep.hits}/{rep.admitted}")
+
+base = ServingSession(cluster, loop_cfg, workload, tap_fn,
+                      use_cache=False).run()
+print(f"\nhit ratio: {res.hit_ratio:.2f}  accuracy: {res.accuracy:.2f}")
+print(f"live continuous-batching throughput multiple: "
+      f"x{throughput_gain(res, base):.2f}")

@@ -24,6 +24,7 @@ REQUIRED_PAGES = [
     "docs/architecture.md",
     "docs/benchmarks.md",
     "docs/scenarios.md",
+    "docs/serving.md",
 ]
 
 

@@ -2,7 +2,8 @@
 # Smoke gate: tier-1 tests + the quick benchmark profile + public examples.
 # Usage: scripts/smoke.sh [--quick]   (from the repo root)
 #   --quick : fail-fast tests + a 3-round churn+drift scenario through the
-#             dynamic-world engine path, skipping the full benchmark sweep.
+#             dynamic-world engine path + the closed-loop serving smoke,
+#             skipping the full benchmark sweep.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -22,6 +23,9 @@ if [[ "$QUICK" == "1" ]]; then
 
   echo "== churn+drift scenario (3 rounds, dynamic-world engine path) =="
   python examples/dynamic_world.py --quick --rounds 3
+
+  echo "== closed-loop serving session (online SLO loop) =="
+  python -m repro.launch.serve --arch coca-ast --smoke
   exit 0
 fi
 
@@ -35,3 +39,8 @@ echo "== public API examples =="
 python examples/quickstart.py
 python examples/multi_client_caching.py --quick
 python examples/dynamic_world.py --quick
+python examples/serve_stream.py
+
+echo "== closed-loop serving: launcher smoke + quick SLO load sweep =="
+python -m repro.launch.serve --arch coca-ast --smoke
+python -m benchmarks.table2_slo --quick

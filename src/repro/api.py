@@ -25,6 +25,7 @@ from repro.core.metrics import FrameBatch, RoundMetrics  # noqa: F401
 from repro.core.semantic_cache import CacheConfig, CacheTable  # noqa: F401
 from repro.core.server import ServerConfig, ServerState  # noqa: F401
 from repro.data.scenarios import (  # noqa: F401
-    Burst, ClientSpec, Drift, Scenario, ScenarioError, Stationary,
-    TraceReplay, drive_scenario, zipf_prior,
+    Burst, BurstArrivals, ClientSpec, Drift, PoissonArrivals, RequestStream,
+    Scenario, ScenarioError, Stationary, TraceReplay, drive_scenario,
+    zipf_prior,
 )

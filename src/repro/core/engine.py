@@ -31,6 +31,11 @@ Three pluggable axes:
   thresholds from the shared validation set
   (:class:`AdaptiveAbsorption`, wiring :mod:`repro.core.adaptive_thresholds`).
 
+The *online serving* loop (:mod:`repro.serving.loop`) drives the same
+session through two window-boundary hooks instead of ``step()``:
+``set_theta`` (the SLO controller's Θ verdict) and ``serving_table`` (ACA
+re-allocation against the recency the request stream actually exhibited).
+
 The round itself is decomposed into pure, jit-friendly pieces —
 :func:`round_step` (vmapped client round → upload → ``lax.scan`` Eq.-4/5
 merge, one device computation, one bundled ``device_get``) — plus a thin host
@@ -706,6 +711,16 @@ class CocaCluster:
     def history(self) -> list[RoundMetrics]:
         return list(self._history)
 
+    @property
+    def r_est(self) -> np.ndarray:
+        """(L,) host copy of the server's profiled first-hit CDF R — the
+        third serving hook (with :meth:`set_theta` / :meth:`serving_table`):
+        the online loop derives its admission-time cost estimate from it."""
+        if self._host_r is None:
+            raise RuntimeError("no server: call bootstrap() or "
+                               "attach_server() first")
+        return self._host_r
+
     # ------------------------------------------------------------ lifecycle
     def bootstrap(self, key: jax.Array, taps, shared_labels=None,
                   r0: np.ndarray | None = None,
@@ -886,6 +901,61 @@ class CocaCluster:
                     jnp.asarray(self._policy.allocate(
                         self.allocation_context(k))))
                 for k in self.active_clients]
+
+    # -------------------------------------------------- serving-loop hooks
+    def set_theta(self, theta: float) -> None:
+        """Override the scalar hit threshold Θ between rounds/windows — the
+        online serving loop's control input (:mod:`repro.serving.loop`):
+        its per-window :class:`~repro.serving.scheduler.ThetaController`
+        verdict lands here, and the next allocation/lookup sees the new Θ.
+        Values are quantised so a repeated Θ re-hits the jit cache."""
+        if isinstance(self.sim.cache.theta, tuple):
+            raise ValueError("set_theta() needs a scalar-theta cache config")
+        t = round(float(theta), 6)
+        if t != float(self.sim.cache.theta):
+            self.sim = dataclasses.replace(
+                self.sim, cache=dataclasses.replace(self.sim.cache, theta=t))
+
+    def serving_table(self, *, client: int = 0,
+                      tau: np.ndarray | None = None,
+                      phi: np.ndarray | None = None,
+                      round_index: int | None = None) -> CacheTable:
+        """Cut one serving :class:`CacheTable` from the live server with the
+        active allocation policy — the online loop's **window-boundary
+        re-allocation hook**.
+
+        Unlike :meth:`allocate_tables`, the recency/frequency view can come
+        from the caller: the serving session passes the ``tau`` (and
+        optionally ``phi``) it observed from the *request stream*, so
+        between-window ACA re-allocation tracks what is actually being
+        served rather than the simulator's client states.  Defaults fall
+        back to the engine's own host mirrors (zeros for a cold client).
+        Reuses the one-gather-per-round entries cache on the mesh path.
+        """
+        if self._server is None:
+            raise RuntimeError("no server: call bootstrap() or "
+                               "attach_server() before serving_table()")
+        if self._is_engine_policy:
+            raise RuntimeError(
+                "serving_table() needs a table-cutting AllocationPolicy; "
+                f"{getattr(self._policy, 'name', self._policy)!r} is a "
+                "client-engine baseline")
+        I = self.sim.cache.num_classes
+        if tau is None:
+            tau = (self._host_tau[client] if self._host_tau is not None
+                   else np.zeros(I, np.int32))
+        ctx = AllocationContext(
+            round_index=(self._round if round_index is None
+                         else int(round_index)),
+            client_index=client,
+            phi_global=(self._host_phi if phi is None
+                        else np.asarray(phi, float)),
+            tau=np.asarray(tau), r_est=self._host_r, upsilon=self._host_ups,
+            entry_sizes=self._cm.entry_sizes(),
+            mem_budget=self.sim.mem_budget,
+            round_frames=self.sim.round_frames)
+        return allocate_subtable(self._gathered_entries(),
+                                 jnp.asarray(self._policy.allocate(ctx)))
 
     # ----------------------------------------------------------------- step
     def step(self, frames: Sequence) -> RoundMetrics:

@@ -4,6 +4,7 @@ from repro.data.streams import (  # noqa: F401
     sample_class_sequence, synthesize_taps,
 )
 from repro.data.scenarios import (  # noqa: F401
-    Burst, ClientSpec, Drift, RoundPlan, Scenario, ScenarioError, Stationary,
-    TraceReplay, drive_scenario, play, scenario_labels, zipf_prior,
+    Burst, BurstArrivals, ClientSpec, Drift, PoissonArrivals, RequestStream,
+    RoundPlan, Scenario, ScenarioError, Stationary, TraceReplay,
+    drive_scenario, play, scenario_labels, zipf_prior,
 )

@@ -23,6 +23,12 @@ Stream processes (all produce per-round ``(F,)`` label arrays):
   ``burst_len`` near-consecutive frames over a base marginal.
 * :class:`TraceReplay` — replay an explicit label trace (real workload logs).
 
+The serving side reuses the same machinery through **arrival processes**:
+:class:`PoissonArrivals` / :class:`BurstArrivals` decide *when* requests
+land (open-loop, per block-tick), and :class:`RequestStream` pairs one with
+any stream process above to produce the per-window request workload the
+online serving loop (:mod:`repro.serving.loop`) feeds its EDF scheduler.
+
 Determinism: every per-round, per-client draw uses an independent generator
 seeded from ``(scenario.seed, round, client)``, so streams are bit-reproducible
 and independent of churn history or iteration order — the property the
@@ -231,6 +237,131 @@ class TraceReplay:
             return t[round_index].astype(np.int32)
         lo = round_index * frames
         return t[lo:lo + frames].astype(np.int32)
+
+
+# --------------------------------------------------------------------------
+# open-loop arrival processes (the serving loop's request side)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PoissonArrivals:
+    """Open-loop Poisson arrivals: ``rate`` requests per block-tick (mean).
+
+    The serving loop (:mod:`repro.serving.loop`) is *open-loop*: requests
+    land whether or not the engine keeps up, which is what makes load
+    shedding and SLO attainment meaningful.  ``rate`` is in requests per
+    block-tick, so ``rate == max_slots / num_blocks`` is the no-cache
+    engine's saturation point.
+    """
+
+    rate: float
+
+    def validate(self, who: str = "PoissonArrivals") -> None:
+        if not (np.isfinite(self.rate) and self.rate >= 0.0):
+            raise ScenarioError(f"{who}: rate must be finite and >= 0, "
+                                f"got {self.rate}")
+
+    def counts(self, rng: np.random.Generator, ticks: int) -> np.ndarray:
+        """(ticks,) int — arrivals landing at each tick."""
+        return rng.poisson(self.rate, ticks).astype(np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class BurstArrivals:
+    """Poisson base traffic plus flash crowds: with probability
+    ``burst_prob`` per tick a burst starts, raising the rate to
+    ``burst_rate`` for ``burst_ticks`` ticks — the arrival-side analogue of
+    the :class:`Burst` class process."""
+
+    rate: float
+    burst_rate: float
+    burst_prob: float = 0.02
+    burst_ticks: int = 8
+
+    def validate(self, who: str = "BurstArrivals") -> None:
+        for name, v in (("rate", self.rate), ("burst_rate", self.burst_rate)):
+            if not (np.isfinite(v) and v >= 0.0):
+                raise ScenarioError(f"{who}: {name} must be finite and >= 0, "
+                                    f"got {v}")
+        if not 0.0 <= self.burst_prob <= 1.0:
+            raise ScenarioError(f"{who}: burst_prob must be in [0, 1]")
+        if self.burst_ticks < 1:
+            raise ScenarioError(f"{who}: burst_ticks must be >= 1")
+
+    def counts(self, rng: np.random.Generator, ticks: int) -> np.ndarray:
+        out = np.empty(ticks, np.int64)
+        in_burst = 0
+        for t in range(ticks):
+            if in_burst > 0:
+                in_burst -= 1
+            elif rng.random() < self.burst_prob:
+                in_burst = self.burst_ticks - 1
+            out[t] = rng.poisson(self.burst_rate if in_burst else self.rate)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestStream:
+    """An open-loop serving workload: *when* requests land (an arrival
+    process) × *what* they ask for (any stream process above).
+
+    ``window(w, ticks)`` draws one control window: per-tick arrival counts
+    from ``arrivals`` and the arriving requests' class labels from
+    ``process`` — the stream process sees the window index as its round
+    index, so a :class:`Drift` process rotates its hot set across serving
+    windows exactly as it does across simulator rounds.  Draws are
+    deterministic per ``(seed, window)`` and independent across windows,
+    mirroring the :class:`Scenario` determinism contract.
+    """
+
+    num_classes: int
+    arrivals: object = PoissonArrivals(rate=2.0)
+    process: object = Stationary()
+    stay_prob: float = 0.9
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.num_classes < 2:
+            raise ScenarioError(f"num_classes must be >= 2, "
+                                f"got {self.num_classes}")
+        if not 0.0 <= self.stay_prob <= 1.0:
+            raise ScenarioError("stay_prob must be in [0, 1]")
+        if not hasattr(self.arrivals, "counts"):
+            raise ScenarioError(f"arrivals {self.arrivals!r} has no "
+                                "counts() method")
+        if hasattr(self.arrivals, "validate"):
+            self.arrivals.validate("RequestStream.arrivals")
+        if not hasattr(self.process, "labels"):
+            raise ScenarioError(f"process {self.process!r} has no "
+                                "labels() method")
+
+    def window(self, window_index: int,
+               ticks: int) -> tuple[np.ndarray, np.ndarray]:
+        """One control window: ``(counts (ticks,), labels (counts.sum(),))``.
+
+        ``labels[counts[:t].sum():counts[:t+1].sum()]`` are the classes of
+        the requests arriving at tick ``t``.
+        """
+        rng = np.random.default_rng(
+            np.random.SeedSequence((self.seed, window_index)))
+        counts = np.asarray(self.arrivals.counts(rng, ticks), np.int64)
+        n = int(counts.sum())
+        if n == 0:                       # idle window — keep it well-defined
+            return counts, np.zeros(0, np.int32)
+        labels = np.asarray(self.process.labels(
+            rng, window_index, n, self.stay_prob, self.num_classes), np.int32)
+        if labels.shape != (n,):
+            # a process that cannot honor an arbitrary per-window count
+            # (e.g. a fixed TraceReplay row shorter than this window's
+            # arrivals) would silently misalign labels to ticks downstream
+            raise ScenarioError(
+                f"RequestStream: process {type(self.process).__name__} "
+                f"returned {labels.shape} labels for window {window_index}, "
+                f"expected ({n},) — the process must honor the requested "
+                "draw count (fixed traces only line up when every window's "
+                "arrivals fit the trace layout)")
+        return counts, labels
 
 
 # --------------------------------------------------------------------------

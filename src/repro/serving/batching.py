@@ -1,4 +1,4 @@
-"""Continuous batching with CoCa early-exit slot refill.
+"""Continuous-batching cost model: early-exit slot refill in block-ticks.
 
 Under batched SPMD execution a single lane cannot stop early — the batch
 marches through every block together.  The throughput win of the paper's
@@ -8,10 +8,20 @@ block j and is refilled by the next queued request.  Cost accounting per
 "block-tick": every tick advances all live slots one block at a cost of one
 block-batch; a request that exits at tap j consumed j+1 ticks instead of L.
 
-``simulate`` is a discrete-time simulator over per-request exit layers
-(produced by the CoCa oracle on tap streams, or by a real model's taps) that
-reports the throughput multiple vs. a no-cache engine — the serving-side
-reproduction of the paper's Table II latency wins.
+This module owns that accounting in **replay** form: ``simulate`` is a
+discrete-time simulator over per-request exit layers (the canonical
+:class:`~repro.core.metrics.RoundMetrics` record via ``simulate_metrics``,
+or a real model's taps) that reports the throughput multiple vs. a no-cache
+engine — the serving-side reproduction of the paper's Table II latency
+wins.  The *online* counterpart — open-loop arrivals, EDF admission, live
+fused lookups, Θ control — lives in :mod:`repro.serving.loop` and shares
+this module's :class:`BatchingConfig` and tick accounting, which is what
+makes the closed-loop session replay-parity-testable
+(``tests/test_serving.py``).
+
+Both entry points are idle-safe: an empty request set (a zero-request
+window in the online loop) returns well-defined zero-work stats with a
+neutral throughput gain of 1.0.
 """
 
 from __future__ import annotations
@@ -43,14 +53,21 @@ def simulate_metrics(metrics, cfg: BatchingConfig) -> ServingStats:
     the engine's per-frame exit layers become slot-occupancy ticks."""
     from repro.core.metrics import RoundMetrics
     records = [metrics] if isinstance(metrics, RoundMetrics) else list(metrics)
+    if not records:
+        return simulate(np.zeros(0, np.int64), cfg)
     blocks = np.concatenate([m.exit_blocks(cfg.num_blocks) for m in records])
     return simulate(blocks, cfg)
 
 
 def simulate(exit_blocks: np.ndarray, cfg: BatchingConfig) -> ServingStats:
     """``exit_blocks`` — (N,) blocks each request must execute (exit layer+1;
-    no-hit requests carry ``num_blocks``)."""
+    no-hit requests carry ``num_blocks``).  An empty request set (an idle
+    window) returns zero-work stats with a neutral gain of 1.0."""
     n = len(exit_blocks)
+    if n == 0:
+        return ServingStats(ticks=0.0, baseline_ticks=0.0,
+                            throughput_gain=1.0, mean_slot_occupancy=0.0,
+                            requests=0)
     queue = list(exit_blocks)
     slots = np.zeros(cfg.max_slots)          # remaining blocks per slot
     live = np.zeros(cfg.max_slots, bool)

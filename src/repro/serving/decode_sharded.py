@@ -1,5 +1,9 @@
 """Sequence-sharded decode attention (distributed flash-decode).
 
+This module owns the decode-time attention layout fallback of the serving
+data plane (used by :mod:`repro.serving.engine` steps via
+``ShardingPolicy(kv_fallback="sequence")``); it has no CoCa-cache coupling.
+
 Motivation: glm4-9b has kv_heads=2 on a 16-way "model" axis — head-sharding
 cannot split its KV cache, and replicating 32k × batch-shard KV per device
 costs ~21 GB (> v5e HBM).  Sharding the *sequence* axis instead gives each

@@ -1,13 +1,25 @@
-"""Serving steps with first-class CoCa semantic caching.
+"""Compiled serving steps with first-class CoCa semantic caching.
 
-``make_prefill_step`` / ``make_decode_step`` return (fn, in_shardings,
-out_shardings) — the exact artifacts the multi-pod dry-run lowers.  When the
-architecture has taps (``cfg.tap_every > 0``) the step consumes a
-:class:`~repro.core.semantic_cache.CacheTable` (hot-spot entries allocated by
-the CoCa server) and emits the Eq. (1)/(2) hit decision alongside logits: on a
-hit the request is *resolved* — the orchestration layer (serving/batching.py)
-retires its slot and refills it, which is how the paper's early-exit latency
-win materialises under batched SPMD execution (DESIGN.md §2).
+This module owns the *data plane* of the serving stack: the pjit-compiled
+model steps and the table plumbing that puts the paper's Eq. (1)/(2) lookup
+inside them.  ``make_prefill_step`` / ``make_decode_step`` return
+(fn, in_shardings, out_shardings) — the exact artifacts the multi-pod
+dry-run lowers.  When the architecture has taps (``cfg.tap_every > 0``) the
+step consumes a :class:`~repro.core.semantic_cache.CacheTable` (hot-spot
+entries allocated by the CoCa server) and emits the Eq. (1)/(2) hit decision
+alongside logits: on a hit the request is *resolved* — the orchestration
+layer retires its slot and refills it, which is how the paper's early-exit
+latency win materialises under batched SPMD execution.  The replay-form
+cost model for that refill discipline is :mod:`repro.serving.batching`; the
+online loop that drives admission, lookup and Θ control around these steps
+is :mod:`repro.serving.loop` (see docs/serving.md).
+
+``allocate_serving_table`` cuts a single client's table from a live
+:class:`~repro.core.server.ServerState` with any engine
+``AllocationPolicy`` — the standalone-server twin of
+:meth:`CocaCluster.serving_table
+<repro.core.engine.CocaCluster.serving_table>`, which the online loop uses
+for its between-window re-allocation.
 """
 
 from __future__ import annotations

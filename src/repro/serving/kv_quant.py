@@ -8,8 +8,8 @@ and per-device footprint likewise — on glm4 decode_32k that is 0.67 GB ->
 
 Quantization error is benign for attention: keys enter a softmax after a
 1/√d-scaled dot product (logit perturbation ≤ ~0.4 % of logit scale at int8),
-and values are averaged under the attention weights.  tests/test_kv_quant.py
-bounds the end-to-end decode drift.
+and values are averaged under the attention weights.
+tests/test_serving_extensions.py bounds the end-to-end decode drift.
 """
 
 from __future__ import annotations

@@ -1,0 +1,341 @@
+"""The online serving session: admission → batched fused lookup → Θ control.
+
+This module closes the paper's SLO loop (§Abstract, §I, §VI.D) end to end.
+Where ``launch/serve.py`` used to run the cluster first and *replay* its
+metrics through the batching simulator afterwards, :class:`ServingSession`
+is event-driven and online:
+
+1. **Arrivals** — an open-loop :class:`~repro.data.scenarios.RequestStream`
+   (Poisson or bursty arrivals × any stream process, so a ``Drift`` workload
+   rotates its hot set across serving windows) lands requests tick by tick,
+   each stamped with an absolute deadline ``arrival + slo_ticks``.
+2. **Admission** — the :class:`~repro.serving.scheduler.EDFScheduler` fills
+   free batch slots earliest-deadline-first and sheds requests that cannot
+   meet their deadline even if started immediately (at the *estimated* cost
+   derived from the server's profiled first-hit CDF R).
+3. **Classification** — each tick's newly admitted requests are batched and
+   classified through the real fused lookup path:
+   :func:`~repro.core.semantic_cache.lookup_all_layers` on the **live**
+   serving table cut by :meth:`CocaCluster.serving_table
+   <repro.core.engine.CocaCluster.serving_table>` — not oracle exit layers.
+   The lookup's verdict (first hitting tap, or a full-depth miss) *resolves*
+   the slot's true block count; early exits retire slots early and the next
+   queued request refills them — continuous batching as the execution
+   engine, with the same block-tick accounting as
+   :mod:`repro.serving.batching` (which is exactly what makes the session
+   replay-parity-testable against ``simulate``).
+4. **Control** — at every window boundary the window's
+   :class:`~repro.serving.scheduler.SLOStats` drive the
+   :class:`~repro.serving.scheduler.ThetaController` (attainment below
+   target lowers Θ for more early exits; slack raises it for accuracy) via
+   ``cluster.set_theta``, **and** the observed request recency τ feeds
+   between-window ACA re-allocation via ``cluster.serving_table`` — the
+   cache adapts online exactly as §VI.D's Θ-per-SLO table prescribes,
+   but continuously.
+
+Latency accounting: scheduler latencies are in raw block-ticks
+(queue wait + execution); the per-tap lookup overhead is applied to the
+session's busy ticks exactly as ``simulate`` applies it
+(``ticks * (1 + lookup_tick_fraction)``), so live and replay numbers are
+directly comparable.  Idle ticks (open-loop lulls) execute no block-batch
+and are excluded from the compute bill.
+
+Drivers: ``python -m repro.launch.serve`` (synthetic taps),
+``examples/serve_stream.py`` (a real transformer backbone supplying the tap
+vectors), ``benchmarks/table2_slo.py`` (the load sweep behind
+``BENCH_serving.json``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.semantic_cache import CacheTable, lookup_all_layers
+from repro.data.scenarios import RequestStream
+from repro.serving.batching import BatchingConfig
+from repro.serving.scheduler import (EDFScheduler, Request, SLOStats,
+                                     ThetaController)
+
+# TapFn: (window_index, labels (N,)) -> (sems (N, L, d), logits (N, C)).
+# The session batches each tick's admitted requests into one call.
+ServeTapFn = Callable[[int, np.ndarray], tuple]
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _batched_lookup(table: CacheTable, sems: jax.Array, cfg):
+    """The session's per-tick lookup, compiled once per (shape, Θ): ticks
+    pad their admitted batch to ``max_slots`` rows so every tick re-hits
+    the same trace (Θ changes retrace, but the controller quantises)."""
+    return lookup_all_layers(table, sems, cfg)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeLoopConfig:
+    """Knobs of one online serving session.
+
+    ``slo_ticks`` is the per-request deadline in block-ticks (the paper's
+    per-task deadline, §I); ``windows`` × ``window_ticks`` is the horizon.
+    Θ control and re-allocation can be frozen independently — the
+    ``frozen-Θ`` baseline of ``BENCH_serving.json`` is ``adapt_theta=False,
+    reallocate=False``.
+    """
+
+    batching: BatchingConfig
+    windows: int = 8                 # control windows
+    window_ticks: int = 64           # block-ticks per window
+    slo_ticks: float = 30.0          # deadline = arrival + slo_ticks
+    target: float = 0.95             # attainment target for Θ control
+    margin: float = 0.02             # controller hysteresis half-width
+    theta_step: float = 0.1          # multiplicative Θ step
+    theta_lo: float = 0.01
+    theta_hi: float = 0.5
+    adapt_theta: bool = True         # drive Θ from window attainment
+    reallocate: bool = True          # between-window ACA re-allocation
+    drain: bool = True               # finish the backlog after the horizon
+    drain_max_ticks: int = 100_000
+
+    def __post_init__(self):
+        if self.windows < 1 or self.window_ticks < 1:
+            raise ValueError("windows and window_ticks must be >= 1")
+        if self.slo_ticks <= 0:
+            raise ValueError("slo_ticks must be > 0")
+
+
+class WindowReport(NamedTuple):
+    """One control window as the session saw it."""
+
+    window: int
+    theta: float              # Θ in force *during* this window
+    stats: SLOStats           # idle-window safe
+    arrivals: int
+    hits: int                 # cache-resolved among requests admitted
+    admitted: int
+    reallocated: bool
+
+
+class SessionResult(NamedTuple):
+    """The live session's outcome — no metric replay involved.
+
+    ``ticks`` is the lookup-adjusted busy-tick bill (block-batch executions
+    actually run, idle ticks excluded); ``throughput`` is served requests
+    per adjusted tick, the number load-level comparisons divide.
+    ``exit_blocks`` holds every admitted request's resolved block count in
+    admission order — feeding it to :func:`repro.serving.batching.simulate`
+    reproduces the session's tick bill exactly on a backlogged trace (the
+    parity test).
+    """
+
+    stats: SLOStats
+    windows: list
+    ticks: float
+    served: int
+    shed: int
+    arrivals: int
+    hit_ratio: float          # of admitted requests
+    accuracy: float           # of served requests with known labels
+    throughput: float
+    theta_trace: list
+    exit_blocks: np.ndarray
+
+
+class ServingSession:
+    """One client's online serving loop over a live CoCa cluster.
+
+    ``cluster`` — a bootstrapped :class:`~repro.core.engine.CocaCluster`
+    whose policy cuts the serving table (any ``AllocationPolicy``).
+    ``workload`` — the open-loop request stream.  ``tap_fn(window, labels)``
+    supplies the semantic taps and full-model logits for a batch of
+    admitted requests — synthetic taps in the launcher, a real backbone's
+    taps in ``examples/serve_stream.py``.  ``use_cache=False`` runs the
+    same loop with the lookup disabled (every request pays all blocks) —
+    the live no-cache baseline.
+    """
+
+    def __init__(self, cluster, cfg: ServeLoopConfig,
+                 workload: RequestStream, tap_fn: ServeTapFn, *,
+                 use_cache: bool = True, client: int = 0):
+        if workload.num_classes != cluster.sim.cache.num_classes:
+            raise ValueError(
+                f"workload has {workload.num_classes} classes, cluster cache "
+                f"has {cluster.sim.cache.num_classes}")
+        self.cluster = cluster
+        self.cfg = cfg
+        self.workload = workload
+        self.tap_fn = tap_fn
+        self.use_cache = use_cache
+        self.client = client
+        I = cluster.sim.cache.num_classes
+        # request-stream recency: tau_i = admitted requests since class i
+        # was last observed (the engine's Eq.-10 unit, fed back at each
+        # window boundary so ACA tracks the *served* distribution)
+        self._last_seen = np.full(I, -1, np.int64)
+        self._seen = 0
+
+    # ----------------------------------------------------------------- utils
+    def _estimated_blocks(self) -> float:
+        """Cold-start admission cost estimate: expected blocks under the
+        server's profiled first-hit CDF R (full depth without a cache).
+        Once windows complete, the estimate tracks the *observed* resolved
+        block counts instead (EWMA at each window boundary) — a static
+        estimate goes stale the moment the Θ controller moves, and a stale
+        underestimate admits doomed requests the shedding valve should have
+        dropped."""
+        nb = self.cfg.batching.num_blocks
+        if not self.use_cache:
+            return float(nb)
+        r = np.asarray(self.cluster.r_est, float)
+        first = np.diff(np.concatenate([[0.0], np.clip(r, 0.0, 1.0)]))
+        first = np.clip(first, 0.0, None)
+        blocks = np.arange(1, len(r) + 1, dtype=float)
+        exp = float((first * blocks).sum() + (1.0 - min(r[-1], 1.0)) * nb)
+        return float(np.clip(exp, 1.0, nb))
+
+    def _observe(self, labels: np.ndarray) -> None:
+        for lab in labels:
+            self._last_seen[int(lab)] = self._seen
+            self._seen += 1
+
+    def _tau(self) -> np.ndarray:
+        # never-requested classes are maximally stale (Eq. 10 scores LOW tau
+        # as hot); at cold start (_seen == 0) this is all-zeros, matching
+        # the engine's fresh-client convention
+        tau = np.where(self._last_seen < 0, self._seen,
+                       self._seen - 1 - self._last_seen)
+        return tau.astype(np.int32)
+
+    def _classify(self, window: int, labels: np.ndarray,
+                  table: CacheTable | None):
+        """The per-tick batched classification: real taps, real fused
+        lookup on the live table.  Returns (blocks, hit, pred)."""
+        nb = self.cfg.batching.num_blocks
+        sems, logits = self.tap_fn(window, labels)
+        model_pred = np.argmax(np.asarray(logits), axis=1).astype(np.int32)
+        if not (self.use_cache and table is not None):
+            return (np.full(len(labels), nb, np.int64),
+                    np.zeros(len(labels), bool), model_pred)
+        n = len(labels)
+        sems = jnp.asarray(sems)
+        pad = self.cfg.batching.max_slots - n
+        if pad > 0:                      # fixed shape -> one compiled trace
+            sems = jnp.concatenate(
+                [sems, jnp.zeros((pad,) + sems.shape[1:], sems.dtype)])
+        look = _batched_lookup(table, sems, self.cluster.sim.cache)
+        hit = np.asarray(look.hit)[:n]
+        exit_layer = np.asarray(look.exit_layer)[:n]
+        blocks = np.where(hit, np.minimum(exit_layer + 1, nb), nb)
+        pred = np.where(hit, np.asarray(look.pred)[:n], model_pred)
+        return blocks.astype(np.int64), hit, pred.astype(np.int32)
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> SessionResult:
+        cfg = self.cfg
+        sched = EDFScheduler(max_slots=cfg.batching.max_slots)
+        ctl = ThetaController(
+            theta=float(self.cluster.sim.cache.theta), target=cfg.target,
+            margin=cfg.margin, step=cfg.theta_step,
+            lo=cfg.theta_lo, hi=cfg.theta_hi)
+        table = (self.cluster.serving_table(client=self.client,
+                                            tau=self._tau(), round_index=0)
+                 if self.use_cache else None)
+        est_f = self._estimated_blocks()
+        est = int(np.ceil(est_f))
+        labels_by_rid: dict[int, int] = {}
+        hit_by_rid: dict[int, bool] = {}
+        pred_by_rid: dict[int, int] = {}
+        exit_blocks: list[int] = []
+        reports: list[WindowReport] = []
+        theta_trace: list[float] = []
+        correct = served_labeled = 0
+        rid = 0
+        admitted_total = hits_total = arrivals_total = 0
+
+        def tick_body(window: int) -> None:
+            nonlocal admitted_total, hits_total, correct, served_labeled
+            placed = sched.admit()
+            if placed:
+                labs = np.asarray(
+                    [labels_by_rid[r.rid] for _, r in placed], np.int32)
+                blocks, hit, pred = self._classify(window, labs, table)
+                for (slot, req), b, h, p in zip(placed, blocks, hit, pred):
+                    sched.resolve(slot, int(b))
+                    hit_by_rid[req.rid] = bool(h)
+                    pred_by_rid[req.rid] = int(p)
+                    exit_blocks.append(int(b))
+                self._observe(labs)
+                admitted_total += len(placed)
+                hits_total += int(hit.sum())
+            for req, _lat, _missed in sched.advance():
+                lab = labels_by_rid[req.rid]
+                served_labeled += 1
+                correct += int(pred_by_rid[req.rid] == lab)
+
+        for w in range(cfg.windows):
+            theta_trace.append(float(self.cluster.sim.cache.theta))
+            counts, labels = self.workload.window(w, cfg.window_ticks)
+            arrivals_total += int(counts.sum())
+            offsets = np.concatenate([[0], np.cumsum(counts)])
+            admitted_w0, hits_w0 = admitted_total, hits_total
+            blocks_w0 = len(exit_blocks)
+            sched.begin_window()
+            for t in range(cfg.window_ticks):
+                for lab in labels[offsets[t]:offsets[t + 1]]:
+                    labels_by_rid[rid] = int(lab)
+                    sched.submit(Request(
+                        rid=rid, arrival=sched.tick, blocks_needed=est,
+                        deadline=sched.tick + cfg.slo_ticks))
+                    rid += 1
+                tick_body(w)
+            stats = sched.window_stats()
+            realloc = False
+            # refresh the admission estimate from what this window's
+            # lookups actually resolved (tracks the Θ controller)
+            window_blocks = exit_blocks[blocks_w0:]
+            if window_blocks:
+                est_f = 0.5 * est_f + 0.5 * float(np.mean(window_blocks))
+                est = int(np.ceil(est_f))
+            # close the loop: attainment -> Θ, observed recency -> ACA
+            if cfg.adapt_theta and stats.served + stats.shed > 0:
+                self.cluster.set_theta(ctl.update(stats.attainment))
+            if cfg.reallocate and self.use_cache:
+                table = self.cluster.serving_table(
+                    client=self.client, tau=self._tau(), round_index=w + 1)
+                realloc = True
+            reports.append(WindowReport(
+                window=w, theta=theta_trace[-1], stats=stats,
+                arrivals=int(counts.sum()), hits=hits_total - hits_w0,
+                admitted=admitted_total - admitted_w0, reallocated=realloc))
+
+        if cfg.drain:
+            t = 0
+            last_w = cfg.windows - 1
+            while ((sched.queue or any(s is not None for s in sched.slots))
+                   and t < cfg.drain_max_ticks):
+                tick_body(last_w)
+                t += 1
+
+        overhead = (1 + cfg.batching.lookup_tick_fraction
+                    if self.use_cache else 1.0)
+        ticks = sched.busy_ticks * overhead
+        return SessionResult(
+            stats=sched.stats(), windows=reports, ticks=ticks,
+            served=sched.served, shed=sched.shed, arrivals=arrivals_total,
+            hit_ratio=hits_total / max(admitted_total, 1),
+            accuracy=correct / max(served_labeled, 1),
+            throughput=sched.served / max(ticks, 1e-9),
+            theta_trace=theta_trace,
+            exit_blocks=np.asarray(exit_blocks, np.int64))
+
+
+def throughput_gain(cached: SessionResult, nocache: SessionResult) -> float:
+    """Live throughput multiple: served-per-adjusted-tick ratio between a
+    cached session and its no-cache twin on the same workload.  Idle-safe:
+    two idle sessions gain exactly 1.0."""
+    if cached.served == 0 and nocache.served == 0:
+        return 1.0
+    return cached.throughput / max(nocache.throughput, 1e-9)

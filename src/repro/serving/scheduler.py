@@ -1,20 +1,30 @@
-"""SLO-aware request scheduler for CoCa serving.
+"""SLO-aware admission control: EDF + load shedding + the Θ controller.
 
-The paper's framing is SLO compliance ("a 30 % latency reduction target",
-§Abstract; per-task deadlines, §I).  This scheduler closes that loop above
-the continuous-batching engine:
+This module owns the serving *control plane* — which request runs next, which
+request is hopeless, and how the cache threshold Θ should move in response to
+observed SLO attainment.  It reproduces the paper's SLO framing (per-task
+deadlines, §I; the Θ-per-SLO calibration of §VI.D) as three pieces:
 
-  * requests carry deadlines; admission is earliest-deadline-first with a
-    load-shedding valve (drop requests that cannot meet their deadline even
-    if scheduled immediately — serving a doomed request wastes slots);
-  * per-window SLO attainment, p50/p95 latency and cache-hit statistics are
-    tracked and exposed to the CoCa server, which can tighten/relax Θ between
-    rounds (hit ratio ↑ when the SLO is at risk, accuracy ↑ when there is
-    slack) — the dynamic analogue of the paper's static Θ-per-SLO table
-    (§VI.D).
+* :class:`Request` / :class:`EDFScheduler` — requests carry absolute
+  deadlines; admission is earliest-deadline-first with a load-shedding valve
+  (a request that cannot meet its deadline even if scheduled immediately is
+  dropped rather than allowed to burn a batch slot).  Admission
+  (:meth:`EDFScheduler.admit`) is decoupled from execution
+  (:meth:`EDFScheduler.advance`) so a driver can *resolve* each admitted
+  request's true block count from a live cache lookup — the online serving
+  loop (:mod:`repro.serving.loop`) does exactly that; :meth:`run_tick` fuses
+  the two for the classic oracle-replay mode.
+* :class:`SLOStats` — per-window attainment / p50 / p95, well-defined for the
+  idle (zero-request) window.
+* :class:`ThetaController` — bang-bang Θ adjustment with hysteresis:
+  attainment below target lowers Θ (more early exits, faster), slack above
+  target raises it (spend the headroom on accuracy) — the dynamic analogue of
+  the paper's static Θ-per-SLO table.  It backs both the serving loop's
+  per-window control and the engine's per-round ``theta_policy`` hook
+  (:class:`repro.core.engine.SLOTheta`).
 
-Pure-python control plane (decisions happen between compiled steps); the
-simulator in serving/batching.py provides the execution model.
+Everything here is pure-Python control flow: decisions happen between
+compiled steps, never inside them.
 """
 
 from __future__ import annotations
@@ -30,11 +40,17 @@ import numpy as np
 class Request:
     rid: int
     arrival: float           # tick of arrival
-    blocks_needed: int       # exit block under the current cache (oracle/est)
+    blocks_needed: int       # exit block estimate at admission (resolvable)
     deadline: float          # absolute tick deadline
 
 
 class SLOStats(NamedTuple):
+    """One window's SLO accounting.  ``attainment`` counts shed requests as
+    misses (a dropped request did not meet its deadline).  An idle window
+    (no requests finished or shed) reports vacuous attainment 1.0 and zero
+    percentiles — controllers should treat it as "no evidence", not as an
+    SLO violation."""
+
     served: int
     shed: int
     missed: int
@@ -42,51 +58,96 @@ class SLOStats(NamedTuple):
     p50: float
     p95: float
 
+    @classmethod
+    def from_counts(cls, latencies, served: int, shed: int,
+                    missed: int) -> "SLOStats":
+        total = served + shed
+        if total == 0:
+            return cls(served=0, shed=shed, missed=0,
+                       attainment=1.0, p50=0.0, p95=0.0)
+        lat = (np.asarray(latencies, float) if len(latencies)
+               else np.zeros(1))
+        return cls(served=served, shed=shed, missed=missed,
+                   attainment=(served - missed) / total,
+                   p50=float(np.percentile(lat, 50)),
+                   p95=float(np.percentile(lat, 95)))
+
 
 @dataclasses.dataclass
 class ThetaController:
-    """Between-round Θ adjustment from SLO attainment (bang-bang + hysteresis).
+    """Between-window Θ adjustment from SLO attainment (bang-bang + hysteresis).
 
     attainment < target - margin  -> lower Θ (more early exits, faster)
     attainment > target + margin  -> raise Θ (spend slack on accuracy)
+    inside the deadband           -> hold (the hysteresis that stops
+                                    oscillation at the boundary)
 
-    This is also the engine's per-round theta hook:
-    ``CocaCluster(theta_policy=SLOTheta(...))`` (repro.core.engine) computes
-    attainment from each round's canonical metrics and drives this
-    controller between ``step()`` calls.
+    The steps are asymmetric (AIMD-style): the upward step is a fraction of
+    the downward one (``step_up``, default ``0.3 * step``), because the two
+    directions are not symmetric risks — raising Θ explores toward the
+    capacity cliff while a violation means a queue backlog is already
+    compounding, so recovery must outpace exploration or one overshoot
+    poisons several windows of deadlines.
+
+    Drives the online serving loop's per-window control
+    (:class:`repro.serving.loop.ServingSession`) and the engine's per-round
+    theta hook: ``CocaCluster(theta_policy=SLOTheta(...))``
+    (:mod:`repro.core.engine`) computes attainment from each round's
+    canonical metrics and feeds it here between ``step()`` calls.
     """
 
     theta: float
     target: float = 0.95
     margin: float = 0.02
-    step: float = 0.1          # multiplicative
+    step: float = 0.1                  # multiplicative, downward
     lo: float = 0.01
     hi: float = 0.5
+    step_up: float | None = None       # upward step; None = 0.3 * step
 
     def update(self, attainment: float) -> float:
+        up = self.step_up if self.step_up is not None else 0.3 * self.step
         if attainment < self.target - self.margin:
             self.theta = max(self.lo, self.theta * (1 - self.step))
         elif attainment > self.target + self.margin:
-            self.theta = min(self.hi, self.theta * (1 + self.step))
+            self.theta = min(self.hi, self.theta * (1 + up))
         return self.theta
 
 
 class EDFScheduler:
-    """Earliest-deadline-first with load shedding over batched block-ticks."""
+    """Earliest-deadline-first admission with load shedding over block-ticks.
+
+    Two driving modes share the same state:
+
+    * **oracle replay** — :meth:`run_tick` / :meth:`drain`: each request's
+      ``blocks_needed`` is trusted as its true cost (per-request exit layers
+      produced offline).
+    * **live** — the serving loop calls :meth:`admit` (EDF pop + shedding,
+      placement into free slots at the *estimated* cost), then
+      :meth:`resolve` with each admitted request's true block count from the
+      batched cache lookup, then :meth:`advance` to burn one block-tick.
+    """
 
     def __init__(self, max_slots: int):
         self.max_slots = max_slots
         self.queue: list[tuple[float, int, Request]] = []
-        self.slots: list[tuple[Request, int, float] | None] = \
+        self.slots: list[tuple[Request, float, float] | None] = \
             [None] * max_slots
         self.tick = 0.0
+        self.busy_ticks = 0.0            # ticks with >= 1 live slot
         self.latencies: list[float] = []
         self.served = self.shed = self.missed = 0
+        self._mark = (0, 0, 0, 0)        # window-start counter snapshot
 
     def submit(self, req: Request) -> None:
         heapq.heappush(self.queue, (req.deadline, req.rid, req))
 
-    def _admit(self) -> None:
+    # ------------------------------------------------------------- admission
+    def admit(self) -> list[tuple[int, Request]]:
+        """Fill free slots EDF-first; shed requests that cannot meet their
+        deadline even if started now (at their estimated cost).  Returns the
+        newly placed ``(slot, request)`` pairs; each slot's remaining blocks
+        start at the request's estimate until :meth:`resolve` overrides it."""
+        placed = []
         for i in range(self.max_slots):
             if self.slots[i] is not None:
                 continue
@@ -95,12 +156,30 @@ class EDFScheduler:
                 if self.tick + req.blocks_needed > req.deadline:
                     self.shed += 1          # cannot make it: shed, don't burn
                     continue
-                self.slots[i] = (req, req.blocks_needed, self.tick)
+                self.slots[i] = (req, float(req.blocks_needed), self.tick)
+                placed.append((i, req))
                 break
+        return placed
 
-    def run_tick(self) -> None:
-        self._admit()
+    def resolve(self, slot: int, blocks: float) -> None:
+        """Replace a freshly admitted request's estimated cost with its true
+        block count (the live lookup's verdict: exit layer + 1 on a hit, all
+        blocks on a miss)."""
+        occ = self.slots[slot]
+        if occ is None:
+            raise ValueError(f"resolve() on empty slot {slot}")
+        req, _, start = occ
+        self.slots[slot] = (req, max(float(blocks), 1.0), start)
+
+    # ------------------------------------------------------------- execution
+    def advance(self) -> list[tuple[Request, float, bool]]:
+        """Burn one block-tick on every live slot; retire finished requests.
+        Returns ``(request, latency, missed_deadline)`` per retirement."""
+        live = any(s is not None for s in self.slots)
         self.tick += 1.0
+        if live:
+            self.busy_ticks += 1.0
+        retired = []
         for i, s in enumerate(self.slots):
             if s is None:
                 continue
@@ -110,24 +189,42 @@ class EDFScheduler:
                 lat = self.tick - req.arrival
                 self.latencies.append(lat)
                 self.served += 1
-                if self.tick > req.deadline:
+                missed = self.tick > req.deadline
+                if missed:
                     self.missed += 1
+                retired.append((req, lat, missed))
                 self.slots[i] = None
             else:
                 self.slots[i] = (req, remaining, start)
+        return retired
+
+    def run_tick(self) -> None:
+        """Oracle-replay tick: admit at trusted costs, then advance."""
+        self.admit()
+        self.advance()
 
     def drain(self, max_ticks: int = 100_000) -> None:
         t = 0
-        while (self.queue or any(self.slots)) and t < max_ticks:
+        while (self.queue or any(s is not None
+                                 for s in self.slots)) and t < max_ticks:
             self.run_tick()
             t += 1
 
+    # --------------------------------------------------------------- windows
+    def begin_window(self) -> None:
+        """Mark the current counters as the window start for
+        :meth:`window_stats`."""
+        self._mark = (self.served, self.shed, self.missed,
+                      len(self.latencies))
+
+    def window_stats(self) -> SLOStats:
+        """SLO stats for the requests finished/shed since
+        :meth:`begin_window` (idle-window safe)."""
+        s0, d0, m0, l0 = self._mark
+        return SLOStats.from_counts(self.latencies[l0:], self.served - s0,
+                                    self.shed - d0, self.missed - m0)
+
     def stats(self) -> SLOStats:
-        lat = np.asarray(self.latencies) if self.latencies else np.zeros(1)
-        total = self.served + self.shed
-        ok = self.served - self.missed
-        return SLOStats(
-            served=self.served, shed=self.shed, missed=self.missed,
-            attainment=ok / max(total, 1),
-            p50=float(np.percentile(lat, 50)),
-            p95=float(np.percentile(lat, 95)))
+        """Whole-session SLO stats (idle-session safe)."""
+        return SLOStats.from_counts(self.latencies, self.served, self.shed,
+                                    self.missed)

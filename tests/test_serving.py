@@ -1,0 +1,353 @@
+"""The serving stack: EDF admission, Θ control, and the closed serving loop.
+
+Covers the online serving session (repro/serving/loop.py) end to end:
+EDF ordering and tie-breaks, load shedding of doomed requests,
+ThetaController hysteresis, idle/overload edge cases, and the headline
+parity check — the closed-loop session on a stationary backlogged trace
+reproduces the ``simulate_metrics`` replay bill exactly (same exit blocks,
+same block-tick count).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AcaPolicy, CacheConfig, CacheTable, CocaCluster,
+                        FrameBatch, SimulationConfig, SMTMPolicy, calibrate)
+from repro.data import (BurstArrivals, PoissonArrivals, RequestStream,
+                        ScenarioError, Stationary, StreamConfig, TraceReplay,
+                        make_tap_model, perturb_tap_model, synthesize_taps)
+from repro.serving.batching import BatchingConfig, simulate, simulate_metrics
+from repro.serving.loop import (ServeLoopConfig, ServingSession,
+                                throughput_gain)
+from repro.serving.scheduler import (EDFScheduler, Request, SLOStats,
+                                     ThetaController)
+
+I, L, D = 12, 4, 16
+NB = L + 1
+
+
+# ---------------------------------------------------------------------------
+# fixture: a tiny bootstrapped world
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_world():
+    scfg = StreamConfig(num_classes=I, num_layers=L, sem_dim=D)
+    tm = make_tap_model(jax.random.PRNGKey(0), scfg)
+    tm_cal = perturb_tap_model(jax.random.PRNGKey(42), tm, 0.3)
+    cm = calibrate(np.full(NB, 5.0), np.full(L, D), head_cost=1.0)
+    shared = np.tile(np.arange(I), 10)
+
+    def make_cluster(theta=0.08, **kw):
+        cache = CacheConfig(num_classes=I, num_layers=L, sem_dim=D,
+                            theta=theta)
+        sim = SimulationConfig(cache=cache, round_frames=40,
+                               mem_budget=float(8 * I * D))
+        kw.setdefault("policy", AcaPolicy())
+        kw.setdefault("num_clients", 1)
+        cluster = CocaCluster(sim, cm, **kw)
+        cluster.bootstrap(
+            jax.random.PRNGKey(0),
+            lambda lab: synthesize_taps(jax.random.PRNGKey(1), tm_cal,
+                                        jnp.asarray(lab), scfg),
+            shared)
+        return cluster
+
+    def taps_for(labels, seed=5):
+        return synthesize_taps(jax.random.PRNGKey(seed), tm,
+                               jnp.asarray(labels), scfg)
+
+    return make_cluster, taps_for
+
+
+@dataclasses.dataclass(frozen=True)
+class AllAtOnce:
+    """Test arrival process: the whole backlog lands at tick 0."""
+
+    n: int
+
+    def counts(self, rng, ticks):
+        c = np.zeros(ticks, np.int64)
+        c[0] = self.n
+        return c
+
+
+def _precomputed_tap_fn(sems, logits, labels):
+    """Serve precomputed per-request taps in admission order, asserting the
+    requested labels match the trace (admission order == rid order here)."""
+    off = [0]
+
+    def fn(_w, lab):
+        n = len(lab)
+        lo = off[0]
+        np.testing.assert_array_equal(lab, labels[lo:lo + n])
+        off[0] += n
+        return sems[lo:lo + n], logits[lo:lo + n]
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# EDF scheduler: ordering, tie-breaks, shedding
+# ---------------------------------------------------------------------------
+
+
+def test_edf_serves_in_deadline_order_with_rid_tiebreak():
+    s = EDFScheduler(max_slots=1)
+    deadlines = {0: 90.0, 1: 50.0, 2: 90.0, 3: 70.0}
+    for rid, dl in deadlines.items():
+        s.submit(Request(rid=rid, arrival=0.0, blocks_needed=1, deadline=dl))
+    order = []
+    while s.queue or any(sl is not None for sl in s.slots):
+        s.admit()
+        order += [req.rid for req, _, _ in s.advance()]
+    assert order == [1, 3, 0, 2]        # deadline asc, ties by rid
+
+
+def test_edf_sheds_doomed_even_with_free_slots():
+    s = EDFScheduler(max_slots=4)
+    s.submit(Request(rid=0, arrival=0.0, blocks_needed=10, deadline=3.0))
+    s.submit(Request(rid=1, arrival=0.0, blocks_needed=2, deadline=30.0))
+    placed = s.admit()
+    assert [r.rid for _, r in placed] == [1]
+    assert s.shed == 1                  # the doomed one never held a slot
+    assert all(sl is None for i, sl in enumerate(s.slots) if i != placed[0][0])
+
+
+def test_edf_resolve_overrides_estimate():
+    s = EDFScheduler(max_slots=1)
+    s.submit(Request(rid=0, arrival=0.0, blocks_needed=5, deadline=100.0))
+    [(slot, _)] = s.admit()
+    s.resolve(slot, 2)                  # the live lookup said: exits early
+    s.advance()
+    assert [r.rid for r, _, _ in s.advance()] == [0]   # done after 2 ticks
+    with pytest.raises(ValueError):
+        s.resolve(slot, 3)              # slot already empty
+
+
+# ---------------------------------------------------------------------------
+# ThetaController: hysteresis, bounds
+# ---------------------------------------------------------------------------
+
+
+def test_theta_controller_hysteresis_no_oscillation_at_boundary():
+    c = ThetaController(theta=0.1, target=0.95, margin=0.02)
+    # exactly on and inside the deadband edges: strictly no movement
+    for att in (0.93, 0.95, 0.97, 0.94, 0.96, 0.93, 0.97):
+        assert c.update(att) == 0.1
+
+
+def test_theta_controller_saturates_at_bounds():
+    lo = ThetaController(theta=0.1, target=0.95, lo=0.02, hi=0.4)
+    for _ in range(100):
+        lo.update(0.0)
+    assert lo.theta == pytest.approx(0.02)
+    hi = ThetaController(theta=0.1, target=0.95, lo=0.02, hi=0.4)
+    for _ in range(100):
+        hi.update(1.0)
+    assert hi.theta == pytest.approx(0.4)
+
+
+# ---------------------------------------------------------------------------
+# idle-window guards
+# ---------------------------------------------------------------------------
+
+
+def test_slo_stats_idle_window_well_defined():
+    st = SLOStats.from_counts([], served=0, shed=0, missed=0)
+    assert st.attainment == 1.0 and st.p50 == 0.0 and st.p95 == 0.0
+    s = EDFScheduler(max_slots=2)
+    s.begin_window()
+    assert s.window_stats().attainment == 1.0
+    assert s.stats().attainment == 1.0
+
+
+def test_simulate_empty_request_set():
+    cfg = BatchingConfig(num_blocks=NB, max_slots=4)
+    st = simulate(np.zeros(0, np.int64), cfg)
+    assert st.requests == 0 and st.ticks == 0.0
+    assert st.throughput_gain == 1.0 and st.mean_slot_occupancy == 0.0
+    assert simulate_metrics([], cfg).requests == 0
+
+
+# ---------------------------------------------------------------------------
+# the closed loop
+# ---------------------------------------------------------------------------
+
+
+def test_session_parity_with_simulate_metrics_replay(small_world):
+    """A backlogged stationary trace through the *online* session produces
+    exactly the replay bill: same per-request exit blocks as the engine
+    round, same block-tick count as ``simulate_metrics``."""
+    make_cluster, taps_for = small_world
+    N = 64
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, I, N).astype(np.int32)
+    sems, logits = taps_for(labels)
+
+    # the engine round (reference path), same table: round 0, tau = 0
+    engine = make_cluster(vectorized=False)
+    metrics = engine.step([FrameBatch(sems, logits, labels)])
+
+    bc = BatchingConfig(num_blocks=NB, max_slots=8)
+    cfg = ServeLoopConfig(batching=bc, windows=1, window_ticks=1,
+                          slo_ticks=1e9, adapt_theta=False, reallocate=False)
+    workload = RequestStream(num_classes=I, arrivals=AllAtOnce(N),
+                             process=TraceReplay(trace=labels), seed=0)
+    session = ServingSession(make_cluster(), cfg, workload,
+                             _precomputed_tap_fn(sems, logits, labels))
+    res = session.run()
+
+    np.testing.assert_array_equal(res.exit_blocks, metrics.exit_blocks(NB))
+    replay = simulate_metrics(metrics, bc)
+    assert res.served == N == replay.requests
+    assert res.ticks == pytest.approx(replay.ticks)
+    assert res.hit_ratio == pytest.approx(metrics.hit_ratio)
+
+
+def test_session_idle_workload(small_world):
+    make_cluster, taps_for = small_world
+
+    def no_taps(_w, lab):                # must never be called
+        raise AssertionError("tap_fn called on an idle workload")
+
+    cfg = ServeLoopConfig(
+        batching=BatchingConfig(num_blocks=NB, max_slots=4),
+        windows=3, window_ticks=8, slo_ticks=20.0)
+    workload = RequestStream(num_classes=I,
+                             arrivals=PoissonArrivals(rate=0.0), seed=1)
+    res = ServingSession(make_cluster(), cfg, workload, no_taps).run()
+    assert res.arrivals == res.served == res.shed == 0
+    assert res.stats.attainment == 1.0
+    assert res.ticks == 0.0
+    # no evidence -> the Θ controller must not move
+    assert res.theta_trace == [res.theta_trace[0]] * 3
+    base = ServingSession(make_cluster(), cfg, workload, no_taps,
+                          use_cache=False).run()
+    assert throughput_gain(res, base) == 1.0
+
+
+def test_session_overload_sheds_and_lowers_theta(small_world):
+    make_cluster, taps_for = small_world
+
+    def tap_fn(_w, lab):
+        return taps_for(lab, seed=11)
+
+    cfg = ServeLoopConfig(
+        batching=BatchingConfig(num_blocks=NB, max_slots=2),
+        windows=4, window_ticks=20, slo_ticks=6.0, target=0.95,
+        drain=False)
+    workload = RequestStream(num_classes=I,
+                             arrivals=PoissonArrivals(rate=3.0), seed=2)
+    # theta high = few hits: the cache cannot absorb a 7.5x overload
+    res = ServingSession(make_cluster(theta=0.5), cfg, workload, tap_fn).run()
+    assert res.shed > 0
+    assert res.stats.attainment < 0.95
+    # the controller reacted: Θ driven down across windows
+    assert res.theta_trace[-1] < res.theta_trace[0]
+
+
+def test_session_gain_under_load(small_world):
+    """At saturating load the cached session beats its live no-cache twin."""
+    make_cluster, taps_for = small_world
+
+    def tap_fn(_w, lab):
+        return taps_for(lab, seed=13)
+
+    cfg = ServeLoopConfig(
+        batching=BatchingConfig(num_blocks=NB, max_slots=4),
+        windows=3, window_ticks=25, slo_ticks=2.0 * NB)
+    workload = RequestStream(num_classes=I,
+                             arrivals=PoissonArrivals(rate=1.3 * 4 / NB),
+                             process=Stationary(), seed=4)
+    res = ServingSession(make_cluster(theta=0.06), cfg, workload, tap_fn).run()
+    base = ServingSession(make_cluster(theta=0.06), cfg, workload, tap_fn,
+                          use_cache=False).run()
+    assert res.hit_ratio > 0.2
+    assert 0.0 <= res.accuracy <= 1.0
+    assert throughput_gain(res, base) >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# engine hooks
+# ---------------------------------------------------------------------------
+
+
+def test_serving_table_hook_and_set_theta(small_world):
+    make_cluster, _ = small_world
+    cluster = make_cluster(theta=0.08)
+    t = cluster.serving_table()
+    assert isinstance(t, CacheTable)
+    assert t.class_mask.shape == (I,) and t.layer_mask.shape == (L,)
+    assert bool(np.asarray(t.class_mask).any())
+    # a caller-supplied recency vector is accepted (stale everything)
+    t2 = cluster.serving_table(tau=np.full(I, 10_000, np.int32),
+                               round_index=3)
+    assert isinstance(t2, CacheTable)
+    cluster.set_theta(0.123456789)
+    assert cluster.sim.cache.theta == pytest.approx(0.123457)  # quantised
+    cluster.sim = dataclasses.replace(
+        cluster.sim, cache=dataclasses.replace(cluster.sim.cache,
+                                               theta=(0.1,) * L))
+    with pytest.raises(ValueError):
+        cluster.set_theta(0.1)           # per-layer Θ has no scalar override
+
+
+def test_serving_table_rejects_engine_policies(small_world):
+    make_cluster, _ = small_world
+    cluster = make_cluster(policy=SMTMPolicy())
+    with pytest.raises(RuntimeError, match="client-engine"):
+        cluster.serving_table()
+
+
+# ---------------------------------------------------------------------------
+# request streams (arrival processes)
+# ---------------------------------------------------------------------------
+
+
+def test_request_stream_deterministic_and_window_independent():
+    ws = RequestStream(num_classes=I, arrivals=PoissonArrivals(rate=2.0),
+                       seed=7)
+    c1, l1 = ws.window(3, 16)
+    c2, l2 = ws.window(3, 16)
+    np.testing.assert_array_equal(c1, c2)
+    np.testing.assert_array_equal(l1, l2)
+    assert len(l1) == int(c1.sum())
+    c3, _ = ws.window(4, 16)
+    assert not np.array_equal(c1, c3)   # windows draw independently
+
+
+def test_request_stream_validation():
+    with pytest.raises(ScenarioError):
+        RequestStream(num_classes=1)
+    with pytest.raises(ScenarioError):
+        RequestStream(num_classes=I, arrivals=PoissonArrivals(rate=-1.0))
+    with pytest.raises(ScenarioError):
+        RequestStream(num_classes=I,
+                      arrivals=BurstArrivals(rate=1.0, burst_rate=5.0,
+                                             burst_prob=1.5))
+    with pytest.raises(ScenarioError):
+        RequestStream(num_classes=I, arrivals=object())
+
+
+def test_request_stream_rejects_count_mismatch():
+    """A process that cannot honor the window's arrival count (a short
+    fixed trace) must fail loudly, not misalign labels to ticks."""
+    ws = RequestStream(num_classes=I, arrivals=PoissonArrivals(rate=2.0),
+                      process=TraceReplay(trace=np.arange(6) % I), seed=0)
+    with pytest.raises(ScenarioError, match="must honor"):
+        for w in range(8):
+            ws.window(w, 20)
+
+
+def test_burst_arrivals_burstier_than_base():
+    rng = np.random.default_rng(0)
+    b = BurstArrivals(rate=0.5, burst_rate=20.0, burst_prob=0.1,
+                      burst_ticks=5)
+    counts = b.counts(rng, 400)
+    assert counts.max() > 5              # flash crowds present
+    assert counts.min() >= 0
