@@ -21,6 +21,7 @@ MODULES = [
     "fig7_noniid",
     "table3_longtail",
     "table4_dynamics",
+    "table5_chaos",
     "fig8_aca",
     "fig9_ablation",
     "fig10_load",

@@ -1,0 +1,317 @@
+"""Table V (ours): SLO attainment and hit ratio under injected sync faults.
+
+The paper assumes every upload, download and merge succeeds; edge links do
+not.  This benchmark drives the engine and the serving loop through the
+fault-injection subsystem (:mod:`repro.distributed.faults`) and measures
+what the hardening buys:
+
+* **Fault matrix** (``cells``): drop rate × outage length × corruption
+  combinations, each run twice over *identical* streams — **hardened**
+  (retry with SLO-derived backoff budget, bounded-staleness degraded mode,
+  server-side upload validation/dedup) vs **naive** (one attempt, serve
+  whatever arrived, absorb whatever merges).  Headline: hardened SLO
+  attainment and hit ratio strictly dominate naive in every cell.
+* **Crash-restore drill** (``drill``): checkpoint the cluster every N
+  rounds (:meth:`CocaCluster.save_checkpoint`), kill it mid-run, restore
+  ``latest_step`` into a fresh cluster and finish the stream.  The
+  post-crash hit-ratio loss must be bounded by the rounds lost since the
+  last checkpoint: zero rounds lost → bit-exact continuation (zero loss),
+  j rounds lost → no worse than losing *every* merge (a cold bootstrap).
+* **Serving windows** (``serving``): a hardened
+  :class:`~repro.serving.loop.ServingSession` (stale-table degraded windows
+  + Θ-hold) vs the naive session (cache-off windows + Θ chasing the
+  fault-induced dip) through a mid-run server outage.
+
+Emits ``benchmarks/BENCH_chaos.json``.
+
+    PYTHONPATH=src python -m benchmarks.table5_chaos [--quick]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+if __package__ in (None, ""):                      # plain-script invocation
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.common import row, world
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.metrics import FrameBatch
+from repro.data import (PoissonArrivals, RequestStream, Stationary,
+                        longtail_prior, make_client_context, synthesize_taps)
+from repro.distributed.faults import ChaosCluster, FaultSpec, RetryPolicy
+from repro.serving.batching import BatchingConfig
+from repro.serving.loop import ServeLoopConfig, ServingSession
+
+BENCH_CHAOS_JSON = Path(__file__).resolve().parent / "BENCH_chaos.json"
+
+EPS = 1e-6
+
+
+def _cells(quick: bool) -> dict[str, FaultSpec]:
+    """The fault matrix: drop rate x outage length x corruption."""
+    out = {
+        "drop-lo": FaultSpec(download_drop=0.15, upload_drop=0.15, seed=11),
+        "drop-hi": FaultSpec(download_drop=0.40, upload_drop=0.40, seed=12),
+        "corrupt": FaultSpec(download_corrupt=0.25, upload_corrupt=0.25,
+                             upload_dup=0.15, seed=13),
+    }
+    if quick:
+        out["outage"] = FaultSpec(outages=((1, 1),), seed=14)
+        return out
+    out["outage-short"] = FaultSpec(outages=((3, 1),), seed=14)
+    out["outage-long"] = FaultSpec(outages=((3, 3),), download_drop=0.10,
+                                   seed=15)
+    out["mixed"] = FaultSpec(download_drop=0.25, download_corrupt=0.10,
+                             download_partial=0.10, upload_drop=0.20,
+                             upload_delay=0.10, upload_dup=0.10,
+                             upload_corrupt=0.10, outages=((4, 1),),
+                             straggler_prob=0.10, straggler_factor=1.5,
+                             seed=16)
+    return out
+
+
+def _tap_fn(w, clients: int):
+    """(round, client)-keyed taps: hardened and naive — and the drill's
+    reference / restored / cold runs — replay identical streams."""
+    ctxs = [make_client_context(jax.random.PRNGKey(100 + k), w.scfg,
+                                group_key=jax.random.PRNGKey(7000 + k % 2))
+            for k in range(clients)]
+
+    def fn(r, k, lab):
+        key = jax.random.PRNGKey(60013 * r + 131 * k + 3)
+        return synthesize_taps(key, w.tm, jnp.asarray(lab), w.scfg,
+                               context=ctxs[k])
+    return fn
+
+
+def _play(w, harness, labels, tap_fn, rounds=None, round_offset: int = 0):
+    """Feed label rounds [round_offset, rounds) through a stepper."""
+    rounds = labels.shape[0] if rounds is None else rounds
+    for r in range(round_offset, rounds):
+        harness.step([FrameBatch(*tap_fn(r, k, labels[r, k]),
+                                 labels=labels[r, k])
+                      for k in range(labels.shape[1])])
+    return harness
+
+
+# ---------------------------------------------------------------------------
+# the engine fault matrix
+# ---------------------------------------------------------------------------
+
+
+def matrix_rows(w, labels, tap_fn, slo: float, retry: RetryPolicy,
+                quick: bool):
+    rows, report = [], {}
+    dominates = True
+    for name, spec in _cells(quick).items():
+        entry = {"spec": {k: v for k, v in dataclasses.asdict(spec).items()
+                          if v not in (0.0, ()) or k == "seed"}}
+        for mode in ("hardened", "naive"):
+            harness = ChaosCluster(
+                w.cluster(num_clients=labels.shape[1]), spec, retry,
+                hardened=(mode == "hardened"), stale_limit=4)
+            _play(w, harness, labels, tap_fn)
+            res = harness.result()
+            att = harness.attainment(slo)
+            entry[mode] = {
+                "hit_ratio": round(float(res.hit_ratio), 4),
+                "attainment": round(att, 4),
+                "accuracy": round(float(res.accuracy), 4),
+                "latency_ms": round(float(res.avg_latency), 4),
+                "fault_events": len(harness.trace),
+                "server_finite": bool(np.isfinite(
+                    np.asarray(res.server.entries)).all()),
+            }
+            rows.append(row(f"table5/{name}/{mode}", res.avg_latency,
+                            hit_ratio=res.hit_ratio, attainment=att))
+        h, n = entry["hardened"], entry["naive"]
+        entry["dominated"] = (h["hit_ratio"] > n["hit_ratio"]
+                              and h["attainment"] > n["attainment"])
+        dominates &= entry["dominated"]
+        report[name] = entry
+    return rows, report, dominates
+
+
+# ---------------------------------------------------------------------------
+# the crash-restore drill
+# ---------------------------------------------------------------------------
+
+
+def _tail_hit(reports, tail_rounds: int) -> float:
+    ms = [rep.metrics for rep in reports[-tail_rounds:]]
+    frames = sum(m.frames for m in ms)
+    return sum(m.hits for m in ms) / max(frames, 1)
+
+
+def drill(w, labels, tap_fn):
+    """Kill the cluster after round ``crash``, restore ``latest_step``,
+    finish the stream; compare the tail hit ratio against an uninterrupted
+    twin and a cold (bootstrap-only) start on the same tail."""
+    R = labels.shape[0]
+    crash = R // 2 + 1                    # rounds 0..crash-1 ran, then SIGKILL
+    tail = R - crash
+    spec = FaultSpec()                    # recovery is orthogonal to links
+
+    # reference: never crashes
+    ref = ChaosCluster(w.cluster(num_clients=labels.shape[1]), spec)
+    _play(w, ref, labels, tap_fn)
+    tail_ref = _tail_hit(ref.reports, tail)
+
+    out = {"rounds": R, "crash_after_round": crash, "tail_rounds": tail,
+           "tail_hit_ref": round(tail_ref, 4), "cadences": {}}
+    ok = True
+    for every in (1, 2):
+        with tempfile.TemporaryDirectory() as tmp:
+            mgr = CheckpointManager(tmp, keep=2)
+            pre = ChaosCluster(w.cluster(num_clients=labels.shape[1]), spec,
+                               checkpoint_mgr=mgr, checkpoint_every=every)
+            _play(w, pre, labels, tap_fn, rounds=crash)   # ... then the crash
+            restored = w.cluster(num_clients=labels.shape[1])
+            step = restored.restore_checkpoint(mgr)
+            post = ChaosCluster(restored, spec)
+            _play(w, post, labels, tap_fn, round_offset=crash)
+            tail_hit = _tail_hit(post.reports, tail)
+        lost = crash - step
+        loss = tail_ref - tail_hit
+        out["cadences"][f"every={every}"] = {
+            "restored_step": step, "rounds_lost": lost,
+            "tail_hit": round(tail_hit, 4), "hit_loss": round(loss, 4)}
+        if lost == 0:
+            ok &= abs(loss) <= EPS        # bit-exact continuation
+        else:
+            out.setdefault("_losses", []).append((lost, loss))
+
+    # the bound: losing j rounds of merges costs no more than losing ALL of
+    # them — a cold bootstrap-only server serving the same tail
+    cold = ChaosCluster(w.cluster(num_clients=labels.shape[1]), spec)
+    _play(w, cold, labels, tap_fn, round_offset=crash)
+    tail_cold = _tail_hit(cold.reports, tail)
+    bound = (tail_ref - tail_cold) + EPS
+    out["tail_hit_cold"] = round(tail_cold, 4)
+    out["loss_bound_cold"] = round(bound, 4)
+    for lost, loss in out.pop("_losses", []):
+        ok &= loss <= bound
+    out["ok"] = bool(ok)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# serving through an outage
+# ---------------------------------------------------------------------------
+
+
+def serving_rows(w, quick: bool):
+    s = w.s
+    num_blocks = s.num_layers + 1
+    slots = 8 if quick else 16
+    windows = 6 if quick else 12
+    saturation = slots / num_blocks
+    spec = FaultSpec(outages=((2, 2),) if quick else ((4, 3),),
+                     download_drop=0.25, seed=21)
+    workload = RequestStream(
+        num_classes=s.num_classes,
+        arrivals=PoissonArrivals(rate=0.9 * saturation),
+        process=Stationary(prior=longtail_prior(s.num_classes, rho=50.0)),
+        seed=s.seed)
+    bc = BatchingConfig(num_blocks=num_blocks, max_slots=slots)
+    cfg = ServeLoopConfig(batching=bc, windows=windows,
+                          window_ticks=40 if quick else 80,
+                          slo_ticks=2.0 * num_blocks, target=0.9,
+                          theta_step=0.25)
+    ctx = make_client_context(jax.random.PRNGKey(100), w.scfg)
+    ctr = [0]
+
+    def tap(_w, lab):
+        ctr[0] += 1
+        return synthesize_taps(jax.random.PRNGKey(90_000 + ctr[0]), w.tm,
+                               jnp.asarray(lab), w.scfg, context=ctx)
+
+    rows, report = [], {}
+    for mode in ("hardened", "naive"):
+        ctr[0] = 0
+        res = ServingSession(
+            w.cluster(num_clients=1), cfg, workload, tap,
+            faults=spec, retry=RetryPolicy(max_retries=2),
+            hardened=(mode == "hardened"), stale_limit=3).run()
+        degraded = sum(1 for wr in res.windows if wr.degraded)
+        report[mode] = {
+            "attainment": round(res.stats.attainment, 4),
+            "hit_ratio": round(res.hit_ratio, 4),
+            "p95": round(res.stats.p95, 2), "shed": res.shed,
+            "served": res.served, "degraded_windows": degraded,
+            "theta_min": round(min(res.theta_trace), 5),
+            "theta_last": round(res.theta_trace[-1], 5)}
+        rows.append(row(f"table5/serving/{mode}", res.stats.p95,
+                        attainment=res.stats.attainment,
+                        hit_ratio=res.hit_ratio, shed=res.shed))
+    report["spec"] = {"outages": list(map(list, spec.outages)),
+                      "download_drop": spec.download_drop, "seed": spec.seed}
+    report["hardened_dominates"] = (
+        report["hardened"]["attainment"] >= report["naive"]["attainment"]
+        and report["hardened"]["hit_ratio"] > report["naive"]["hit_ratio"])
+    return rows, report
+
+
+# ---------------------------------------------------------------------------
+
+
+def run(quick: bool = False):
+    w = world(quick)
+    s = w.s
+    labels = w.client_labels()
+    tap_fn = _tap_fn(w, s.clients)
+    slo = 0.9 * w.cm.full_latency()
+    retry = RetryPolicy.from_slo(slo, s.frames, fraction=0.02,
+                                 max_retries=3, base_delay=2.0, factor=2.0,
+                                 jitter=0.25)
+
+    rows, cells, dominates = matrix_rows(w, labels, tap_fn, slo, retry,
+                                         quick)
+    drill_report = drill(w, labels, tap_fn)
+    srows, serving_report = serving_rows(w, quick)
+    rows += srows
+
+    BENCH_CHAOS_JSON.write_text(json.dumps({
+        "generated_by": "benchmarks/table5_chaos.py",
+        "quick": bool(quick),
+        "world": {"num_classes": s.num_classes, "num_layers": s.num_layers,
+                  "sem_dim": s.sem_dim, "clients": s.clients,
+                  "rounds": s.rounds, "frames": s.frames,
+                  "theta": s.theta, "seed": s.seed},
+        "slo_ms": round(slo, 4),
+        "retry": dataclasses.asdict(retry),
+        "cells": cells,
+        "hardened_dominates": bool(dominates),
+        "drill": drill_report,
+        "serving": serving_report,
+    }, indent=2) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CPU-friendly quick profile")
+    args = ap.parse_args()
+    for r in run(quick=args.quick):
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+    data = json.loads(BENCH_CHAOS_JSON.read_text())
+    print(f"# hardened dominates naive: {data['hardened_dominates']}; "
+          f"drill ok: {data['drill']['ok']}; serving hardened "
+          f"attainment={data['serving']['hardened']['attainment']} vs "
+          f"naive={data['serving']['naive']['attainment']} -> "
+          f"{BENCH_CHAOS_JSON.name}")
+    # gate: the chaos claims are assertions, not just numbers
+    if not (data["hardened_dominates"] and data["drill"]["ok"]
+            and data["serving"]["hardened_dominates"]):
+        sys.exit(1)

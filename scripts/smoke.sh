@@ -26,6 +26,9 @@ if [[ "$QUICK" == "1" ]]; then
 
   echo "== closed-loop serving session (online SLO loop) =="
   python -m repro.launch.serve --arch coca-ast --smoke
+
+  echo "== chaos gate: fault matrix + crash-restore drill (quick) =="
+  python -m benchmarks.table5_chaos --quick
   exit 0
 fi
 
@@ -44,3 +47,6 @@ python examples/serve_stream.py
 echo "== closed-loop serving: launcher smoke + quick SLO load sweep =="
 python -m repro.launch.serve --arch coca-ast --smoke
 python -m benchmarks.table2_slo --quick
+
+echo "== chaos gate: fault matrix + crash-restore drill (quick) =="
+python -m benchmarks.table5_chaos --quick

@@ -23,7 +23,9 @@ from repro.core.engine import (  # noqa: F401
 )
 from repro.core.metrics import FrameBatch, RoundMetrics  # noqa: F401
 from repro.core.semantic_cache import CacheConfig, CacheTable  # noqa: F401
-from repro.core.server import ServerConfig, ServerState  # noqa: F401
+from repro.core.server import (  # noqa: F401
+    ServerConfig, ServerState, upload_digest, validate_upload,
+)
 from repro.data.scenarios import (  # noqa: F401
     Burst, BurstArrivals, ClientSpec, Drift, PoissonArrivals, RequestStream,
     Scenario, ScenarioError, Stationary, TraceReplay, drive_scenario,

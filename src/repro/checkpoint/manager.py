@@ -81,6 +81,14 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def manifest(self, step: int) -> dict:
+        """The checkpoint's manifest (tree leaf names, shapes, dtypes) —
+        lets a restorer build its ``like`` template from what was actually
+        saved (e.g. :meth:`repro.core.engine.CocaCluster.restore_checkpoint`
+        rebuilding client states only when the save recorded them)."""
+        path = self.dir / f"step_{step:09d}" / "manifest.json"
+        return json.loads(path.read_text())
+
     def restore(self, step: int, like: Any, shardings: Any | None = None) -> Any:
         """Restore into the structure of ``like`` (a pytree of arrays or
         ShapeDtypeStructs), placing shards per ``shardings`` if given —

@@ -15,7 +15,7 @@ from repro.core.client import (  # noqa: F401
 )
 from repro.core.server import (  # noqa: F401
     ServerConfig, ServerState, global_update, init_server,
-    profile_initial_cache,
+    profile_initial_cache, upload_digest, validate_upload,
 )
 from repro.core.aca import (  # noqa: F401
     AllocationRequest, aca_allocate, class_scores, fixed_allocate,

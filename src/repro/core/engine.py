@@ -512,12 +512,15 @@ def round_step(states: ClientState, tables: CacheTable, sems: jax.Array,
                logits: jax.Array, server: ServerState,
                *, cfg: CacheConfig, absorb: AbsorptionConfig,
                scfg: ServerConfig, cm: CostModel, global_updates: bool,
-               deadline: float | None):
+               deadline: float | None, upload_mask: jax.Array | None = None):
     """One full round for all K clients as a single device computation:
     client round (vmapped) → uploads → Eq.-4/5 merges (``lax.scan``, client
     order preserved).
 
     ``states``/``tables``/``sems``/``logits`` carry a leading client axis K.
+    ``upload_mask`` — optional (K,) bool: clients whose Eq.-4/5 upload merges
+    this round (the fault-injection harness masks dropped / delayed /
+    quarantined uploads; ``None`` = everyone, the default path).
     Returns ``(new states, new server, per-frame metrics dict)`` — the
     metrics are (K, F) arrays (pred / hit / exit_layer / lat); nothing here
     forces a host sync.
@@ -539,6 +542,8 @@ def round_step(states: ClientState, tables: CacheTable, sems: jax.Array,
             include = jnp.ones((lat.shape[0],), bool)
         else:
             include = lat.sum(axis=1) <= deadline
+        if upload_mask is not None:
+            include = include & upload_mask
         uploads = make_upload(out.state)             # leading K axis on leaves
 
         def merge(srv, inp):
@@ -957,22 +962,128 @@ class CocaCluster:
         return allocate_subtable(self._gathered_entries(),
                                  jnp.asarray(self._policy.allocate(ctx)))
 
+    # ---------------------------------------------- sync / recovery hooks
+    def client_upload(self, client: int) -> "ClientUpload":
+        """Reconstruct the Eq.-4/5 upload slot ``client`` produced in the
+        *last* round.  ``make_upload`` is a field-for-field view of the
+        client state, and ``step()`` stores each round's post-round
+        accumulators, so the upload a faulty link dropped (or duplicated, or
+        corrupted in flight) is recoverable host-side — the chaos harness
+        replays it through :meth:`merge_upload` on retry/delay."""
+        if self._states is None:
+            raise RuntimeError("no client states yet: step() at least once")
+        self._check_slot(client)
+        return make_upload(jax.tree_util.tree_map(
+            lambda x: x[client], self._states))
+
+    def merge_upload(self, upload) -> None:
+        """Apply one client upload to the live server outside ``step()`` —
+        the degraded-mode re-sync path: a delayed upload arriving a round
+        late, or a retried transmission landing after its round's fused
+        merge already ran.  Refreshes the host mirrors and invalidates the
+        gathered-entries cache exactly as an in-step merge does."""
+        if self._server is None:
+            raise RuntimeError("no server: call bootstrap() or "
+                               "attach_server() before merge_upload()")
+        from repro.core.client import ClientUpload as _CU
+        upload = _CU(*(jnp.asarray(leaf) for leaf in upload))
+        self._set_server(global_update(self._server, upload, self.sim.server))
+
+    def save_checkpoint(self, mgr) -> None:
+        """Checkpoint the cluster's durable state — the server's 2-D global
+        cache (+Φ/R/Υ), the round index, and (when clients have stepped) the
+        client status vectors and activity mask — through
+        :class:`~repro.checkpoint.manager.CheckpointManager`'s atomic step
+        directories.  A server crash mid-round then recovers via
+        :meth:`restore_checkpoint` with hit-ratio loss bounded by the rounds
+        merged since this save (the ``benchmarks/table5_chaos.py`` drill)."""
+        if self._server is None:
+            raise RuntimeError("no server: call bootstrap() or "
+                               "attach_server() before save_checkpoint()")
+        tree = {"server": self._server,
+                "round": np.asarray(self._round, np.int64)}
+        if self._states is not None:
+            tree["states"] = self._states
+            tree["active"] = np.asarray(self._active, bool)
+        mgr.save(self._round, tree)
+
+    def restore_checkpoint(self, mgr, step: int | None = None) -> int | None:
+        """Restore the cluster from ``mgr``'s latest (or explicit) step.
+
+        Returns the restored round index, or ``None`` when the directory
+        holds no checkpoint (a fresh start — the blind-restart contract of
+        :func:`repro.distributed.fault_tolerance.resume`).  Requires a
+        bootstrapped server for the restore template; client states are
+        rebuilt only if the checkpoint recorded them."""
+        if self._server is None:
+            raise RuntimeError("no server: call bootstrap() or "
+                               "attach_server() before restore_checkpoint()")
+        if step is None:
+            step = mgr.latest_step()
+        if step is None:
+            return None
+        leaves = mgr.manifest(step)["leaves"]
+        state_leaves = {n: meta for n, meta in leaves.items()
+                        if n.startswith("states")}
+        like = {"server": self._server,
+                "round": np.asarray(0, np.int64)}
+        if state_leaves:
+            K = int(next(iter(state_leaves.values()))["shape"][0])
+            like["states"] = _init_clients_batched(self.sim.cache, K)
+            like["active"] = np.zeros(K, bool)
+        out = mgr.restore(step, like)
+        if state_leaves:
+            self._K = K
+            self._active = np.asarray(jax.device_get(out["active"]), bool)
+            self._states = out["states"]
+            self._host_tau = np.asarray(jax.device_get(self._states.tau))
+        self._round = int(out["round"])
+        server = out["server"]
+        if self._mesh is not None:
+            from repro.distributed.sharding import shard_server_state
+            server = shard_server_state(server, self._mesh)
+        self._set_server(server)
+        return self._round
+
     # ----------------------------------------------------------------- step
-    def step(self, frames: Sequence) -> RoundMetrics:
+    def step(self, frames: Sequence, *, tables: Sequence | None = None,
+             upload_mask: Sequence | None = None) -> RoundMetrics:
         """Run one round over per-client frame batches.
 
         ``frames`` — K entries, each a :class:`FrameBatch` or a plain
         ``(sems, logits, labels)`` triple.  Batches may have any F; ragged
         per-client F (or ``vectorized=False``) takes the per-client
         reference path, uniform F the single-device-computation path.
+
+        The two keyword overrides are the fault-injection seams
+        (:mod:`repro.distributed.faults`); both default to the unfaulted
+        behaviour bit-for-bit:
+
+        ``tables`` — per-active-client :class:`CacheTable` list replacing the
+        round-start policy allocation (a degraded client serving from its
+        stale local table, a naive client holding a corrupted download).
+        ``upload_mask`` — per-active-client bools; ``False`` keeps that
+        client's Eq.-4/5 upload out of this round's merge (dropped, delayed,
+        or quarantined-for-validation uploads).
         """
         if not frames:
             raise ValueError("step() needs at least one frame batch")
         frames = [fb if isinstance(fb, FrameBatch) else FrameBatch(*fb)
                   for fb in frames]
         self._ensure_clients(len(frames))
+        if tables is not None and len(tables) != len(frames):
+            raise ValueError(f"tables= has {len(tables)} entries for "
+                             f"{len(frames)} frame batches")
+        if upload_mask is not None and len(upload_mask) != len(frames):
+            raise ValueError(f"upload_mask= has {len(upload_mask)} entries "
+                             f"for {len(frames)} frame batches")
 
         if self._is_engine_policy:
+            if tables is not None or upload_mask is not None:
+                raise ValueError("tables=/upload_mask= overrides need the "
+                                 "global-cache protocol; client-engine "
+                                 "baselines have neither allocation nor "
+                                 "Eq.-4/5 uploads")
             metrics = self._step_engines(frames)
         else:
             if self._server is None:
@@ -980,9 +1091,9 @@ class CocaCluster:
                                    "attach_server() before step()")
             lengths = {fb.num_frames for fb in frames}
             if self._vectorized and len(lengths) == 1:
-                metrics = self._step_vectorized(frames)
+                metrics = self._step_vectorized(frames, tables, upload_mask)
             else:
-                metrics = self._step_reference(frames)
+                metrics = self._step_reference(frames, tables, upload_mask)
 
         self._round += 1
         self._history.append(metrics)
@@ -1012,11 +1123,14 @@ class CocaCluster:
             if new is not None and new != self.sim.absorb:
                 self.sim = dataclasses.replace(self.sim, absorb=new)
 
-    def _step_vectorized(self, frames: list[FrameBatch]) -> RoundMetrics:
+    def _step_vectorized(self, frames: list[FrameBatch],
+                         tables_in: Sequence | None = None,
+                         upload_mask: Sequence | None = None) -> RoundMetrics:
         sim = self.sim
         act = np.flatnonzero(self._active)               # ascending slots
         all_active = len(act) == self._K
-        tables = _stack_tables(self.allocate_tables())
+        tables = _stack_tables(list(tables_in) if tables_in is not None
+                               else self.allocate_tables())
         sems = jnp.stack([jnp.asarray(fb.sems) for fb in frames])
         logits = jnp.stack([jnp.asarray(fb.logits) for fb in frames])
 
@@ -1026,11 +1140,13 @@ class CocaCluster:
         idx = None if all_active else jnp.asarray(act)
         states_in = (self._states if all_active else
                      jax.tree_util.tree_map(lambda x: x[idx], self._states))
+        mask = (None if upload_mask is None
+                else jnp.asarray(np.asarray(upload_mask, bool)))
         new_states, self._server, m = round_step(
             states_in, tables, sems, logits, self._server,
             cfg=sim.cache, absorb=sim.absorb, scfg=sim.server, cm=self._cm,
             global_updates=sim.global_updates,
-            deadline=sim.straggler_deadline)
+            deadline=sim.straggler_deadline, upload_mask=mask)
         self._states = (new_states if all_active else
                         jax.tree_util.tree_map(
                             lambda full, new: full.at[idx].set(new),
@@ -1053,16 +1169,19 @@ class CocaCluster:
             client=np.repeat(act.astype(np.int32), F),
             num_layers=sim.cache.num_layers)
 
-    def _step_reference(self, frames: list[FrameBatch]) -> RoundMetrics:
+    def _step_reference(self, frames: list[FrameBatch],
+                        tables_in: Sequence | None = None,
+                        upload_mask: Sequence | None = None) -> RoundMetrics:
         """Per-client Python loop — the parity oracle.  Same round semantics
         (round-start allocation for every client, Eq.-4/5 merges applied in
         client order at the round boundary); one host sync per client per
         stage instead of one per round."""
         sim = self.sim
         act = self.active_clients
-        tables = self.allocate_tables()
+        tables = (list(tables_in) if tables_in is not None
+                  else self.allocate_tables())
         parts, include, new_states = [], [], []
-        for (t, k), fb in zip(zip(tables, act), frames):
+        for i, ((t, k), fb) in enumerate(zip(zip(tables, act), frames)):
             state_k = jax.tree_util.tree_map(lambda x: x[k], self._states)
             out = run_round(reset_round(state_k), t,
                             jnp.asarray(fb.sems), jnp.asarray(fb.logits),
@@ -1077,7 +1196,9 @@ class CocaCluster:
                 num_layers=sim.cache.num_layers, labels=fb.labels, client=k))
             straggled = (sim.straggler_deadline is not None
                          and lat.sum() > sim.straggler_deadline)
-            include.append(sim.global_updates and not straggled)
+            masked = upload_mask is not None and not bool(upload_mask[i])
+            include.append(sim.global_updates and not straggled
+                           and not masked)
 
         for i in range(len(act)):
             if include[i]:

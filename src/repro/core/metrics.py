@@ -79,6 +79,17 @@ class RoundMetrics(NamedTuple):
                    num_layers=int(num_layers))
 
     @classmethod
+    def empty(cls, num_layers: int) -> "RoundMetrics":
+        """A zero-frame record — the degraded no-op round (total outage:
+        no client delivered, nothing ran, nothing to aggregate).  Every
+        aggregate degrades gracefully: 0 frames, 0.0 latency, empty
+        histogram bins."""
+        return cls(pred=np.zeros(0, np.int32), hit=np.zeros(0, bool),
+                   exit_layer=np.zeros(0, np.int32),
+                   latency=np.zeros(0, float), labels=np.zeros(0, np.int64),
+                   client=np.zeros(0, np.int32), num_layers=int(num_layers))
+
+    @classmethod
     def concat(cls, parts: Sequence["RoundMetrics"]) -> "RoundMetrics":
         """Concatenate per-client records (client-major frame order)."""
         assert parts, "cannot concat zero RoundMetrics"

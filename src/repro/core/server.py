@@ -28,11 +28,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.client import ClientUpload
 from repro.core.semantic_cache import CacheConfig, l2_normalize
@@ -99,6 +101,78 @@ def global_update_body(server: ServerState, up: ClientUpload,
 
 
 global_update = partial(jax.jit, static_argnames=("scfg",))(global_update_body)
+
+
+# ---------------------------------------------------------------------------
+# Upload admission (the hardened Eq.-4/5 merge front door)
+# ---------------------------------------------------------------------------
+
+# Post-normalisation every U row is unit length; anything far above that is a
+# transport-corrupted tensor, not a legitimate update.
+_U_NORM_BOUND = 1e3
+
+
+def validate_upload(up: ClientUpload, cfg: CacheConfig | None = None) -> str | None:
+    """Admission check for one client upload before the Eq.-4/5 merge.
+
+    An edge server cannot assume the transport delivered what the client
+    sent — truncated or bit-flipped uploads must be *rejected*, not absorbed
+    into the global cache (a single NaN in ``u`` poisons every later merge of
+    that cell).  Returns ``None`` when the upload is admissible, else a short
+    reason string:
+
+    * any non-finite value in ``u`` / ``phi`` / the counters,
+    * negative ``phi`` or counter entries (counts cannot go backwards),
+    * ``u`` rows absurdly far from the client-side L2-normalised scale,
+    * a touched cell whose row is all-zero (contradiction: the client claims
+      it absorbed there but sent nothing),
+    * shape mismatch against ``cfg`` when given.
+
+    Host-side and cheap relative to a merge; the chaos harness
+    (:mod:`repro.distributed.faults`) routes every post-round merge through
+    this plus :func:`upload_digest` duplicate detection.
+    """
+    u = np.asarray(jax.device_get(up.u))
+    phi = np.asarray(jax.device_get(up.phi))
+    tau = np.asarray(jax.device_get(up.tau))
+    touched = np.asarray(jax.device_get(up.u_touched))
+    hits = np.asarray(jax.device_get(up.hit_counts))
+    looks = np.asarray(jax.device_get(up.lookup_counts))
+    if cfg is not None:
+        want = (cfg.num_layers, cfg.num_classes, cfg.sem_dim)
+        if u.shape != want:
+            return f"u shape {u.shape} != expected {want}"
+        if phi.shape != (cfg.num_classes,):
+            return f"phi shape {phi.shape} != ({cfg.num_classes},)"
+    if not np.isfinite(u).all():
+        return "non-finite values in u"
+    if not (np.isfinite(phi).all() and np.isfinite(tau).all()):
+        return "non-finite status vectors"
+    if (phi < 0).any() or (hits < 0).any() or (looks < 0).any():
+        return "negative counters"
+    norms = np.linalg.norm(u, axis=-1)                       # (L, I)
+    if (norms > _U_NORM_BOUND).any():
+        return "u rows exceed the normalised-scale bound"
+    if (touched & (norms <= 0.0)).any():
+        return "touched cells with all-zero rows"
+    return None
+
+
+def upload_digest(up: ClientUpload) -> str:
+    """Content digest of an upload — the server's duplicate detector.
+
+    A retried/duplicated transmission of the *same* round upload hashes
+    identically; merging it twice would double-count ``phi`` (Eq. 5) and
+    re-apply the Eq.-4 EMA, skewing the global frequency view.  The harness
+    keeps the recent digests per client and drops repeats.
+    """
+    h = hashlib.sha256()
+    for leaf in up:
+        arr = np.ascontiguousarray(np.asarray(jax.device_get(leaf)))
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
 
 
 def _profile_initial_cache_impl(sems: jax.Array, labels: jax.Array,

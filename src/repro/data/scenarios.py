@@ -410,8 +410,14 @@ class Scenario:
     frames: int
     clients: tuple[ClientSpec, ...]
     seed: int = 0
+    faults: object = None        # optional repro.distributed.faults.FaultSpec
 
     def __post_init__(self):
+        if self.faults is not None:
+            from repro.distributed.faults import FaultSpec
+            if not isinstance(self.faults, FaultSpec):
+                raise ScenarioError(
+                    f"faults must be a FaultSpec, got {type(self.faults)}")
         if self.num_classes < 2:
             raise ScenarioError(f"num_classes must be >= 2, "
                                 f"got {self.num_classes}")
@@ -506,7 +512,8 @@ def scenario_labels(scenario: Scenario) -> list[dict]:
 # --------------------------------------------------------------------------
 
 
-def drive_scenario(cluster, scenario: Scenario, tap_fn):
+def drive_scenario(cluster, scenario: Scenario, tap_fn, *,
+                   retry=None, hardened: bool = True, stale_limit: int = 8):
     """Play a scenario through a :class:`~repro.core.engine.CocaCluster`.
 
     ``cluster`` must be constructed with
@@ -517,12 +524,25 @@ def drive_scenario(cluster, scenario: Scenario, tap_fn):
     (state retained), rejoins via ``rejoin_client`` (stale by default),
     late joins via ``rejoin_client(fresh=True)`` — then the active clients'
     frames run as one ``step()``.  Returns ``cluster.result()``.
+
+    With ``scenario.faults`` set (a :class:`repro.distributed.faults.
+    FaultSpec`), every round additionally runs through a
+    :class:`~repro.distributed.faults.ChaosCluster` harness — drift + churn
+    + link faults composing in one spec.  ``retry`` / ``hardened`` /
+    ``stale_limit`` configure the harness (ignored without faults); an empty
+    spec delegates straight to ``cluster.step``, so the zero-fault scenario
+    is bit-identical to the pre-fault driver.
     """
     if cluster.num_clients != scenario.num_clients:
         raise ScenarioError(
             f"cluster has num_clients={cluster.num_clients}, scenario "
             f"needs {scenario.num_clients} (pass num_clients= at "
             "construction)")
+    stepper = cluster
+    if scenario.faults is not None:
+        from repro.distributed.faults import ChaosCluster
+        stepper = ChaosCluster(cluster, scenario.faults, retry,
+                               hardened=hardened, stale_limit=stale_limit)
     for k in range(scenario.num_clients):
         if not scenario.clients[k].active_at(0):
             cluster.remove_client(k)         # joins later; park the slot
@@ -536,8 +556,8 @@ def drive_scenario(cluster, scenario: Scenario, tap_fn):
                 k, fresh=scenario.clients[k].rejoin_fresh)
         for k in plan.leaves:
             cluster.remove_client(k)
-        cluster.step([
+        stepper.step([
             FrameBatch(*tap_fn(plan.round_index, k, plan.labels[k]),
                        labels=plan.labels[k])
             for k in plan.active])
-    return cluster.result()
+    return stepper.result()

@@ -102,11 +102,20 @@ class ClientChurn:
         ``frames_by_client`` — ``{client_index: FrameBatch-or-triple}`` for
         every client that delivered this round.  Returns the round's
         :class:`~repro.core.metrics.RoundMetrics`.
+
+        A round where *no* client delivers (total outage — every link down
+        at once) is a degraded no-op, not an error: membership is left
+        untouched (the engine requires at least one active client, and the
+        outage carries no evidence about which clients are actually gone),
+        away-counters still advance (an outage round ages a stale cache
+        like any other), and an idle zero-frame record comes back.
         """
-        if not frames_by_client:
-            raise ValueError("no client delivered frames this round; "
-                             "nothing to step")
         cluster = self.cluster
+        if not frames_by_client:
+            from repro.core.metrics import RoundMetrics
+            for k in list(self._away):
+                self._away[k] += 1
+            return RoundMetrics.empty(cluster.sim.cache.num_layers)
         present = sorted(frames_by_client)
         if cluster.num_clients is None:
             # first contact: the present set defines the founding membership

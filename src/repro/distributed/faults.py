@@ -1,0 +1,675 @@
+"""Deterministic fault injection for the CoCa client↔server sync path.
+
+The protocol's round trip — download the allocated sub-table, stream frames,
+upload the Eq.-4/5 status — runs over exactly the links an edge deployment
+cannot trust.  This module makes failure a first-class, *replayable* regime:
+
+* :class:`FaultSpec` — a declarative, frozen fault matrix: upload
+  drop/delay/duplication/corruption, dropped/corrupted/partial cache-table
+  downloads, scheduled or stochastic server outage windows, straggler
+  latency inflation.  Every draw comes from
+  ``np.random.default_rng(SeedSequence((seed, domain, round, client[,
+  attempt])))`` — the same keyed-stream convention as
+  :mod:`repro.data.scenarios` — so a chaos run replays bit-for-bit and two
+  harnesses given the same spec see the *same* faults (the hardened-vs-naive
+  comparison is paired, not sampled).
+* :class:`RetryPolicy` — exponential backoff with seeded jitter under a
+  timeout budget derived from the SLO (a round's sync may burn a bounded
+  fraction of the round's latency budget, never more).
+* :class:`ChaosCluster` — the harness: wraps a
+  :class:`~repro.core.engine.CocaCluster` and drives each round through the
+  fault matrix, either **hardened** (retry → bounded-staleness degraded mode
+  → upload validation/dedup at the server door) or **naive** (one attempt,
+  use whatever arrived, absorb whatever merges).  With an empty spec it
+  delegates to ``cluster.step`` untouched — zero-fault parity is structural,
+  not asserted.
+
+Degraded-mode client lifecycle (hardened):
+
+    SYNCED --download fault--> RETRYING --success--> SYNCED (staleness 0)
+       ^                          |
+       |                          exhausted budget
+       re-sync on recovery        v
+       +------------------- DEGRADED (stale table, staleness += 1)
+                                  |
+                                  staleness > stale_limit
+                                  v
+                            CACHE-OFF (empty table, full-depth inference)
+
+The server side leans on the paper's §IV stateless-round argument: a lost
+upload costs *freshness*, never correctness — the next successful round
+carries the client's full status vectors again.  That is why drop/delay are
+recoverable by construction and why the only uploads that must be *refused*
+are corrupt or duplicated ones (:func:`repro.core.server.validate_upload`,
+:func:`~repro.core.server.upload_digest`): those would poison Φ and the
+Eq.-4 EMA rather than merely age it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.client import ClientUpload
+from repro.core.engine import SimulationResult
+from repro.core.metrics import RoundMetrics
+from repro.core.semantic_cache import CacheTable, empty_table
+from repro.core.server import upload_digest, validate_upload
+
+# Disjoint PRNG domains: one sub-stream per fault family, so adding draws to
+# one family never shifts another (the determinism contract of the tests).
+_DOM_UPLOAD = 1
+_DOM_DOWNLOAD = 2
+_DOM_OUTAGE = 3
+_DOM_STRAGGLER = 4
+_DOM_CORRUPT_UP = 5
+_DOM_CORRUPT_DOWN = 6
+_DOM_JITTER = 7
+
+UPLOAD_FAULTS = ("ok", "drop", "delay", "dup", "corrupt")
+DOWNLOAD_FAULTS = ("ok", "drop", "corrupt", "partial")
+
+
+class FaultSpecError(ValueError):
+    pass
+
+
+def _check_prob(name: str, p: float) -> None:
+    if not 0.0 <= p <= 1.0:
+        raise FaultSpecError(f"{name} must be a probability, got {p}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """The declarative fault matrix — what can go wrong, how often, seeded.
+
+    Upload faults (per client per round, mutually exclusive draws):
+      ``upload_drop``    — the status upload is lost in flight,
+      ``upload_delay``   — it arrives one round late (still merged then),
+      ``upload_dup``     — the transport delivers it twice,
+      ``upload_corrupt`` — it arrives bit-flipped (NaNs, blown-up rows).
+
+    Download faults (per client per round/window, mutually exclusive):
+      ``download_drop``    — the sub-table never arrives,
+      ``download_corrupt`` — it arrives scrambled,
+      ``download_partial`` — only a ``partial_frac`` prefix of the hot-spot
+                             classes arrives (truncated transfer).
+
+    Server outages: explicit ``outages=((start, length), ...)`` round
+    windows and/or a stochastic ``outage_prob`` per round (each firing
+    lasts ``outage_len`` rounds).  During an outage every upload and
+    download fails regardless of the link draws.
+
+    ``straggler_prob``/``straggler_factor`` inflate a client's per-frame
+    latency for the round — the slow-device tail the SLO benchmarks feel.
+
+    All draws key off ``seed``; the spec itself carries no state.
+    """
+
+    upload_drop: float = 0.0
+    upload_delay: float = 0.0
+    upload_dup: float = 0.0
+    upload_corrupt: float = 0.0
+    download_drop: float = 0.0
+    download_corrupt: float = 0.0
+    download_partial: float = 0.0
+    partial_frac: float = 0.5
+    outages: tuple[tuple[int, int], ...] = ()
+    outage_prob: float = 0.0
+    outage_len: int = 2
+    straggler_prob: float = 0.0
+    straggler_factor: float = 3.0
+    seed: int = 0
+
+    def __post_init__(self):
+        for name in ("upload_drop", "upload_delay", "upload_dup",
+                     "upload_corrupt", "download_drop", "download_corrupt",
+                     "download_partial", "outage_prob", "straggler_prob"):
+            _check_prob(name, getattr(self, name))
+        up = (self.upload_drop + self.upload_delay + self.upload_dup
+              + self.upload_corrupt)
+        if up > 1.0 + 1e-9:
+            raise FaultSpecError(f"upload fault probabilities sum to {up}>1")
+        down = (self.download_drop + self.download_corrupt
+                + self.download_partial)
+        if down > 1.0 + 1e-9:
+            raise FaultSpecError(
+                f"download fault probabilities sum to {down}>1")
+        if not 0.0 < self.partial_frac < 1.0:
+            raise FaultSpecError(
+                f"partial_frac must be in (0,1), got {self.partial_frac}")
+        if self.outage_len < 1:
+            raise FaultSpecError("outage_len must be >= 1")
+        if self.straggler_factor < 1.0:
+            raise FaultSpecError("straggler_factor must be >= 1 (it "
+                                 "inflates latency)")
+        # normalise the windows so equality/replay are canonical
+        wins = []
+        for w in self.outages:
+            try:
+                start, length = w
+            except (TypeError, ValueError):
+                raise FaultSpecError(
+                    f"outages entries must be (start, length), got {w!r}")
+            if start < 0 or length < 1:
+                raise FaultSpecError(
+                    f"outage window (start={start}, length={length}) "
+                    "needs start>=0, length>=1")
+            wins.append((int(start), int(length)))
+        object.__setattr__(self, "outages", tuple(wins))
+
+    # --------------------------------------------------------------- streams
+    @property
+    def empty(self) -> bool:
+        """True when nothing can ever fire — the harness's parity fast path."""
+        return (self.upload_drop == self.upload_delay == self.upload_dup
+                == self.upload_corrupt == self.download_drop
+                == self.download_corrupt == self.download_partial
+                == self.outage_prob == self.straggler_prob == 0.0
+                and not self.outages)
+
+    def rng(self, domain: int, *key: int) -> np.random.Generator:
+        """The keyed sub-stream for one (domain, round, client, ...) draw —
+        never the global ``np.random`` state (the randomness-audit rule)."""
+        return np.random.default_rng(
+            np.random.SeedSequence((self.seed, domain) + tuple(key)))
+
+    def server_down(self, round_index: int) -> bool:
+        """Is the server unreachable this round (scheduled ∪ stochastic)?"""
+        r = int(round_index)
+        for start, length in self.outages:
+            if start <= r < start + length:
+                return True
+        if self.outage_prob > 0.0:
+            for r0 in range(max(0, r - self.outage_len + 1), r + 1):
+                if self.rng(_DOM_OUTAGE, r0).random() < self.outage_prob:
+                    return True
+        return False
+
+    def _categorical(self, u: float, probs: Sequence[float],
+                     kinds: Sequence[str]) -> str:
+        edge = 0.0
+        for p, kind in zip(probs, kinds):
+            edge += p
+            if u < edge:
+                return kind
+        return "ok"
+
+    def draw_upload(self, round_index: int, client: int,
+                    attempt: int = 0) -> str:
+        """One upload-link draw — ``attempt`` keys retransmissions so each
+        retry is an independent (but replayable) trial."""
+        u = self.rng(_DOM_UPLOAD, round_index, client, attempt).random()
+        return self._categorical(
+            u, (self.upload_drop, self.upload_delay, self.upload_dup,
+                self.upload_corrupt), UPLOAD_FAULTS[1:])
+
+    def draw_download(self, round_index: int, client: int,
+                      attempt: int = 0) -> str:
+        u = self.rng(_DOM_DOWNLOAD, round_index, client, attempt).random()
+        return self._categorical(
+            u, (self.download_drop, self.download_corrupt,
+                self.download_partial), DOWNLOAD_FAULTS[1:])
+
+    def draw_straggler(self, round_index: int, client: int) -> bool:
+        if self.straggler_prob <= 0.0:
+            return False
+        return (self.rng(_DOM_STRAGGLER, round_index, client).random()
+                < self.straggler_prob)
+
+
+# ---------------------------------------------------------------------------
+# Retry / backoff under an SLO-derived budget
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Exponential backoff with seeded jitter under a hard timeout budget.
+
+    Attempt ``a`` (0-based retry count) waits
+    ``base_delay * factor**a * (1 ± jitter)`` before retransmitting; once the
+    summed waits would exceed ``timeout`` the client stops retrying and
+    enters degraded mode.  Jitter draws come from the caller's keyed
+    generator — the policy itself is stateless and replayable.
+    """
+
+    max_retries: int = 3
+    base_delay: float = 0.02       # seconds before the first retry
+    factor: float = 2.0
+    jitter: float = 0.25           # ± fraction of the nominal delay
+    timeout: float = 0.25          # total sync budget (seconds)
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if self.base_delay <= 0.0:
+            raise ValueError("base_delay must be > 0")
+        if self.factor < 1.0:
+            raise ValueError("factor must be >= 1")
+        if not 0.0 <= self.jitter < 1.0:
+            raise ValueError("jitter must be in [0, 1)")
+        if self.timeout <= 0.0:
+            raise ValueError("timeout must be > 0")
+
+    @classmethod
+    def from_slo(cls, slo_latency: float, round_frames: int, *,
+                 fraction: float = 0.05, **kw) -> "RetryPolicy":
+        """Budget the round's sync from the SLO itself: a round serves
+        ``round_frames`` frames against a per-frame budget of
+        ``slo_latency`` seconds, and sync may consume at most ``fraction``
+        of that total — the timeout is a *derived* quantity, not a magic
+        number, so tightening the SLO automatically tightens how long a
+        client will fight a dead link before degrading."""
+        if slo_latency <= 0.0 or round_frames <= 0:
+            raise ValueError("from_slo needs slo_latency > 0 and "
+                             "round_frames > 0")
+        return cls(timeout=float(fraction * slo_latency * round_frames),
+                   **kw)
+
+    def backoff(self, attempt: int, rng: np.random.Generator) -> float:
+        """The wait before retry ``attempt`` (0-based), jittered."""
+        nominal = self.base_delay * self.factor ** attempt
+        return float(nominal * (1.0 + self.jitter * (2.0 * rng.random()
+                                                     - 1.0)))
+
+
+# ---------------------------------------------------------------------------
+# Tensor corruptors (what a broken transport actually delivers)
+# ---------------------------------------------------------------------------
+
+
+def corrupt_upload(up: ClientUpload,
+                   rng: np.random.Generator) -> ClientUpload:
+    """A transport-mangled upload: NaNs and blown-up values scattered into
+    ``u``, a negative entry punched into ``phi`` — exactly the poison
+    :func:`~repro.core.server.validate_upload` must turn away (a naive
+    server merging it NaN-contaminates every touched cell of Eq. 4)."""
+    u = np.array(jax.device_get(up.u), np.float32)
+    flat = u.reshape(-1)
+    n = max(2, flat.size // 64)
+    idx = rng.choice(flat.size, size=n, replace=False)
+    flat[idx[: n // 2]] = np.nan
+    flat[idx[n // 2:]] = 1e7 * (2.0 * rng.random(n - n // 2) - 1.0)
+    phi = np.array(jax.device_get(up.phi), np.float32)
+    phi[int(rng.integers(phi.shape[0]))] = -7.0
+    return ClientUpload(tau=up.tau, phi=jnp.asarray(phi), u=jnp.asarray(u),
+                        u_touched=up.u_touched, hit_counts=up.hit_counts,
+                        lookup_counts=up.lookup_counts)
+
+
+def corrupt_table(table: CacheTable, rng: np.random.Generator) -> CacheTable:
+    """A scrambled download: heavy gaussian noise swamps the entry
+    directions, so lookups against it hit rarely and wrongly.  A hardened
+    client detects the bad checksum and treats the transfer as failed; a
+    naive client serves a round from garbage."""
+    e = np.array(jax.device_get(table.entries), np.float32)
+    noise = rng.normal(scale=1.0, size=e.shape).astype(np.float32)
+    return table._replace(entries=jnp.asarray(0.1 * e + noise))
+
+
+def truncate_table(table: CacheTable, frac: float) -> CacheTable:
+    """A partial download: only the first ``ceil(frac · hot)`` allocated
+    classes arrived before the link died.  The surviving prefix still
+    serves correctly — partial transfer degrades coverage, not
+    correctness."""
+    mask = np.array(jax.device_get(table.class_mask), bool)
+    hot = np.flatnonzero(mask)
+    if hot.size == 0:
+        return table
+    keep = hot[: max(1, int(np.ceil(frac * hot.size)))]
+    new_mask = np.zeros_like(mask)
+    new_mask[keep] = True
+    entries = np.array(jax.device_get(table.entries), np.float32)
+    entries[:, ~new_mask] = 0.0
+    return table._replace(entries=jnp.asarray(entries),
+                          class_mask=jnp.asarray(new_mask))
+
+
+# ---------------------------------------------------------------------------
+# The chaos harness
+# ---------------------------------------------------------------------------
+
+
+class FaultEvent(NamedTuple):
+    """One recorded fault occurrence.  ``client`` is ``-1`` for
+    cluster-scoped events (outages)."""
+
+    round_index: int
+    client: int
+    kind: str
+    detail: str = ""
+
+
+class ChaosRoundReport(NamedTuple):
+    round_index: int
+    metrics: RoundMetrics
+    outage: bool
+    degraded: tuple[int, ...]          # clients serving from stale/no table
+    staleness: dict                    # client -> rounds since a good sync
+    sync_delay: dict                   # client -> seconds burnt on retries
+
+
+class ChaosCluster:
+    """Drive a :class:`~repro.core.engine.CocaCluster` through a fault
+    matrix, hardened or naive.
+
+    Per round, in order:
+
+    1. **outage check** — during a server outage no sync succeeds either way;
+    2. **pending deliveries** — last round's delayed uploads merge (both
+       modes: a late packet is a late packet);
+    3. **downloads** — each active client draws its download fate.
+       *Hardened*: failed/corrupt/partial transfers are detected (checksum)
+       and retried under the backoff budget; exhausted retries fall back to
+       the client's last good table (staleness-counted, wiped to cache-off
+       past ``stale_limit``).  *Naive*: one attempt — a drop serves
+       cache-off, a corrupt or truncated table is used as delivered;
+    4. **the round** — ``cluster.step(frames, tables=..., upload_mask=...)``
+       with faulted uploads masked out of the in-step Eq.-4/5 merge;
+    5. **upload resolution** — dropped uploads retry (hardened) or vanish
+       (naive); delayed ones queue for the next round; duplicates and
+       corruptions knock on the server door, where the hardened merge
+       validates and dedups (:func:`~repro.core.server.validate_upload`,
+       :func:`~repro.core.server.upload_digest`) and the naive merge
+       absorbs whatever arrives;
+    6. **latency accounting** — straggler inflation and the round's retry
+       delays amortised over the client's frames, so the hardened mode's
+       extra sync work is *charged*, not hidden.
+
+    With ``spec.empty`` the harness delegates straight to ``cluster.step``
+    — the zero-fault parity guarantee.  Checkpointing (``checkpoint_mgr`` +
+    ``checkpoint_every``) snapshots the cluster through
+    :meth:`~repro.core.engine.CocaCluster.save_checkpoint` for the
+    crash-recovery drill.
+    """
+
+    def __init__(self, cluster, spec: FaultSpec,
+                 retry: RetryPolicy | None = None, *,
+                 hardened: bool = True, stale_limit: int = 8,
+                 checkpoint_mgr=None, checkpoint_every: int | None = None):
+        if not isinstance(spec, FaultSpec):
+            raise TypeError(f"spec must be a FaultSpec, got {type(spec)}")
+        if not spec.empty and getattr(cluster, "_is_engine_policy", False):
+            raise ValueError(
+                "fault injection needs the global-cache protocol; "
+                "client-engine baselines have no sync path to attack")
+        if not spec.empty and cluster.num_clients is None:
+            raise ValueError("ChaosCluster needs a cluster constructed with "
+                             "num_clients= (tables are cut before frames "
+                             "arrive)")
+        if stale_limit < 0:
+            raise ValueError("stale_limit must be >= 0")
+        self.cluster = cluster
+        self.spec = spec
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.hardened = hardened
+        self.stale_limit = stale_limit
+        self._ckpt_mgr = checkpoint_mgr
+        self._ckpt_every = checkpoint_every
+        self._last_table: dict[int, CacheTable] = {}
+        self._staleness: dict[int, int] = {}
+        self._pending: list[tuple[int, ClientUpload]] = []
+        self._digests: dict[int, list[str]] = {}
+        self._events: list[FaultEvent] = []
+        self._reports: list[ChaosRoundReport] = []
+
+    # ------------------------------------------------------------ inspection
+    @property
+    def trace(self) -> tuple[FaultEvent, ...]:
+        """Every fault that actually fired, in order — the replay witness
+        the determinism tests compare across same-seed runs."""
+        return tuple(self._events)
+
+    @property
+    def reports(self) -> list[ChaosRoundReport]:
+        return list(self._reports)
+
+    @property
+    def staleness(self) -> dict[int, int]:
+        return dict(self._staleness)
+
+    def _event(self, r: int, client: int, kind: str, detail: str = ""):
+        self._events.append(FaultEvent(r, client, kind, detail))
+
+    # ----------------------------------------------------------------- sync
+    def _no_cache(self) -> CacheTable:
+        return empty_table(self.cluster.sim.cache)
+
+    def _download(self, r: int, k: int, fresh: CacheTable | None):
+        """Resolve one client's table for the round.
+
+        Returns ``(table, delay_seconds, synced)``; ``fresh is None`` means
+        the server is down and every attempt fails.
+        """
+        spec = self.spec
+        fault = "drop" if fresh is None else spec.draw_download(r, k)
+        if fault == "ok":
+            self._last_table[k] = fresh
+            self._staleness[k] = 0
+            return fresh, 0.0, True
+        self._event(r, k, f"download_{fault}")
+
+        if not self.hardened:
+            # one attempt, no checksum: use whatever the wire delivered
+            self._staleness[k] = self._staleness.get(k, 0) + 1
+            if fault == "corrupt":
+                return (corrupt_table(fresh,
+                                      spec.rng(_DOM_CORRUPT_DOWN, r, k)),
+                        0.0, False)
+            if fault == "partial":
+                return (truncate_table(fresh, spec.partial_frac),
+                        0.0, False)
+            return self._no_cache(), 0.0, False          # drop / outage
+
+        # hardened: checksum catches corrupt/partial too -> retry them all
+        jit_rng = spec.rng(_DOM_JITTER, r, k)
+        delay = 0.0
+        for attempt in range(self.retry.max_retries):
+            wait = self.retry.backoff(attempt, jit_rng)
+            if delay + wait > self.retry.timeout:
+                self._event(r, k, "retry_budget_exhausted",
+                            f"after {attempt} retries")
+                break
+            delay += wait
+            redraw = ("drop" if fresh is None
+                      else spec.draw_download(r, k, attempt=attempt + 1))
+            if redraw == "ok":
+                self._event(r, k, "retry_success",
+                            f"attempt {attempt + 1}")
+                self._last_table[k] = fresh
+                self._staleness[k] = 0
+                return fresh, delay, True
+        # degraded: serve from the last good table while it is fresh enough
+        stale = self._staleness.get(k, 0) + 1
+        self._staleness[k] = stale
+        if k in self._last_table and stale <= self.stale_limit:
+            self._event(r, k, "degraded_stale_table", f"staleness {stale}")
+            return self._last_table[k], delay, False
+        self._event(r, k, "degraded_cache_off",
+                    f"staleness {stale} > limit {self.stale_limit}"
+                    if k in self._last_table else "no table ever synced")
+        return self._no_cache(), delay, False
+
+    def _merge_guarded(self, r: int, k: int, up: ClientUpload,
+                       kind: str) -> bool:
+        """One upload at the server door: validated + deduped when hardened,
+        absorbed verbatim when naive."""
+        if self.hardened:
+            reason = validate_upload(up, self.cluster.sim.cache)
+            if reason is not None:
+                self._event(r, k, "upload_rejected", reason)
+                return False
+            digest = upload_digest(up)
+            seen = self._digests.setdefault(k, [])
+            if digest in seen:
+                self._event(r, k, "upload_rejected", "duplicate digest")
+                return False
+            seen.append(digest)
+            del seen[:-8]
+            self.cluster.merge_upload(up)
+            return True
+        self.cluster.merge_upload(up)
+        self._event(r, k, f"upload_{kind}_absorbed")
+        return True
+
+    def _remember_digest(self, k: int, up: ClientUpload) -> None:
+        seen = self._digests.setdefault(k, [])
+        seen.append(upload_digest(up))
+        del seen[:-8]
+
+    # ----------------------------------------------------------------- step
+    def step(self, frames: Sequence) -> RoundMetrics:
+        """One chaos round; same contract as ``cluster.step(frames)``."""
+        cluster = self.cluster
+        r = cluster.round_index
+        if self.spec.empty:
+            metrics = cluster.step(frames)
+            self._reports.append(ChaosRoundReport(
+                round_index=r, metrics=metrics, outage=False, degraded=(),
+                staleness={}, sync_delay={}))
+            self._maybe_checkpoint()
+            return metrics
+
+        spec = self.spec
+        act = cluster.active_clients
+        down = spec.server_down(r)
+        if down:
+            self._event(r, -1, "server_outage")
+
+        # late uploads from the previous round land first (if reachable)
+        if not down and self._pending:
+            pending, self._pending = self._pending, []
+            for k, up in pending:
+                self._merge_guarded(r, k, up, kind="delayed")
+
+        fresh = None if down else cluster.allocate_tables()
+        tables, delays, degraded = [], {}, []
+        for i, k in enumerate(act):
+            table, delay, synced = self._download(
+                r, k, None if fresh is None else fresh[i])
+            tables.append(table)
+            if delay > 0.0:
+                delays[k] = delay
+            if not synced:
+                degraded.append(k)
+
+        upload_fate = {}
+        mask = []
+        for k in act:
+            fate = "drop" if down else spec.draw_upload(r, k)
+            upload_fate[k] = fate
+            # dup: the first copy merges in-step, the echo knocks later;
+            # everything else stays out of the fused merge
+            mask.append(fate in ("ok", "dup"))
+            if fate != "ok":
+                self._event(r, k, f"upload_{fate}")
+
+        metrics = cluster.step(frames, tables=tables, upload_mask=mask)
+
+        # ------------------------------------------------ upload resolution
+        for k in act:
+            fate = upload_fate[k]
+            if fate == "ok":
+                if self.hardened:
+                    self._remember_digest(k, cluster.client_upload(k))
+                continue
+            if fate == "drop" and not self.hardened:
+                continue                                 # lost, full stop
+            up = cluster.client_upload(k)
+            if fate == "dup":
+                if self.hardened:
+                    self._remember_digest(k, up)
+                self._merge_guarded(r, k, up, kind="dup")
+            elif fate == "delay":
+                self._pending.append((k, up))
+            elif fate == "corrupt":
+                bad = corrupt_upload(up, spec.rng(_DOM_CORRUPT_UP, r, k))
+                self._merge_guarded(r, k, bad, kind="corrupt")
+            elif fate == "drop":                         # hardened retry
+                jit_rng = spec.rng(_DOM_JITTER, r, k, 1)
+                delay = delays.get(k, 0.0)
+                for attempt in range(self.retry.max_retries):
+                    wait = self.retry.backoff(attempt, jit_rng)
+                    if delay + wait > self.retry.timeout:
+                        self._event(r, k, "upload_retry_exhausted",
+                                    f"after {attempt} retries")
+                        break
+                    delay += wait
+                    if down:
+                        continue                         # outage: all fail
+                    if spec.draw_upload(r, k, attempt=attempt + 1) != "drop":
+                        self._event(r, k, "upload_retry_success",
+                                    f"attempt {attempt + 1}")
+                        self._merge_guarded(r, k, up, kind="retried")
+                        break
+                if delay > 0.0:
+                    delays[k] = delay
+
+        # --------------------------------------------- latency accounting
+        adjust = bool(delays) or spec.straggler_prob > 0.0
+        if adjust:
+            lat = np.array(metrics.latency, float)
+            client = np.asarray(metrics.client)
+            for k in act:
+                sel = client == k
+                n = int(sel.sum())
+                if n == 0:
+                    continue
+                if spec.draw_straggler(r, k):
+                    self._event(r, k, "straggler",
+                                f"x{spec.straggler_factor}")
+                    lat[sel] *= spec.straggler_factor
+                if k in delays:
+                    lat[sel] += delays[k] / n
+            metrics = metrics._replace(latency=lat)
+
+        self._reports.append(ChaosRoundReport(
+            round_index=r, metrics=metrics, outage=down,
+            degraded=tuple(degraded), staleness=dict(self._staleness),
+            sync_delay=dict(delays)))
+        self._maybe_checkpoint()
+        return metrics
+
+    def _maybe_checkpoint(self) -> None:
+        if self._ckpt_mgr is None or not self._ckpt_every:
+            return
+        if self.cluster.round_index % self._ckpt_every == 0:
+            self.cluster.save_checkpoint(self._ckpt_mgr)
+
+    # --------------------------------------------------------------- result
+    def result(self) -> SimulationResult:
+        """Aggregate the chaos-adjusted rounds (the cluster's own
+        ``result()`` predates straggler inflation / retry amortisation, so
+        the harness re-derives the summary from its adjusted records)."""
+        if not self._reports:
+            raise RuntimeError("result() before any step()")
+        ms = [rep.metrics for rep in self._reports]
+        lat_sum = np.array([m.latency_sum for m in ms])
+        frames = np.array([m.frames for m in ms], np.int64)
+        correct = np.array([m.correct for m in ms], np.int64)
+        total = int(frames.sum())
+        hits = sum(m.hits for m in ms)
+        exit_hist = sum((m.exit_histogram() for m in ms),
+                        np.zeros(ms[0].num_layers + 1, np.int64))
+        return SimulationResult(
+            avg_latency=float(lat_sum.sum() / max(total, 1)),
+            accuracy=float(correct.sum() / max(total, 1)),
+            hit_ratio=hits / max(total, 1),
+            hit_accuracy=(sum(m.hit_correct for m in ms) / max(hits, 1)),
+            per_round_latency=lat_sum / np.maximum(frames, 1),
+            per_round_accuracy=correct / np.maximum(frames, 1),
+            exit_histogram=exit_hist,
+            server=self.cluster.server)
+
+    def attainment(self, slo_latency: float) -> float:
+        """Fraction of all served frames within the per-frame SLO — the
+        chaos benchmark's headline number."""
+        lat = np.concatenate([rep.metrics.latency for rep in self._reports])
+        if lat.size == 0:
+            return 1.0
+        return float((lat <= slo_latency).mean())

@@ -117,6 +117,7 @@ class WindowReport(NamedTuple):
     hits: int                 # cache-resolved among requests admitted
     admitted: int
     reallocated: bool
+    degraded: bool = False    # served from a stale/absent table (sync fault)
 
 
 class SessionResult(NamedTuple):
@@ -155,11 +156,27 @@ class ServingSession:
     taps in ``examples/serve_stream.py``.  ``use_cache=False`` runs the
     same loop with the lookup disabled (every request pays all blocks) —
     the live no-cache baseline.
+
+    Faults: with ``faults=`` (a :class:`repro.distributed.faults.FaultSpec`)
+    every window-boundary table download runs through the spec's download
+    matrix and outage windows, keyed by **window index** in place of the
+    engine's round index.  ``hardened=True`` retries a failed transfer
+    under ``retry``'s budget and otherwise serves the window from the last
+    good table (staleness-counted, cache-off past ``stale_limit``) while
+    the Θ controller **holds**
+    (:meth:`~repro.serving.scheduler.ThetaController.hold`) — a
+    fault-induced attainment dip says nothing about Θ.  ``hardened=False``
+    is the naive contrast: one attempt, a dropped table serves full-depth,
+    a corrupt/truncated one is used as delivered, and Θ reacts to the dip
+    it caused.  An empty spec is discarded outright, so the zero-fault
+    session is the pre-fault code path bit-for-bit.
     """
 
     def __init__(self, cluster, cfg: ServeLoopConfig,
                  workload: RequestStream, tap_fn: ServeTapFn, *,
-                 use_cache: bool = True, client: int = 0):
+                 use_cache: bool = True, client: int = 0,
+                 faults=None, retry=None, hardened: bool = True,
+                 stale_limit: int = 4):
         if workload.num_classes != cluster.sim.cache.num_classes:
             raise ValueError(
                 f"workload has {workload.num_classes} classes, cluster cache "
@@ -170,6 +187,15 @@ class ServingSession:
         self.tap_fn = tap_fn
         self.use_cache = use_cache
         self.client = client
+        self._faults = None
+        if faults is not None and not faults.empty:
+            from repro.distributed.faults import RetryPolicy
+            self._faults = faults
+            self.retry = retry if retry is not None else RetryPolicy()
+        self.hardened = hardened
+        self.stale_limit = stale_limit
+        self._good_table = None      # last successfully synced table
+        self._stale = 0              # windows since a good sync
         I = cluster.sim.cache.num_classes
         # request-stream recency: tau_i = admitted requests since class i
         # was last observed (the engine's Eq.-10 unit, fed back at each
@@ -209,6 +235,62 @@ class ServingSession:
                        self._seen - 1 - self._last_seen)
         return tau.astype(np.int32)
 
+    def _window_table(self, w: int):
+        """The serving table for window ``w``, resolved through the fault
+        spec (the identity when none is armed): ``(table, degraded)``.
+
+        The serving loop's clock is block-ticks, so the retry budget is
+        honoured in *wall seconds that never hit the tick bill* — the
+        window boundary is between ticks; what the budget still decides is
+        how many redraws a hardened client gets before giving up.
+        """
+        if not self.use_cache:
+            return None, False
+
+        def cut():
+            return self.cluster.serving_table(
+                client=self.client, tau=self._tau(), round_index=w)
+
+        if self._faults is None:
+            return cut(), False
+        from repro.distributed.faults import (_DOM_CORRUPT_DOWN, _DOM_JITTER,
+                                              corrupt_table, truncate_table)
+        spec = self._faults
+        down = spec.server_down(w)
+        fault = "drop" if down else spec.draw_download(w, self.client)
+        if fault == "ok":
+            table = cut()
+            self._good_table, self._stale = table, 0
+            return table, False
+        if self.hardened:
+            jit_rng = spec.rng(_DOM_JITTER, w, self.client, 2)
+            spent = 0.0
+            for attempt in range(self.retry.max_retries):
+                wait = self.retry.backoff(attempt, jit_rng)
+                if spent + wait > self.retry.timeout:
+                    break
+                spent += wait
+                redraw = ("drop" if down else
+                          spec.draw_download(w, self.client,
+                                             attempt=attempt + 1))
+                if redraw == "ok":
+                    table = cut()
+                    self._good_table, self._stale = table, 0
+                    return table, False
+            self._stale += 1
+            if (self._good_table is not None
+                    and self._stale <= self.stale_limit):
+                return self._good_table, True        # bounded-stale table
+            return None, True                        # cache-off
+        # naive: one attempt, serve whatever the wire delivered
+        self._stale += 1
+        if fault == "corrupt":
+            return corrupt_table(
+                cut(), spec.rng(_DOM_CORRUPT_DOWN, w, self.client)), True
+        if fault == "partial":
+            return truncate_table(cut(), spec.partial_frac), True
+        return None, True                            # dropped download
+
     def _classify(self, window: int, labels: np.ndarray,
                   table: CacheTable | None):
         """The per-tick batched classification: real taps, real fused
@@ -240,9 +322,7 @@ class ServingSession:
             theta=float(self.cluster.sim.cache.theta), target=cfg.target,
             margin=cfg.margin, step=cfg.theta_step,
             lo=cfg.theta_lo, hi=cfg.theta_hi)
-        table = (self.cluster.serving_table(client=self.client,
-                                            tau=self._tau(), round_index=0)
-                 if self.use_cache else None)
+        table, degraded_now = self._window_table(0)
         est_f = self._estimated_blocks()
         est = int(np.ceil(est_f))
         labels_by_rid: dict[int, int] = {}
@@ -299,17 +379,23 @@ class ServingSession:
             if window_blocks:
                 est_f = 0.5 * est_f + 0.5 * float(np.mean(window_blocks))
                 est = int(np.ceil(est_f))
-            # close the loop: attainment -> Θ, observed recency -> ACA
+            # close the loop: attainment -> Θ, observed recency -> ACA.
+            # A degraded window's dip is a sync fault, not a Θ signal —
+            # the hardened session holds AIMD instead of chasing it.
             if cfg.adapt_theta and stats.served + stats.shed > 0:
-                self.cluster.set_theta(ctl.update(stats.attainment))
+                if degraded_now and self.hardened and self._faults is not None:
+                    ctl.hold()
+                else:
+                    self.cluster.set_theta(ctl.update(stats.attainment))
+            was_degraded = degraded_now
             if cfg.reallocate and self.use_cache:
-                table = self.cluster.serving_table(
-                    client=self.client, tau=self._tau(), round_index=w + 1)
-                realloc = True
+                table, degraded_now = self._window_table(w + 1)
+                realloc = not degraded_now
             reports.append(WindowReport(
                 window=w, theta=theta_trace[-1], stats=stats,
                 arrivals=int(counts.sum()), hits=hits_total - hits_w0,
-                admitted=admitted_total - admitted_w0, reallocated=realloc))
+                admitted=admitted_total - admitted_w0, reallocated=realloc,
+                degraded=was_degraded))
 
         if cfg.drain:
             t = 0

@@ -112,6 +112,18 @@ class ThetaController:
             self.theta = min(self.hi, self.theta * (1 + up))
         return self.theta
 
+    def hold(self) -> float:
+        """Freeze Θ for one window — the degraded-mode interlock.
+
+        A window served from a stale or absent table (a sync fault, not a
+        load change — :mod:`repro.distributed.faults`) produces an
+        attainment dip that carries *no information about Θ*: reacting to
+        it drives Θ to the floor, and the post-recovery windows then pay
+        the AIMD climb all the way back.  The serving loop calls ``hold()``
+        instead of :meth:`update` while degraded, so control resumes from
+        where the fault found it."""
+        return self.theta
+
 
 class EDFScheduler:
     """Earliest-deadline-first admission with load shedding over block-ticks.

@@ -7,9 +7,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import pytest
+
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config
-from repro.distributed.fault_tolerance import StragglerPolicy, resume
+from repro.distributed.fault_tolerance import (ClientChurn, StragglerPolicy,
+                                               elastic_remesh, resume)
 from repro.launch.mesh import make_debug_mesh
 from repro.models import init_params
 from repro.optim.adamw import AdamWConfig, init_state
@@ -113,3 +116,88 @@ def test_straggler_policy():
     grads = [{"w": jnp.full(3, float(i))} for i in range(4)]
     merged = pol.combine(grads, ok)
     np.testing.assert_allclose(np.asarray(merged["w"]), (0 + 1 + 2) / 3)
+
+
+def test_straggler_combine_reweights_over_arrivals():
+    """The mean is over shards that *arrived*, not the nominal count — a
+    skipped microbatch must not shrink the gradient (bounded staleness,
+    not gradient decay)."""
+    pol = StragglerPolicy()
+    grads = [{"w": jnp.full(2, 6.0)} for _ in range(4)]
+    one = pol.combine(grads, np.array([True, False, False, False]))
+    all4 = pol.combine(grads, np.array([True] * 4))
+    np.testing.assert_allclose(np.asarray(one["w"]), 6.0)
+    np.testing.assert_allclose(np.asarray(all4["w"]), 6.0)
+
+
+def test_straggler_combine_all_straggled_raises():
+    pol = StragglerPolicy()
+    grads = [{"w": jnp.zeros(2)} for _ in range(3)]
+    with pytest.raises(RuntimeError, match="all shards straggled"):
+        pol.combine(grads, np.array([False, False, False]))
+
+
+def test_resume_fresh_and_with_shardings(tmp_path):
+    mgr = CheckpointManager(tmp_path / "ck")
+    assert resume(mgr, {"w": jnp.zeros(3)}) == (0, None)   # nothing saved yet
+    tree = {"w": jnp.arange(3.0)}
+    mgr.save(5, tree)
+    step, state = resume(mgr, tree)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(state["w"]), np.asarray(tree["w"]))
+    # explicit shardings thread through to restore
+    sh = jax.tree.map(lambda x: x.sharding, tree)
+    step, state = resume(mgr, tree, sh)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(state["w"]), np.asarray(tree["w"]))
+
+
+def test_elastic_remesh_insufficient_ranks():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="not enough healthy data ranks"):
+        elastic_remesh(mesh, lost_data_ranks=1)
+
+
+def test_client_churn_total_outage_is_degraded_noop():
+    """A round where no client delivers is churn's degraded no-op: idle
+    metrics, membership untouched, away-counters still aging."""
+    import repro.api as api
+    from repro.core import calibrate
+
+    I, L, D, F, K = 8, 3, 8, 12, 2
+    cache = api.CacheConfig(num_classes=I, num_layers=L, sem_dim=D,
+                            theta=0.05)
+    sim = api.SimulationConfig(cache=cache, round_frames=F,
+                               mem_budget=4_000.0)
+    cm = calibrate(np.linspace(2.0, 1.0, L + 1), np.full(L, D), head_cost=0.5)
+    centroids = jax.random.normal(jax.random.PRNGKey(0), (L, I, D))
+
+    def taps(labels, seed):
+        k = jax.random.PRNGKey(seed)
+        lab = jnp.asarray(labels)
+        sems = centroids[:, lab, :].transpose(1, 0, 2) + \
+            0.5 * jax.random.normal(k, (len(labels), L, D))
+        logits = jax.nn.one_hot(lab, I) * 4.0
+        return sems, logits
+
+    server = api.bootstrap_server(jax.random.PRNGKey(0), sim,
+                                  lambda lab: taps(lab, 999),
+                                  np.tile(np.arange(I), 6), cm)
+    churn = ClientChurn(api.CocaCluster(sim, cm, server=server,
+                                        num_clients=K))
+    rng = np.random.default_rng(0)
+
+    def batch(r, k):
+        lab = rng.integers(0, I, size=F)
+        return api.FrameBatch(*taps(lab, 13 * r + k), labels=lab)
+
+    churn.step({0: batch(0, 0), 1: batch(0, 1)})
+    churn.step({0: batch(1, 0)})                 # client 1 fails -> away
+    assert churn.away_rounds == {1: 1}
+    m = churn.step({})                           # every link down at once
+    assert m.frames == 0 and m.latency.size == 0 and m.hits == 0
+    assert churn.away_rounds == {1: 2}           # outage ages the absence
+    assert churn.cluster.active_clients == [0]   # membership untouched
+    m = churn.step({0: batch(2, 0), 1: batch(2, 1)})   # client 1 returns
+    assert sorted(set(m.client.tolist())) == [0, 1]
+    assert churn.away_rounds == {}

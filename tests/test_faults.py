@@ -1,0 +1,496 @@
+"""The fault-injection subsystem: spec validation, keyed-stream determinism,
+zero-fault parity, hardened-vs-naive contrasts, degraded-mode staleness,
+retry budgets, crash-restore, and the serving loop's Θ-hold interlock.
+
+Headline guarantees pinned here:
+* an **empty** ``FaultSpec`` through :class:`ChaosCluster` (and through
+  ``ServingSession(faults=...)``) is bit-for-bit the pre-fault code path;
+* the same seed replays the same fault trace and the same metrics;
+* a hardened server survives corrupt/duplicate uploads **finite** while the
+  naive merge NaN-poisons Φ and the Eq.-4 EMA;
+* exhausted retries degrade to the stale table, then to cache-off past
+  ``stale_limit`` — never to an exception;
+* a cluster checkpointed by the harness restores into a fresh process and
+  continues bit-exactly.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import calibrate
+from repro.data import ClientSpec, Scenario, ScenarioError, Stationary, \
+    drive_scenario, zipf_prior
+from repro.distributed.faults import (ChaosCluster, FaultSpec, FaultSpecError,
+                                      RetryPolicy, corrupt_table,
+                                      corrupt_upload, truncate_table)
+
+I, L, D, F, K, R = 10, 4, 16, 24, 3, 4
+
+
+def _world(theta=0.05, **sim_kw):
+    cache = api.CacheConfig(num_classes=I, num_layers=L, sem_dim=D,
+                            theta=theta)
+    sim = api.SimulationConfig(cache=cache, round_frames=F,
+                               mem_budget=8_000.0, **sim_kw)
+    cm = calibrate(np.linspace(2.0, 1.0, L + 1), np.full(L, D), head_cost=0.5)
+
+    centroids = jax.random.normal(jax.random.PRNGKey(0), (L, I, D))
+
+    def taps_for(labels, seed):
+        k = jax.random.PRNGKey(seed)
+        lab = jnp.asarray(labels)
+        sems = centroids[:, lab, :].transpose(1, 0, 2) + \
+            0.6 * jax.random.normal(k, (len(labels), L, D))
+        logits = (jax.nn.one_hot(lab, I) * 4.0
+                  + jax.random.normal(jax.random.fold_in(k, 1),
+                                      (len(labels), I)))
+        return sems, logits
+
+    def tap_shared(labels):
+        return taps_for(labels, 999)
+
+    def tap_fn(r, k_, labels):
+        return taps_for(labels, 7 + 13 * r + 131 * k_)
+
+    shared = np.tile(np.arange(I), 8)
+    server = api.bootstrap_server(jax.random.PRNGKey(0), sim, tap_shared,
+                                  shared, cm)
+    labels = np.random.default_rng(3).integers(0, I, size=(R, K, F))
+    return sim, cm, server, tap_fn, labels
+
+
+def _cluster(sim, cm, server, **kw):
+    kw.setdefault("num_clients", K)
+    return api.CocaCluster(sim, cm, server=server, **kw)
+
+
+def _play(stepper, tap_fn, labels, rounds=None, offset=0):
+    rounds = labels.shape[0] if rounds is None else rounds
+    for r in range(offset, rounds):
+        stepper.step([api.FrameBatch(*tap_fn(r, k, labels[r, k]),
+                                     labels=labels[r, k])
+                      for k in range(labels.shape[1])])
+    return stepper
+
+
+# ---------------------------------------------------------------------------
+# spec validation + keyed streams
+# ---------------------------------------------------------------------------
+
+def test_faultspec_validation_errors():
+    with pytest.raises(FaultSpecError):
+        FaultSpec(upload_drop=1.2)                       # not a probability
+    with pytest.raises(FaultSpecError):
+        FaultSpec(upload_drop=0.6, upload_corrupt=0.6)   # family sums > 1
+    with pytest.raises(FaultSpecError):
+        FaultSpec(download_drop=0.5, download_partial=0.6)
+    with pytest.raises(FaultSpecError):
+        FaultSpec(partial_frac=1.0)
+    with pytest.raises(FaultSpecError):
+        FaultSpec(outages=((2,),))                       # not (start, length)
+    with pytest.raises(FaultSpecError):
+        FaultSpec(outages=((-1, 2),))
+    with pytest.raises(FaultSpecError):
+        FaultSpec(outage_len=0)
+    with pytest.raises(FaultSpecError):
+        FaultSpec(straggler_factor=0.5)                  # must inflate
+    assert FaultSpec().empty
+    assert not FaultSpec(outages=((0, 1),)).empty
+    # FaultSpecError IS a ValueError (callers may catch broadly)
+    assert issubclass(FaultSpecError, ValueError)
+
+
+def test_retry_policy_validation_and_budget_math():
+    for bad in (dict(max_retries=-1), dict(base_delay=0.0),
+                dict(factor=0.5), dict(jitter=1.0), dict(timeout=0.0)):
+        with pytest.raises(ValueError):
+            RetryPolicy(**bad)
+    with pytest.raises(ValueError):
+        RetryPolicy.from_slo(0.0, 10)
+    # the timeout is derived: fraction of the round's total SLO budget
+    p = RetryPolicy.from_slo(0.04, 100, fraction=0.05)
+    assert p.timeout == pytest.approx(0.05 * 0.04 * 100)
+    # backoff: jittered exponential, within the +/- jitter envelope
+    rng = np.random.default_rng(0)
+    for a in range(3):
+        nominal = p.base_delay * p.factor ** a
+        w = p.backoff(a, rng)
+        assert (1 - p.jitter) * nominal <= w <= (1 + p.jitter) * nominal
+
+
+def test_fault_draws_are_keyed_replayable_streams():
+    spec = FaultSpec(upload_drop=0.3, upload_corrupt=0.2,
+                     download_drop=0.4, straggler_prob=0.5, seed=5)
+    # pure functions of (round, client, attempt) — no hidden state
+    for r in range(3):
+        for k in range(3):
+            assert spec.draw_upload(r, k) == spec.draw_upload(r, k)
+            assert spec.draw_download(r, k) == spec.draw_download(r, k)
+            assert spec.draw_straggler(r, k) == spec.draw_straggler(r, k)
+    # attempt keys an independent (but replayable) retransmission trial
+    draws = {spec.draw_upload(0, 0, attempt=a) for a in range(32)}
+    assert len(draws) > 1
+    # a different seed moves the streams
+    other = dataclasses.replace(spec, seed=6)
+    assert any(spec.draw_upload(r, k) != other.draw_upload(r, k)
+               for r in range(8) for k in range(4))
+
+
+def test_server_down_scheduled_and_stochastic():
+    spec = FaultSpec(outages=((2, 2), (7, 1)))
+    assert [spec.server_down(r) for r in range(9)] == \
+        [False, False, True, True, False, False, False, True, False]
+    # a stochastic firing lasts outage_len consecutive rounds
+    st = FaultSpec(outage_prob=0.3, outage_len=3, seed=1)
+    downs = [st.server_down(r) for r in range(64)]
+    assert any(downs) and not all(downs)
+    fired = [r for r in range(64)
+             if st.rng(3, r).random() < st.outage_prob]       # _DOM_OUTAGE
+    for r0 in fired:
+        assert all(downs[r0:r0 + 3])
+
+
+# ---------------------------------------------------------------------------
+# zero-fault parity + determinism
+# ---------------------------------------------------------------------------
+
+def test_empty_spec_is_bitwise_parity():
+    sim, cm, server, tap_fn, labels = _world()
+    plain = _play(_cluster(sim, cm, server), tap_fn, labels).result()
+    chaos = ChaosCluster(_cluster(sim, cm, server), FaultSpec())
+    _play(chaos, tap_fn, labels)
+    res = chaos.result()
+    assert res.avg_latency == plain.avg_latency          # bitwise, not approx
+    assert res.hit_ratio == plain.hit_ratio
+    np.testing.assert_array_equal(res.exit_histogram, plain.exit_histogram)
+    assert chaos.trace == ()
+
+
+def test_same_seed_chaos_replays_bit_for_bit():
+    sim, cm, server, tap_fn, labels = _world()
+    spec = FaultSpec(upload_drop=0.3, upload_dup=0.2, download_drop=0.3,
+                     download_corrupt=0.2, straggler_prob=0.3, seed=4)
+
+    def run():
+        c = ChaosCluster(_cluster(sim, cm, server), spec,
+                         RetryPolicy(max_retries=2))
+        _play(c, tap_fn, labels)
+        return c
+
+    a, b = run(), run()
+    assert a.trace == b.trace and len(a.trace) > 0
+    assert a.result().avg_latency == b.result().avg_latency
+    for ra, rb in zip(a.reports, b.reports):
+        np.testing.assert_array_equal(ra.metrics.latency, rb.metrics.latency)
+    # a different seed fires a different trace
+    c = ChaosCluster(_cluster(sim, cm, server),
+                     dataclasses.replace(spec, seed=5))
+    _play(c, tap_fn, labels)
+    assert c.trace != a.trace
+
+
+def test_harness_guards():
+    sim, cm, server, tap_fn, labels = _world()
+    with pytest.raises(TypeError):
+        ChaosCluster(_cluster(sim, cm, server), spec="drop")
+    with pytest.raises(ValueError):                      # tables cut up front
+        ChaosCluster(api.CocaCluster(sim, cm, server=server),
+                     FaultSpec(download_drop=0.5))
+    with pytest.raises(ValueError):                      # no sync to attack
+        ChaosCluster(_cluster(sim, cm, server,
+                              policy=api.FoggyCachePolicy()),
+                     FaultSpec(download_drop=0.5))
+    with pytest.raises(ValueError):
+        ChaosCluster(_cluster(sim, cm, server), FaultSpec(), stale_limit=-1)
+    with pytest.raises(RuntimeError):
+        ChaosCluster(_cluster(sim, cm, server), FaultSpec()).result()
+
+
+# ---------------------------------------------------------------------------
+# the server door: corrupt + duplicate uploads
+# ---------------------------------------------------------------------------
+
+def test_corrupt_upload_rejected_hardened_poisons_naive():
+    sim, cm, server, tap_fn, labels = _world()
+    spec = FaultSpec(upload_corrupt=1.0, seed=2)
+    hard = ChaosCluster(_cluster(sim, cm, server), spec)
+    _play(hard, tap_fn, labels, rounds=2)
+    assert np.isfinite(np.asarray(hard.cluster.server.entries)).all()
+    assert np.isfinite(np.asarray(hard.cluster.server.phi_global)).all()
+    assert any(e.kind == "upload_rejected" for e in hard.trace)
+
+    naive = ChaosCluster(_cluster(sim, cm, server), spec, hardened=False)
+    _play(naive, tap_fn, labels, rounds=2)
+    poisoned = np.asarray(naive.cluster.server.entries)
+    assert not np.isfinite(poisoned).all()               # NaNs spread via Eq.4
+
+
+def test_duplicate_upload_deduped_by_digest():
+    sim, cm, server, tap_fn, labels = _world()
+    spec = FaultSpec(upload_dup=1.0, seed=2)
+    # hardened: the echo is rejected by digest -> the server trajectory is
+    # bit-identical to a fault-free run (first copy merges in-step)
+    clean = _play(_cluster(sim, cm, server), tap_fn, labels)
+    hard = ChaosCluster(_cluster(sim, cm, server), spec)
+    _play(hard, tap_fn, labels)
+    np.testing.assert_array_equal(np.asarray(hard.cluster.server.phi_global),
+                                  np.asarray(clean.server.phi_global))
+    np.testing.assert_array_equal(np.asarray(hard.cluster.server.entries),
+                                  np.asarray(clean.server.entries))
+    assert sum(e.kind == "upload_rejected" and e.detail == "duplicate digest"
+               for e in hard.trace) == R * K
+    # naive absorbs the echo: Eq. 5 double-counts phi
+    naive = ChaosCluster(_cluster(sim, cm, server), spec, hardened=False)
+    _play(naive, tap_fn, labels)
+    assert (np.asarray(naive.cluster.server.phi_global).sum()
+            > np.asarray(clean.server.phi_global).sum())
+
+
+def test_delayed_upload_merges_next_round():
+    sim, cm, server, tap_fn, labels = _world()
+    spec = FaultSpec(upload_delay=1.0, seed=2)
+    chaos = ChaosCluster(_cluster(sim, cm, server), spec)
+    phi0 = np.asarray(server.phi_global).copy()
+    _play(chaos, tap_fn, labels, rounds=1)
+    # round 0: every upload delayed, nothing merged in-step
+    np.testing.assert_array_equal(
+        np.asarray(chaos.cluster.server.phi_global), phi0)
+    _play(chaos, tap_fn, labels, rounds=2, offset=1)
+    # round 1 starts by landing round 0's late packets (Eq. 5 grows phi)
+    assert (np.asarray(chaos.cluster.server.phi_global).sum() > phi0.sum())
+
+
+# ---------------------------------------------------------------------------
+# degraded mode: stale table -> cache-off, retries under budget
+# ---------------------------------------------------------------------------
+
+def test_degraded_staleness_then_cache_off():
+    sim, cm, server, tap_fn, labels = _world()
+    # round 0 syncs; the server then disappears for good
+    spec = FaultSpec(outages=((1, 100),), seed=0)
+    chaos = ChaosCluster(_cluster(sim, cm, server), spec,
+                         RetryPolicy(max_retries=2), stale_limit=1)
+    _play(chaos, tap_fn, labels)
+    reps = chaos.reports
+    assert not reps[0].outage and reps[0].degraded == ()
+    assert all(r.outage for r in reps[1:])
+    assert all(set(r.degraded) == set(range(K)) for r in reps[1:])
+    # staleness counts up; past stale_limit=1 the table is wiped
+    assert reps[1].staleness == {k: 1 for k in range(K)}
+    assert reps[2].staleness == {k: 2 for k in range(K)}
+    kinds = [e.kind for e in chaos.trace]
+    assert "degraded_stale_table" in kinds and "degraded_cache_off" in kinds
+    # cache-off rounds cannot hit
+    assert reps[-1].metrics.hits == 0
+
+
+def test_retry_budget_exhaustion_and_success_are_charged():
+    sim, cm, server, tap_fn, labels = _world()
+    spec = FaultSpec(download_drop=0.6, seed=3)
+    # a budget too small for even one backoff: every fault degrades at once
+    broke = ChaosCluster(_cluster(sim, cm, server), spec,
+                         RetryPolicy(base_delay=1.0, timeout=0.5))
+    _play(broke, tap_fn, labels)
+    assert any(e.kind == "retry_budget_exhausted" for e in broke.trace)
+    assert all(not r.sync_delay for r in broke.reports)  # no wait was spent
+    # a generous budget retries to success and bills the wait into latency
+    rich = ChaosCluster(_cluster(sim, cm, server), spec,
+                        RetryPolicy(max_retries=8, base_delay=0.01,
+                                    timeout=10.0))
+    _play(rich, tap_fn, labels)
+    assert any(e.kind == "retry_success" for e in rich.trace)
+    billed = [r for r in rich.reports if r.sync_delay]
+    assert billed
+    for rep in billed:
+        lat = np.asarray(rep.metrics.latency)
+        cl = np.asarray(rep.metrics.client)
+        for k, d in rep.sync_delay.items():
+            assert d > 0.0 and lat[cl == k].size > 0
+
+
+def test_corruptors_shapes_and_semantics():
+    sim, cm, server, tap_fn, labels = _world()
+    cluster = _play(_cluster(sim, cm, server), tap_fn, labels, rounds=1)
+    rng = np.random.default_rng(0)
+    up = cluster.client_upload(0)
+    bad = corrupt_upload(up, rng)
+    assert not np.isfinite(np.asarray(bad.u)).all()
+    assert (np.asarray(bad.phi) < 0).any()
+    assert api.validate_upload(bad, sim.cache) is not None
+    assert api.validate_upload(up, sim.cache) is None
+    [table] = [cluster.allocate_tables()[0]]
+    noisy = corrupt_table(table, rng)
+    assert noisy.entries.shape == table.entries.shape
+    assert not np.allclose(np.asarray(noisy.entries),
+                           np.asarray(table.entries))
+    part = truncate_table(table, 0.5)
+    hot = np.asarray(table.class_mask).sum()
+    kept = np.asarray(part.class_mask).sum()
+    assert 1 <= kept <= hot and kept == int(np.ceil(0.5 * hot))
+    # the lost classes are zeroed, the surviving prefix is untouched
+    keep = np.asarray(part.class_mask)
+    np.testing.assert_array_equal(np.asarray(part.entries)[:, ~keep], 0.0)
+    np.testing.assert_array_equal(np.asarray(part.entries)[:, keep],
+                                  np.asarray(table.entries)[:, keep])
+
+
+# ---------------------------------------------------------------------------
+# engine seams: tables= / upload_mask=
+# ---------------------------------------------------------------------------
+
+def test_step_overrides_validation_and_parity():
+    sim, cm, server, tap_fn, labels = _world()
+    cluster = _cluster(sim, cm, server)
+    batches = [api.FrameBatch(*tap_fn(0, k, labels[0, k]),
+                              labels=labels[0, k]) for k in range(K)]
+    with pytest.raises(ValueError):
+        cluster.step(batches, tables=cluster.allocate_tables()[:1])
+    with pytest.raises(ValueError):
+        cluster.step(batches, upload_mask=[True])
+    # explicit tables == the allocation the engine would have cut itself
+    a = _cluster(sim, cm, server)
+    b = _cluster(sim, cm, server)
+    m1 = a.step(batches)
+    m2 = b.step(batches, tables=b.allocate_tables(),
+                upload_mask=[True] * K)
+    np.testing.assert_array_equal(m1.latency, m2.latency)
+    np.testing.assert_array_equal(np.asarray(a.server.entries),
+                                  np.asarray(b.server.entries))
+    # an all-False mask keeps the server bit-frozen (Eq. 4/5 never ran)
+    c = _cluster(sim, cm, server)
+    c.step(batches, upload_mask=[False] * K)
+    np.testing.assert_array_equal(np.asarray(c.server.phi_global),
+                                  np.asarray(server.phi_global))
+    np.testing.assert_array_equal(np.asarray(c.server.entries),
+                                  np.asarray(server.entries))
+
+
+# ---------------------------------------------------------------------------
+# scenario + checkpoint composition
+# ---------------------------------------------------------------------------
+
+def test_scenario_faults_field_validation_and_drive():
+    with pytest.raises(ScenarioError):
+        Scenario(num_classes=I, rounds=2, frames=F, faults="chaos",
+                 clients=(ClientSpec(process=Stationary()),))
+    sim, cm, server, tap_fn, labels = _world()
+    sc = Scenario(num_classes=I, rounds=R, frames=F, seed=3,
+                  faults=FaultSpec(download_drop=0.5, upload_drop=0.3,
+                                   seed=9),
+                  clients=tuple(ClientSpec(process=Stationary(
+                      zipf_prior(I, 1.0))) for _ in range(K)))
+    res = drive_scenario(_cluster(sim, cm, server), sc, tap_fn,
+                         retry=RetryPolicy(max_retries=2), stale_limit=2)
+    assert 0.0 <= res.hit_ratio <= 1.0 and np.isfinite(res.avg_latency)
+    # same scenario, no faults: the plain driver path still works
+    res2 = drive_scenario(_cluster(sim, cm, server),
+                          dataclasses.replace(sc, faults=None), tap_fn)
+    assert res2.hit_ratio >= res.hit_ratio
+
+
+def test_chaos_checkpoint_restore_continues_bit_exact(tmp_path):
+    sim, cm, server, tap_fn, labels = _world()
+    spec = FaultSpec()                    # recovery is orthogonal to links
+    ref = ChaosCluster(_cluster(sim, cm, server), spec)
+    _play(ref, tap_fn, labels)
+
+    mgr = CheckpointManager(tmp_path / "ck")
+    pre = ChaosCluster(_cluster(sim, cm, server), spec,
+                       checkpoint_mgr=mgr, checkpoint_every=2)
+    _play(pre, tap_fn, labels, rounds=2)
+    del pre                                              # the crash
+
+    restored = _cluster(sim, cm, server)
+    assert restored.restore_checkpoint(mgr) == 2
+    post = ChaosCluster(restored, spec)
+    _play(post, tap_fn, labels, offset=2)
+    for ra, rb in zip(ref.reports[2:], post.reports):
+        np.testing.assert_array_equal(ra.metrics.latency, rb.metrics.latency)
+        np.testing.assert_array_equal(ra.metrics.pred, rb.metrics.pred)
+    assert post.result().hit_ratio == pytest.approx(
+        sum(m.metrics.hits for m in ref.reports[2:])
+        / sum(m.metrics.frames for m in ref.reports[2:]))
+
+
+# ---------------------------------------------------------------------------
+# serving: Θ-hold, degraded windows, zero-fault parity
+# ---------------------------------------------------------------------------
+
+def _serving_setup():
+    from repro.data import (PoissonArrivals, RequestStream, Stationary,
+                            StreamConfig, make_tap_model, synthesize_taps)
+    from repro.serving.batching import BatchingConfig
+    from repro.serving.loop import ServeLoopConfig
+
+    scfg = StreamConfig(num_classes=I, num_layers=L, sem_dim=D)
+    tm = make_tap_model(jax.random.PRNGKey(0), scfg)
+    cm = calibrate(np.full(L + 1, 5.0), np.full(L, D), head_cost=1.0)
+    cache = api.CacheConfig(num_classes=I, num_layers=L, sem_dim=D,
+                            theta=0.08)
+    sim = api.SimulationConfig(cache=cache, round_frames=40,
+                               mem_budget=float(8 * I * D))
+
+    def make_cluster():
+        cluster = api.CocaCluster(sim, cm, num_clients=1)
+        cluster.bootstrap(
+            jax.random.PRNGKey(0),
+            lambda lab: synthesize_taps(jax.random.PRNGKey(1), tm,
+                                        jnp.asarray(lab), scfg),
+            np.tile(np.arange(I), 10))
+        return cluster
+
+    workload = RequestStream(num_classes=I,
+                             arrivals=PoissonArrivals(rate=0.8),
+                             process=Stationary(zipf_prior(I, 1.0)), seed=0)
+    cfg = ServeLoopConfig(
+        batching=BatchingConfig(num_blocks=L + 1, max_slots=4),
+        windows=5, window_ticks=25, slo_ticks=2.0 * (L + 1), target=0.9)
+    ctr = [0]
+
+    def tap(_w, lab):
+        ctr[0] += 1
+        return synthesize_taps(jax.random.PRNGKey(40_000 + ctr[0]), tm,
+                               jnp.asarray(lab), scfg)
+
+    def reset():
+        ctr[0] = 0
+    return make_cluster, cfg, workload, tap, reset
+
+
+def test_serving_zero_fault_parity_and_theta_hold():
+    from repro.serving.loop import ServingSession
+    make_cluster, cfg, workload, tap, reset = _serving_setup()
+
+    reset()
+    plain = ServingSession(make_cluster(), cfg, workload, tap).run()
+    reset()
+    empty = ServingSession(make_cluster(), cfg, workload, tap,
+                           faults=FaultSpec()).run()
+    assert empty.stats == plain.stats                    # bitwise parity
+    assert empty.theta_trace == plain.theta_trace
+    assert not any(w.degraded for w in empty.windows)
+
+    spec = FaultSpec(outages=((1, 2),), seed=7)
+    reset()
+    hard = ServingSession(make_cluster(), cfg, workload, tap, faults=spec,
+                          retry=RetryPolicy(max_retries=1),
+                          stale_limit=4).run()
+    degraded = [w.degraded for w in hard.windows]
+    assert degraded[1] and degraded[2] and not degraded[0]
+    # Θ held through the degraded windows: the trace is flat across them
+    # (theta_trace[i] is Θ entering window i)
+    assert hard.theta_trace[2] == hard.theta_trace[1]
+    assert hard.hit_ratio > 0.0                          # stale table serves
+
+    reset()
+    naive = ServingSession(make_cluster(), cfg, workload, tap, faults=spec,
+                           hardened=False).run()
+    assert any(w.degraded for w in naive.windows)
+    # naive outage windows serve cache-off: strictly fewer hits
+    assert naive.hit_ratio < hard.hit_ratio
