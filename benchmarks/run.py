@@ -22,6 +22,7 @@ MODULES = [
     "table3_longtail",
     "table4_dynamics",
     "table5_chaos",
+    "table6_fleet",
     "fig8_aca",
     "fig9_ablation",
     "fig10_load",

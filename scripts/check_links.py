@@ -23,6 +23,7 @@ REQUIRED_PAGES = [
     "docs/api.md",
     "docs/architecture.md",
     "docs/benchmarks.md",
+    "docs/fleet.md",
     "docs/robustness.md",
     "docs/scenarios.md",
     "docs/serving.md",

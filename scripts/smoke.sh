@@ -29,6 +29,9 @@ if [[ "$QUICK" == "1" ]]; then
 
   echo "== chaos gate: fault matrix + crash-restore drill (quick) =="
   python -m benchmarks.table5_chaos --quick
+
+  echo "== fleet gate: cache-aware gateway sweep + outage cell (quick) =="
+  python -m benchmarks.table6_fleet --quick
   exit 0
 fi
 
@@ -50,3 +53,6 @@ python -m benchmarks.table2_slo --quick
 
 echo "== chaos gate: fault matrix + crash-restore drill (quick) =="
 python -m benchmarks.table5_chaos --quick
+
+echo "== fleet gate: cache-aware gateway sweep + outage cell (quick) =="
+python -m benchmarks.table6_fleet --quick

@@ -962,6 +962,22 @@ class CocaCluster:
         return allocate_subtable(self._gathered_entries(),
                                  jnp.asarray(self._policy.allocate(ctx)))
 
+    def serving_tables(self, taus: dict[int, np.ndarray], *,
+                       round_index: int | None = None
+                       ) -> dict[int, CacheTable]:
+        """Per-replica serving cuts from **one** gather — the fleet
+        gateway's window-boundary hook.  Each entry of ``taus`` maps a
+        replica's cluster slot to the request-stream recency that replica
+        observed; every cut shares the same dense global table (the
+        ``_gathered_entries`` cache makes the N calls cost one collective),
+        so N replicas re-allocate against an identical server snapshot —
+        the fleet analogue of the round's single broadcast."""
+        entries = self._gathered_entries()   # prime the cache once
+        del entries
+        return {k: self.serving_table(client=k, tau=tau,
+                                      round_index=round_index)
+                for k, tau in taus.items()}
+
     # ---------------------------------------------- sync / recovery hooks
     def client_upload(self, client: int) -> "ClientUpload":
         """Reconstruct the Eq.-4/5 upload slot ``client`` produced in the

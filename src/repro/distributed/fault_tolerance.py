@@ -96,33 +96,36 @@ class ClientChurn:
     def away_rounds(self) -> dict[int, int]:
         return dict(self._away)
 
-    def step(self, frames_by_client: dict):
-        """Reconcile membership with the arrived frames, then run the round.
+    def reconcile(self, present) -> dict[int, bool]:
+        """Reconcile cluster membership with the ``present`` client ids —
+        the protocol of :meth:`step`, detached from running a round.
 
-        ``frames_by_client`` — ``{client_index: FrameBatch-or-triple}`` for
-        every client that delivered this round.  Returns the round's
-        :class:`~repro.core.metrics.RoundMetrics`.
+        The fleet gateway (:mod:`repro.fleet.gateway`) drives this directly:
+        its replicas map one-to-one onto cluster slots, and a replica
+        outage/recovery is exactly a client leave/rejoin — an outaged
+        replica's slot is masked out of allocation, and a recovered replica
+        comes back with its stale recency profile (wiped instead when the
+        outage outlasted ``stale_limit`` windows).
 
-        A round where *no* client delivers (total outage — every link down
-        at once) is a degraded no-op, not an error: membership is left
-        untouched (the engine requires at least one active client, and the
-        outage carries no evidence about which clients are actually gone),
-        away-counters still advance (an outage round ages a stale cache
-        like any other), and an idle zero-frame record comes back.
+        Returns ``{client: fresh}`` for every client that rejoined in this
+        call (``fresh=True`` means its state was wiped).  An empty
+        ``present`` set (total outage) changes no membership — it only ages
+        the away-counters; the engine requires at least one active client
+        and an outage carries no evidence about who is actually gone.
         """
         cluster = self.cluster
-        if not frames_by_client:
-            from repro.core.metrics import RoundMetrics
+        present = sorted(present)
+        rejoined: dict[int, bool] = {}
+        if not present:
             for k in list(self._away):
                 self._away[k] += 1
-            return RoundMetrics.empty(cluster.sim.cache.num_layers)
-        present = sorted(frames_by_client)
+            return rejoined
         if cluster.num_clients is None:
             # first contact: the present set defines the founding membership
             if present != list(range(len(present))):
                 raise ValueError(f"first round must present contiguous "
                                  f"client ids 0..n-1, got {present}")
-            return cluster.step([frames_by_client[k] for k in present])
+            return rejoined
         # validate every id before mutating anything: a rejected round must
         # leave the cluster membership exactly as it found it
         new_ids = [k for k in present if k >= cluster.num_clients]
@@ -142,16 +145,40 @@ class ClientChurn:
             if k in active:
                 continue
             if k in self._away:              # back from an outage
-                cluster.rejoin_client(
-                    k, fresh=self._away[k] > self.stale_limit)
+                fresh = self._away[k] > self.stale_limit
+                cluster.rejoin_client(k, fresh=fresh)
+                rejoined[k] = fresh
                 del self._away[k]
             else:
                 cluster.rejoin_client(k, fresh=True)   # parked slot, cold
+                rejoined[k] = True
         for k in sorted(active - set(present)):
             cluster.remove_client(k)         # failure -> leave, state kept
             self._away.setdefault(k, 0)
         for k in list(self._away):
             self._away[k] += 1
+        return rejoined
+
+    def step(self, frames_by_client: dict):
+        """Reconcile membership with the arrived frames, then run the round.
+
+        ``frames_by_client`` — ``{client_index: FrameBatch-or-triple}`` for
+        every client that delivered this round.  Returns the round's
+        :class:`~repro.core.metrics.RoundMetrics`.
+
+        A round where *no* client delivers (total outage — every link down
+        at once) is a degraded no-op, not an error: membership is left
+        untouched, away-counters still advance (an outage round ages a
+        stale cache like any other), and an idle zero-frame record comes
+        back.
+        """
+        cluster = self.cluster
+        if not frames_by_client:
+            from repro.core.metrics import RoundMetrics
+            self.reconcile(())
+            return RoundMetrics.empty(cluster.sim.cache.num_layers)
+        present = sorted(frames_by_client)
+        self.reconcile(present)
         return cluster.step([frames_by_client[k] for k in present])
 
 

@@ -1,0 +1,16 @@
+"""Fleet tier: cache-aware gateway over N replicated edge servers.
+
+``FleetGateway`` (gateway.py) lifts admission and Θ control to fleet level
+and dispatches to per-replica :class:`~repro.serving.loop.ServingSession`
+instances through a :mod:`~repro.fleet.router` policy (consistent-hash /
+class-affinity / round-robin).  See docs/fleet.md.
+"""
+
+from repro.fleet.gateway import FleetGateway, FleetResult, FleetWindowReport
+from repro.fleet.router import (AffinityRouter, ConsistentHashRing,
+                                HashRouter, ROUTERS, RoundRobinRouter,
+                                make_router, stable_hash)
+
+__all__ = ["FleetGateway", "FleetResult", "FleetWindowReport",
+           "AffinityRouter", "ConsistentHashRing", "HashRouter",
+           "RoundRobinRouter", "ROUTERS", "make_router", "stable_hash"]

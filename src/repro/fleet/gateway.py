@@ -1,0 +1,331 @@
+"""The fleet gateway: one admission tier over N replicated edge servers.
+
+The paper's edge server is a single box; this module is the fleet-scale
+composition the ROADMAP's north star asks for.  ``FleetGateway`` fronts N
+:class:`~repro.serving.loop.ServingSession` replicas, each a slot of one
+shared :class:`~repro.core.engine.CocaCluster`: every replica cuts its own
+ACA table from the *same* 2-D global cache (one gather per window —
+:meth:`CocaCluster.serving_tables
+<repro.core.engine.CocaCluster.serving_tables>`), but observes only the
+request recency τ of the traffic routed to it.  That asymmetry is the whole
+game: the router decides what each replica sees, the replica's
+between-window re-allocation concentrates its table on what it saw, and a
+cache-aware router therefore *creates* the per-replica hit ratio it then
+exploits.
+
+Division of labour per global block-tick:
+
+* **Admission (fleet level)** — the gateway stamps each arrival with a
+  deadline and the *fleet* cost estimate (one EWMA over every replica's
+  resolved block counts), and door-sheds only requests that are infeasible
+  even if started immediately — the same valve the per-replica
+  :class:`~repro.serving.scheduler.EDFScheduler` applies at pop time, so a
+  1-replica fleet sheds the same requests as a bare session.  One
+  admission decision, then dispatch.
+* **Routing** — a :mod:`repro.fleet.router` policy picks the replica; the
+  replica's own EDF scheduler orders and (if overloaded) sheds locally.
+* **Ticking** — every replica ticks every global tick, outaged or not, so
+  the fleet's clocks stay lockstep and a spilled request's deadline means
+  the same thing on its new replica.
+
+At each window boundary the gateway lifts the session's control loop to
+fleet level: pooled resolved blocks → one shared admission estimate;
+fleet-wide attainment → one :class:`~repro.serving.scheduler.ThetaController`
+verdict → ``cluster.set_theta`` (held, not updated, in any window touched
+by an outage — a dead replica's dip is a fault signal, not a Θ signal);
+then every *alive* replica re-cuts its table under the new Θ.
+
+Outages (``faults={replica: FaultSpec}``) are reconciled through
+:class:`~repro.distributed.fault_tolerance.ClientChurn` — replicas map
+one-to-one onto cluster slots, so an outage is a client leave (the slot
+drops out of allocation) and a recovery is a rejoin, wiped cold when the
+outage outlasted ``stale_limit`` windows.  A dying replica's queued and
+in-flight requests spill to its consistent-hash ring neighbors with their
+original deadlines (in-flight block progress is lost — that is what a
+crash costs); its ring arc returns on recovery.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.distributed.fault_tolerance import ClientChurn
+from repro.fleet.router import RoundRobinRouter, make_router
+from repro.serving.loop import ServeLoopConfig, ServingSession, SessionResult
+from repro.serving.scheduler import SLOStats, ThetaController
+
+__all__ = ["FleetGateway", "FleetResult", "FleetWindowReport"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetWindowReport:
+    """One control window, fleet-wide."""
+
+    window: int
+    theta: float                    # Θ in force during the window
+    stats: SLOStats                 # aggregated over replicas + door sheds
+    arrivals: int
+    door_shed: int                  # shed at the gateway, never dispatched
+    outaged: tuple[int, ...]        # replicas down during this window
+    spilled: int                    # requests evacuated to ring neighbors
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetResult:
+    """Outcome of one fleet run — the fleet analogue of
+    :class:`~repro.serving.loop.SessionResult`."""
+
+    stats: SLOStats                       # fleet-wide, door sheds included
+    windows: list[FleetWindowReport]
+    replicas: dict[int, SessionResult]    # per-replica session outcomes
+    served: int
+    shed: int                             # replica sheds + door sheds
+    door_shed: int
+    arrivals: int
+    hit_ratio: float                      # fleet aggregate
+    per_replica_hit_ratio: dict[int, float]
+    accuracy: float
+    throughput: float                     # served per global block-tick
+    theta_trace: list[float]
+
+    @property
+    def attainment(self) -> float:
+        return self.stats.attainment
+
+
+class FleetGateway:
+    """Route an open-loop workload across N replica serving sessions.
+
+    Parameters
+    ----------
+    cluster:
+        A bootstrapped :class:`CocaCluster` whose ``num_clients`` equals
+        the replica count — replica *k* serves from cluster slot *k*.
+    cfg:
+        The per-window serving knobs, shared by every replica.
+    workloads:
+        One :class:`~repro.data.scenarios.RequestStream` per fleet client
+        (any number of clients; they are routed, not sharded).
+    tap_fn:
+        The replica-side tap source, shared (stateless per call).
+    router:
+        ``"affinity"`` | ``"hash"`` | ``"round_robin"`` — see
+        :mod:`repro.fleet.router`.
+    faults:
+        ``{replica: FaultSpec}``; replica *k* is outaged during window *w*
+        iff ``faults[k].server_down(w)``.
+    """
+
+    def __init__(self, cluster, cfg: ServeLoopConfig, workloads, tap_fn, *,
+                 router: str = "affinity", use_cache: bool = True,
+                 faults=None, vnodes: int = 64, decay: float = 0.8,
+                 stale_limit: int = 4, load_factor: float = 1.25):
+        workloads = list(workloads)
+        if not workloads:
+            raise ValueError("need at least one client workload")
+        I = cluster.sim.cache.num_classes
+        for i, wl in enumerate(workloads):
+            if wl.num_classes != I:
+                raise ValueError(f"workload {i} has {wl.num_classes} "
+                                 f"classes, cluster cache has {I}")
+        if cluster.num_clients is None:
+            raise RuntimeError("cluster client count unknown: bootstrap "
+                               "with num_clients= (one slot per replica)")
+        self.cluster = cluster
+        self.cfg = cfg
+        self.workloads = workloads
+        self.replicas = list(range(cluster.num_clients))
+        self.sessions = {k: ServingSession(cluster, cfg, None, tap_fn,
+                                           use_cache=use_cache, client=k)
+                         for k in self.replicas}
+        self.router = make_router(router, self.replicas, I,
+                                  decay=decay, vnodes=vnodes)
+        self.faults = dict(faults) if faults else {}
+        for k in self.faults:
+            if k not in self.sessions:
+                raise ValueError(f"fault spec for unknown replica {k}")
+        if load_factor < 1.0:
+            raise ValueError(f"load_factor must be >= 1, got {load_factor}")
+        self.load_factor = float(load_factor)
+        self.churn = ClientChurn(cluster, stale_limit=stale_limit)
+
+    # ----------------------------------------------------------- internals
+    def _down(self, replica: int, window: int) -> bool:
+        spec = self.faults.get(replica)
+        return spec is not None and spec.server_down(window)
+
+    def _dispatch(self, client: int, label: int, alive: set[int]) -> int:
+        """Bounded-load consistent hashing: take the router's preferred
+        replica unless its backlog exceeds ``load_factor`` times the fleet
+        mean, in which case overflow to the first under-limit ring
+        successor (min-backlog alive replica if every candidate is over).
+        Affinity keeps its cache locality; the imbalance a popularity-
+        skewed keyspace would pile onto one replica is capped."""
+        sessions = self.sessions
+        cands = self.router.candidates(client, label)
+        first = next(cands)
+        total = sum(sessions[k].backlog() for k in alive)
+        limit = self.load_factor * (1.0 + total / len(alive))
+        if sessions[first].backlog() <= limit:
+            return first
+        best = first
+        for r in cands:
+            if sessions[r].backlog() <= limit:
+                return r
+            if sessions[r].backlog() < sessions[best].backlog():
+                best = r
+        return best
+
+    def _spill_target(self, label: int) -> int:
+        """Where an evacuated request goes: its class's arc on the ring
+        (the hash policies' natural spill), or the next alive replica in
+        rotation for round-robin."""
+        r = self.router
+        if isinstance(r, RoundRobinRouter):
+            return r.route(-1, label)
+        return r.ring.route(f"class:{int(label)}")
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> FleetResult:
+        cfg = self.cfg
+        sessions = self.sessions
+        for s in sessions.values():
+            s.start()
+        ctl = ThetaController(
+            theta=float(self.cluster.sim.cache.theta), target=cfg.target,
+            margin=cfg.margin, step=cfg.theta_step,
+            lo=cfg.theta_lo, hi=cfg.theta_hi)
+        est_f = next(iter(sessions.values())).estimate  # shared cold start
+        alive = set(self.replicas)
+        theta_trace: list[float] = []
+        fwindows: list[FleetWindowReport] = []
+        arrivals_total = door_shed_total = 0
+        wall_ticks = 0
+
+        for w in range(cfg.windows):
+            theta_trace.append(float(self.cluster.sim.cache.theta))
+            # --- liveness transitions at the boundary -----------------
+            target_alive = {k for k in self.replicas if not self._down(k, w)}
+            newly_dead = alive - target_alive
+            newly_up = target_alive - alive
+            rejoined: dict[int, bool] = {}
+            if self.faults:
+                # replicas are cluster clients: leave on outage, rejoin on
+                # recovery (wiped when away longer than stale_limit)
+                rejoined = self.churn.reconcile(sorted(target_alive))
+            for k in newly_dead:
+                self.router.set_alive(k, False)
+            for k in newly_up:
+                self.router.set_alive(k, True)
+                if rejoined.get(k, False):
+                    sessions[k].reset_recency()
+                sessions[k].resync(w)
+            alive = target_alive
+            for s in sessions.values():     # dead ones too: marks + clocks
+                s.begin_window(w)
+            # --- spill the dying replicas' backlog --------------------
+            spilled = 0
+            for k in sorted(newly_dead):
+                for req, label in sessions[k].evacuate():
+                    if not alive:
+                        door_shed_total += 1     # total outage: lost
+                        continue
+                    sessions[self._spill_target(label)].submit(
+                        label, arrival=req.arrival, deadline=req.deadline)
+                    spilled += 1
+            # --- the window's global ticks ----------------------------
+            draws = []
+            for wl in self.workloads:
+                counts, labels = wl.window(w, cfg.window_ticks)
+                offsets = np.concatenate([[0], np.cumsum(counts)])
+                draws.append((labels, offsets))
+            door_shed_w0 = door_shed_total
+            arrivals_w = 0
+            est = int(np.ceil(est_f))
+            for t in range(cfg.window_ticks):
+                for c, (labels, offsets) in enumerate(draws):
+                    for lab in labels[offsets[t]:offsets[t + 1]]:
+                        arrivals_w += 1
+                        # fleet admission: infeasible-at-estimate requests
+                        # shed at the door (== the replica valve's verdict)
+                        if est > cfg.slo_ticks or not alive:
+                            door_shed_total += 1
+                            continue
+                        k = self._dispatch(c, int(lab), alive)
+                        sessions[k].submit(int(lab))
+                for s in sessions.values():
+                    s.tick(w)
+                wall_ticks += 1
+            arrivals_total += arrivals_w
+            # --- lifted control: one estimate, one Θ verdict ----------
+            pooled = [b for s in sessions.values() for b in s.window_blocks()]
+            if pooled:
+                est_f = 0.5 * est_f + 0.5 * float(np.mean(pooled))
+            for s in sessions.values():
+                s.set_estimate(est_f)
+            door_w = door_shed_total - door_shed_w0
+            wstats = [sessions[k].window_stats() for k in self.replicas]
+            fleet_w = _aggregate(
+                wstats, door_shed=door_w,
+                latencies=[lat for k in self.replicas
+                           for lat in sessions[k].window_latencies()])
+            outaged = tuple(sorted(set(self.replicas) - alive))
+            if cfg.adapt_theta and fleet_w.served + fleet_w.shed > 0:
+                if outaged:
+                    ctl.hold()       # outage dip is not a Θ signal
+                else:
+                    self.cluster.set_theta(ctl.update(fleet_w.attainment))
+            for k, s in sessions.items():
+                s.end_window(w, control=False,
+                             reallocate=cfg.reallocate and k in alive)
+            fwindows.append(FleetWindowReport(
+                window=w, theta=theta_trace[-1], stats=fleet_w,
+                arrivals=arrivals_w, door_shed=door_w, outaged=outaged,
+                spilled=spilled))
+
+        if cfg.drain:
+            for k in sorted(alive):
+                sessions[k].drain_backlog(cfg.windows - 1)
+
+        # ------------------------------------------------------- aggregate
+        reps = {k: sessions[k].report() for k in self.replicas}
+        fleet = _aggregate(
+            [r.stats for r in reps.values()], door_shed=door_shed_total,
+            latencies=[lat for k in self.replicas
+                       for lat in sessions[k].latencies])
+        served = fleet.served
+        hits = sum(sessions[k].hits for k in self.replicas)
+        admitted = sum(sessions[k].admitted for k in self.replicas)
+        acc = (sum(r.accuracy * r.served for r in reps.values())
+               / max(served, 1))
+        return FleetResult(
+            stats=fleet, windows=fwindows, replicas=reps, served=served,
+            shed=fleet.shed, door_shed=door_shed_total,
+            arrivals=arrivals_total,
+            hit_ratio=hits / max(admitted, 1),
+            per_replica_hit_ratio={k: r.hit_ratio for k, r in reps.items()},
+            accuracy=acc,
+            throughput=served / max(wall_ticks, 1),
+            theta_trace=theta_trace)
+
+
+def _aggregate(stats: list[SLOStats], *, door_shed: int,
+               latencies: list[float]) -> SLOStats:
+    """Fleet-wide SLOStats: counts sum across replicas (door sheds count as
+    shed — a request turned away at the gateway missed its SLO as surely as
+    one shed at a replica), percentiles pool the raw latencies."""
+    served = sum(s.served for s in stats)
+    shed = sum(s.shed for s in stats) + door_shed
+    missed = sum(s.missed for s in stats)
+    total = served + shed
+    if total == 0:
+        return SLOStats(served=0, shed=0, missed=0,
+                        attainment=1.0, p50=0.0, p95=0.0)
+    lat = np.asarray(latencies, float)
+    return SLOStats(
+        served=served, shed=shed, missed=missed,
+        attainment=(served - missed) / total,
+        p50=float(np.percentile(lat, 50)) if lat.size else 0.0,
+        p95=float(np.percentile(lat, 95)) if lat.size else 0.0)

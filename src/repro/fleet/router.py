@@ -1,0 +1,272 @@
+"""Cache-aware request routing for the fleet gateway.
+
+The gateway's routing bet (after Qin et al.'s in-network collaborative
+caching, PAPERS.md): steer each request to the replica whose ACA table is
+already warm for its class.  Three policies, one protocol —
+
+* :class:`AffinityRouter` — consistent-hash routing keyed on the client's
+  *predicted* class (EWMA per-client class profile).  All traffic a client
+  sends while its hot set stays put lands on one replica, so that replica's
+  observed recency τ concentrates and its between-window ACA cut deepens
+  exactly where the traffic is — per-replica hit ratio beats spreading.
+* :class:`HashRouter` — consistent-hash on the client id alone (session
+  stickiness without the class profile); the ablation between affinity and
+  round-robin.
+* :class:`RoundRobinRouter` — the spreading baseline: every replica sees an
+  unbiased sample of every client's classes, so every table dilutes.
+
+All three honor replica liveness: a request is never dispatched to a
+replica marked outaged (``set_alive(k, False)``); on the hash policies the
+dead replica's arc spills to its ring successors — the classic consistent-
+hashing property that only ~K/N keys move — and returns on recovery.
+
+Hashing is :func:`stable_hash` (blake2b), NOT Python's ``hash()``: the
+builtin is salted per process (PYTHONHASHSEED), and a router whose
+placement changes across processes would thrash every replica's cache on
+every gateway restart.  Determinism across processes/seeds is a property
+test (tests/test_router_properties.py).
+"""
+
+from __future__ import annotations
+
+import bisect
+import hashlib
+
+import numpy as np
+
+__all__ = ["stable_hash", "ConsistentHashRing", "AffinityRouter",
+           "HashRouter", "RoundRobinRouter", "make_router", "ROUTERS"]
+
+
+def stable_hash(key: str) -> int:
+    """64-bit point for ``key``, identical across processes and platforms."""
+    digest = hashlib.blake2b(key.encode("utf-8"), digest_size=8).digest()
+    return int.from_bytes(digest, "big")
+
+
+class ConsistentHashRing:
+    """Consistent hashing with virtual nodes and an aliveness walk.
+
+    Each replica owns ``vnodes`` points on a 2^64 ring; a key belongs to
+    the first point clockwise from its hash.  Placement is *monotone*:
+    adding a replica only moves keys onto the new replica, removing one
+    only moves the removed replica's keys — in expectation K/N of the
+    keyspace per membership change, never a full reshuffle.
+
+    Liveness is a separate overlay: :meth:`route` walks clockwise past
+    points of dead replicas, so an outage spills the dead arc to its ring
+    successors while every other key stays put, and recovery restores the
+    original owner without any remapping of the survivors' keys.
+    """
+
+    def __init__(self, replicas=(), *, vnodes: int = 64):
+        if vnodes < 1:
+            raise ValueError(f"vnodes must be >= 1, got {vnodes}")
+        self.vnodes = int(vnodes)
+        self._points: list[tuple[int, int]] = []   # (point, replica), sorted
+        self._members: set[int] = set()
+        self._dead: set[int] = set()
+        for r in replicas:
+            self.add(r)
+
+    # ------------------------------------------------------------ membership
+    @property
+    def members(self) -> set[int]:
+        return set(self._members)
+
+    @property
+    def alive(self) -> set[int]:
+        return self._members - self._dead
+
+    def add(self, replica: int) -> None:
+        """Join: ``replica`` takes its ``vnodes`` arcs (alive)."""
+        replica = int(replica)
+        if replica in self._members:
+            raise ValueError(f"replica {replica} already on the ring")
+        for v in range(self.vnodes):
+            point = stable_hash(f"replica:{replica}:vnode:{v}")
+            bisect.insort(self._points, (point, replica))
+        self._members.add(replica)
+        self._dead.discard(replica)
+
+    def remove(self, replica: int) -> None:
+        """Permanent leave: the replica's arcs fall to their successors."""
+        replica = int(replica)
+        if replica not in self._members:
+            raise ValueError(f"replica {replica} not on the ring")
+        self._points = [(p, r) for p, r in self._points if r != replica]
+        self._members.discard(replica)
+        self._dead.discard(replica)
+
+    def set_alive(self, replica: int, alive: bool) -> None:
+        """Outage overlay: a dead replica keeps its arcs (it will return)
+        but receives no traffic until revived."""
+        if replica not in self._members:
+            raise ValueError(f"replica {replica} not on the ring")
+        (self._dead.discard if alive else self._dead.add)(replica)
+
+    # --------------------------------------------------------------- lookup
+    def owner(self, key: str) -> int:
+        """The key's home replica, ignoring liveness (placement only)."""
+        if not self._points:
+            raise RuntimeError("empty ring")
+        i = bisect.bisect_right(self._points, (stable_hash(key), 2**64))
+        return self._points[i % len(self._points)][1]
+
+    def walk(self, key: str):
+        """Alive replicas in ring order from the key's point, each once —
+        the spill order: first yield is the key's alive owner, later yields
+        are the successors a bounded-load dispatch overflows to."""
+        if not self.alive:
+            raise RuntimeError("no alive replicas on the ring")
+        n = len(self._points)
+        i = bisect.bisect_right(self._points, (stable_hash(key), 2**64))
+        seen: set[int] = set()
+        for step in range(n):
+            r = self._points[(i + step) % n][1]
+            if r in self._dead or r in seen:
+                continue
+            seen.add(r)
+            yield r
+
+    def route(self, key: str) -> int:
+        """The key's first *alive* replica clockwise from its hash."""
+        return next(self.walk(key))
+
+
+class _RingRouter:
+    """Shared plumbing for the ring-backed policies."""
+
+    def __init__(self, replicas, *, vnodes: int = 64):
+        self.ring = ConsistentHashRing(replicas, vnodes=vnodes)
+
+    @property
+    def alive(self) -> set[int]:
+        return self.ring.alive
+
+    def set_alive(self, replica: int, alive: bool) -> None:
+        self.ring.set_alive(replica, alive)
+
+
+class HashRouter(_RingRouter):
+    """Session stickiness: consistent-hash on the client id."""
+
+    name = "hash"
+
+    def candidates(self, client: int, label: int):
+        """Preference order: the client's arc owner, then ring successors
+        (the gateway's bounded-load dispatch takes the first under-limit
+        yield)."""
+        return self.ring.walk(f"client:{client}")
+
+    def route(self, client: int, label: int) -> int:
+        return next(self.candidates(client, label))
+
+
+class AffinityRouter(_RingRouter):
+    """Class-affinity routing on an EWMA per-client class profile.
+
+    The gateway cannot see a request's class before classification runs on
+    a replica — that is the replica's job — so routing keys on the
+    *predicted* class: the argmax of the client's exponentially-weighted
+    class history (``profile = decay * profile; profile[label] += 1 -
+    decay`` at each dispatch).  A cold client (no history) falls back to
+    client-id hashing until its first dispatch lands.
+
+    The profile is updated with the true label *after* the routing decision
+    (route on what was known, learn from what arrived), so a hot-set drift
+    re-homes the client to the new class's replica within a few requests —
+    the EWMA half-life, ~``1/(1-decay)`` dispatches.
+    """
+
+    name = "affinity"
+
+    def __init__(self, replicas, num_classes: int, *,
+                 decay: float = 0.8, vnodes: int = 64):
+        super().__init__(replicas, vnodes=vnodes)
+        if not 0.0 <= decay < 1.0:
+            raise ValueError(f"decay must be in [0, 1), got {decay}")
+        self.num_classes = int(num_classes)
+        self.decay = float(decay)
+        self._profiles: dict[int, np.ndarray] = {}
+
+    def predicted_class(self, client: int) -> int | None:
+        """The class this client is most likely to ask for next, or None
+        for a cold client."""
+        prof = self._profiles.get(client)
+        if prof is None:
+            return None
+        return int(prof.argmax())
+
+    def candidates(self, client: int, label: int):
+        """Preference order: the predicted class's arc owner, then ring
+        successors.  The profile learns the true label regardless of which
+        candidate the gateway ends up picking."""
+        c = self.predicted_class(client)
+        key = f"client:{client}" if c is None else f"class:{c}"
+        self.observe(client, label)
+        return self.ring.walk(key)
+
+    def route(self, client: int, label: int) -> int:
+        return next(self.candidates(client, label))
+
+    def observe(self, client: int, label: int) -> None:
+        prof = self._profiles.get(client)
+        if prof is None:
+            prof = self._profiles[client] = np.zeros(self.num_classes)
+        prof *= self.decay
+        prof[int(label)] += 1.0 - self.decay
+
+
+class RoundRobinRouter:
+    """The spreading baseline: next alive replica in cyclic order."""
+
+    name = "round_robin"
+
+    def __init__(self, replicas):
+        self._replicas = [int(r) for r in replicas]
+        if len(set(self._replicas)) != len(self._replicas):
+            raise ValueError("duplicate replica ids")
+        self._dead: set[int] = set()
+        self._i = 0
+
+    @property
+    def alive(self) -> set[int]:
+        return set(self._replicas) - self._dead
+
+    def set_alive(self, replica: int, alive: bool) -> None:
+        if replica not in self._replicas:
+            raise ValueError(f"unknown replica {replica}")
+        (self._dead.discard if alive else self._dead.add)(replica)
+
+    def candidates(self, client: int, label: int):
+        """The rotation, starting where the pointer is (which advances one
+        step per dispatch, dead or not — the classic modulo cycle)."""
+        if not self.alive:
+            raise RuntimeError("no alive replicas")
+        n = len(self._replicas)
+        start = self._i
+        self._i += 1
+        return iter([r for r in (self._replicas[(start + s) % n]
+                                 for s in range(n))
+                     if r not in self._dead])
+
+    def route(self, client: int, label: int) -> int:
+        return next(self.candidates(client, label))
+
+
+ROUTERS = {"affinity": AffinityRouter, "hash": HashRouter,
+           "round_robin": RoundRobinRouter}
+
+
+def make_router(name: str, replicas, num_classes: int, *,
+                decay: float = 0.8, vnodes: int = 64):
+    """Router factory for the gateway config (``ROUTERS`` keys)."""
+    if name == "affinity":
+        return AffinityRouter(replicas, num_classes,
+                              decay=decay, vnodes=vnodes)
+    if name == "hash":
+        return HashRouter(replicas, vnodes=vnodes)
+    if name == "round_robin":
+        return RoundRobinRouter(replicas)
+    raise ValueError(f"unknown router {name!r}; pick from {sorted(ROUTERS)}")

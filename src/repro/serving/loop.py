@@ -49,6 +49,7 @@ vectors), ``benchmarks/table2_slo.py`` (the load sweep behind
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from functools import partial
 from typing import Callable, NamedTuple
 
@@ -173,11 +174,12 @@ class ServingSession:
     """
 
     def __init__(self, cluster, cfg: ServeLoopConfig,
-                 workload: RequestStream, tap_fn: ServeTapFn, *,
+                 workload: RequestStream | None, tap_fn: ServeTapFn, *,
                  use_cache: bool = True, client: int = 0,
                  faults=None, retry=None, hardened: bool = True,
                  stale_limit: int = 4):
-        if workload.num_classes != cluster.sim.cache.num_classes:
+        if (workload is not None
+                and workload.num_classes != cluster.sim.cache.num_classes):
             raise ValueError(
                 f"workload has {workload.num_classes} classes, cluster cache "
                 f"has {cluster.sim.cache.num_classes}")
@@ -314,108 +316,269 @@ class ServingSession:
         pred = np.where(hit, np.asarray(look.pred)[:n], model_pred)
         return blocks.astype(np.int64), hit, pred.astype(np.int32)
 
-    # ------------------------------------------------------------------ run
-    def run(self) -> SessionResult:
+    # ----------------------------------------------- the replica-facing seam
+    #
+    # A gateway tier (repro.fleet.gateway.FleetGateway) drives N replica
+    # sessions in lockstep through these methods instead of run():
+    # start() → per window: begin_window / submit / tick / end_window →
+    # report().  run() itself is written on the same seam, so a 1-replica
+    # fleet that replays the same call sequence is bit-identical to a bare
+    # session (the degenerate-case parity test in tests/test_fleet.py).
+
+    def start(self) -> "ServingSession":
+        """Arm the session's run state (scheduler, Θ controller, window-0
+        table, admission estimate).  Idempotent per run; must precede any
+        submit/tick call."""
         cfg = self.cfg
-        sched = EDFScheduler(max_slots=cfg.batching.max_slots)
-        ctl = ThetaController(
+        self._sched = EDFScheduler(max_slots=cfg.batching.max_slots)
+        self._ctl = ThetaController(
             theta=float(self.cluster.sim.cache.theta), target=cfg.target,
             margin=cfg.margin, step=cfg.theta_step,
             lo=cfg.theta_lo, hi=cfg.theta_hi)
-        table, degraded_now = self._window_table(0)
-        est_f = self._estimated_blocks()
-        est = int(np.ceil(est_f))
-        labels_by_rid: dict[int, int] = {}
-        hit_by_rid: dict[int, bool] = {}
-        pred_by_rid: dict[int, int] = {}
-        exit_blocks: list[int] = []
-        reports: list[WindowReport] = []
-        theta_trace: list[float] = []
-        correct = served_labeled = 0
-        rid = 0
-        admitted_total = hits_total = arrivals_total = 0
+        self._table, self._degraded_now = self._window_table(0)
+        self._est_f = self._estimated_blocks()
+        self._est = int(np.ceil(self._est_f))
+        self._labels_by_rid: dict[int, int] = {}
+        self._pred_by_rid: dict[int, int] = {}
+        self._exit_blocks: list[int] = []
+        self._reports: list[WindowReport] = []
+        self._theta_trace: list[float] = []
+        self._correct = self._served_labeled = 0
+        self._next_rid = 0
+        self._admitted_total = self._hits_total = self._arrivals_total = 0
+        self._win0 = (0, 0, 0, 0)        # window-start counter snapshot
+        return self
 
-        def tick_body(window: int) -> None:
-            nonlocal admitted_total, hits_total, correct, served_labeled
-            placed = sched.admit()
-            if placed:
-                labs = np.asarray(
-                    [labels_by_rid[r.rid] for _, r in placed], np.int32)
-                blocks, hit, pred = self._classify(window, labs, table)
-                for (slot, req), b, h, p in zip(placed, blocks, hit, pred):
-                    sched.resolve(slot, int(b))
-                    hit_by_rid[req.rid] = bool(h)
-                    pred_by_rid[req.rid] = int(p)
-                    exit_blocks.append(int(b))
-                self._observe(labs)
-                admitted_total += len(placed)
-                hits_total += int(hit.sum())
-            for req, _lat, _missed in sched.advance():
-                lab = labels_by_rid[req.rid]
-                served_labeled += 1
-                correct += int(pred_by_rid[req.rid] == lab)
+    @property
+    def estimate(self) -> float:
+        """The current (EWMA-tracked) expected block cost at admission."""
+        return self._est_f
 
-        for w in range(cfg.windows):
-            theta_trace.append(float(self.cluster.sim.cache.theta))
-            counts, labels = self.workload.window(w, cfg.window_ticks)
-            arrivals_total += int(counts.sum())
-            offsets = np.concatenate([[0], np.cumsum(counts)])
-            admitted_w0, hits_w0 = admitted_total, hits_total
-            blocks_w0 = len(exit_blocks)
-            sched.begin_window()
-            for t in range(cfg.window_ticks):
-                for lab in labels[offsets[t]:offsets[t + 1]]:
-                    labels_by_rid[rid] = int(lab)
-                    sched.submit(Request(
-                        rid=rid, arrival=sched.tick, blocks_needed=est,
-                        deadline=sched.tick + cfg.slo_ticks))
-                    rid += 1
-                tick_body(w)
-            stats = sched.window_stats()
-            realloc = False
+    def set_estimate(self, est_f: float) -> None:
+        """Override the admission cost estimate — the fleet gateway lifts
+        the EWMA to fleet level (one estimate from every replica's resolved
+        blocks) and pushes it back down here each window."""
+        self._est_f = float(est_f)
+        self._est = int(np.ceil(self._est_f))
+
+    def submit(self, label: int, *, arrival: float | None = None,
+               deadline: float | None = None) -> Request:
+        """Enqueue one request.  ``arrival``/``deadline`` default to the
+        session clock and the configured SLO; a gateway re-dispatching a
+        spilled request passes the originals so the deadline survives the
+        hop.  Returns the stamped :class:`Request`."""
+        sched = self._sched
+        arrival = sched.tick if arrival is None else float(arrival)
+        if deadline is None:
+            deadline = arrival + self.cfg.slo_ticks
+        req = Request(rid=self._next_rid, arrival=arrival,
+                      blocks_needed=self._est, deadline=float(deadline))
+        self._labels_by_rid[req.rid] = int(label)
+        self._next_rid += 1
+        self._arrivals_total += 1
+        sched.submit(req)
+        return req
+
+    def tick(self, window: int) -> list[tuple[Request, float, bool]]:
+        """One block-tick: EDF admission → batched live lookup resolves the
+        admitted requests → advance.  Returns the retirements
+        ``(request, latency, missed)``.  Safe on an idle (or evacuated)
+        session — the clock still advances, which is what keeps a fleet's
+        replicas tick-synchronised through an outage."""
+        sched = self._sched
+        placed = sched.admit()
+        if placed:
+            labs = np.asarray(
+                [self._labels_by_rid[r.rid] for _, r in placed], np.int32)
+            blocks, hit, pred = self._classify(window, labs, self._table)
+            for (slot, req), b, h, p in zip(placed, blocks, hit, pred):
+                sched.resolve(slot, int(b))
+                self._pred_by_rid[req.rid] = int(p)
+                self._exit_blocks.append(int(b))
+            self._observe(labs)
+            self._admitted_total += len(placed)
+            self._hits_total += int(hit.sum())
+        retired = sched.advance()
+        for req, _lat, _missed in retired:
+            lab = self._labels_by_rid[req.rid]
+            self._served_labeled += 1
+            self._correct += int(self._pred_by_rid[req.rid] == lab)
+        return retired
+
+    def begin_window(self, window: int) -> None:
+        """Open control window ``window``: record the Θ in force and mark
+        the scheduler's window-stat baseline."""
+        self._theta_trace.append(float(self.cluster.sim.cache.theta))
+        self._win0 = (self._admitted_total, self._hits_total,
+                      len(self._exit_blocks), self._arrivals_total)
+        self._sched.begin_window()
+
+    def window_blocks(self) -> list[int]:
+        """The block counts this window's lookups actually resolved — the
+        fleet gateway pools these across replicas for the lifted estimate."""
+        return self._exit_blocks[self._win0[2]:]
+
+    def window_stats(self) -> SLOStats:
+        return self._sched.window_stats()
+
+    def refresh_estimate(self) -> None:
+        """EWMA the admission estimate toward this window's resolved block
+        counts (tracks the Θ controller)."""
+        blocks = self.window_blocks()
+        if blocks:
+            self._est_f = 0.5 * self._est_f + 0.5 * float(np.mean(blocks))
+            self._est = int(np.ceil(self._est_f))
+
+    def end_window(self, window: int, *, control: bool = True,
+                   reallocate: bool | None = None) -> WindowReport:
+        """Close window ``window``: stats → (optionally) estimate refresh +
+        Θ control → table re-allocation for the next window → report.
+
+        ``control=False`` skips the session's own estimate/Θ updates — the
+        gateway owns both at fleet level and pushes its verdicts through
+        :meth:`set_estimate` / ``cluster.set_theta`` before calling this.
+        ``reallocate`` overrides ``cfg.reallocate`` for this boundary (an
+        outaged replica cannot download a fresh cut)."""
+        cfg = self.cfg
+        stats = self._sched.window_stats()
+        realloc = False
+        if control:
             # refresh the admission estimate from what this window's
             # lookups actually resolved (tracks the Θ controller)
-            window_blocks = exit_blocks[blocks_w0:]
-            if window_blocks:
-                est_f = 0.5 * est_f + 0.5 * float(np.mean(window_blocks))
-                est = int(np.ceil(est_f))
+            self.refresh_estimate()
             # close the loop: attainment -> Θ, observed recency -> ACA.
             # A degraded window's dip is a sync fault, not a Θ signal —
             # the hardened session holds AIMD instead of chasing it.
             if cfg.adapt_theta and stats.served + stats.shed > 0:
-                if degraded_now and self.hardened and self._faults is not None:
-                    ctl.hold()
+                if (self._degraded_now and self.hardened
+                        and self._faults is not None):
+                    self._ctl.hold()
                 else:
-                    self.cluster.set_theta(ctl.update(stats.attainment))
-            was_degraded = degraded_now
-            if cfg.reallocate and self.use_cache:
-                table, degraded_now = self._window_table(w + 1)
-                realloc = not degraded_now
-            reports.append(WindowReport(
-                window=w, theta=theta_trace[-1], stats=stats,
-                arrivals=int(counts.sum()), hits=hits_total - hits_w0,
-                admitted=admitted_total - admitted_w0, reallocated=realloc,
-                degraded=was_degraded))
+                    self.cluster.set_theta(self._ctl.update(stats.attainment))
+        was_degraded = self._degraded_now
+        do_realloc = cfg.reallocate if reallocate is None else reallocate
+        if do_realloc and self.use_cache:
+            self._table, self._degraded_now = self._window_table(window + 1)
+            realloc = not self._degraded_now
+        report = WindowReport(
+            window=window, theta=self._theta_trace[-1], stats=stats,
+            arrivals=self._arrivals_total - self._win0[3],
+            hits=self._hits_total - self._win0[1],
+            admitted=self._admitted_total - self._win0[0],
+            reallocated=realloc, degraded=was_degraded)
+        self._reports.append(report)
+        return report
 
-        if cfg.drain:
-            t = 0
-            last_w = cfg.windows - 1
-            while ((sched.queue or any(s is not None for s in sched.slots))
-                   and t < cfg.drain_max_ticks):
-                tick_body(last_w)
-                t += 1
+    def resync(self, window: int) -> None:
+        """Re-cut the serving table mid-horizon — a recovered fleet replica
+        returning from an outage pulls a fresh allocation for ``window``."""
+        if self.use_cache:
+            self._table, self._degraded_now = self._window_table(window)
 
-        overhead = (1 + cfg.batching.lookup_tick_fraction
+    def reset_recency(self) -> None:
+        """Forget the observed request recency — a replica whose outage
+        outlasted the churn stale limit rejoins cold (the fleet analogue of
+        ``rejoin_client(fresh=True)``)."""
+        self._last_seen = np.full(len(self._last_seen), -1, np.int64)
+        self._seen = 0
+
+    def evacuate(self) -> list[tuple[Request, int]]:
+        """Pull every queued and in-flight request off this session — the
+        outage spill: the gateway re-dispatches them to hash-ring neighbor
+        replicas (partial block progress on in-flight slots is lost, which
+        is exactly what a replica crash costs).  Returns ``(request,
+        label)`` in deadline (EDF) order; the session is left idle but its
+        clock and counters intact."""
+        sched = self._sched
+        out = []
+        while sched.queue:
+            _, _, req = heapq.heappop(sched.queue)
+            out.append((req, self._labels_by_rid[req.rid]))
+        for i, s in enumerate(sched.slots):
+            if s is not None:
+                req, _remaining, _start = s
+                out.append((req, self._labels_by_rid[req.rid]))
+                sched.slots[i] = None
+        out.sort(key=lambda rl: (rl[0].deadline, rl[0].rid))
+        return out
+
+    def backlog(self) -> int:
+        """Queued + in-flight requests — the gateway's load signal."""
+        sched = self._sched
+        return len(sched.queue) + sum(s is not None for s in sched.slots)
+
+    @property
+    def latencies(self) -> list[float]:
+        """Per-request latencies retired so far (block-ticks) — the fleet
+        aggregates these across replicas for fleet-level p50/p95."""
+        return list(self._sched.latencies)
+
+    def window_latencies(self) -> list[float]:
+        """Latencies retired since :meth:`begin_window` (the slice behind
+        :meth:`window_stats`'s percentiles)."""
+        return list(self._sched.latencies[self._sched._mark[3]:])
+
+    @property
+    def hits(self) -> int:
+        """Lookup hits so far (numerator of :attr:`SessionResult.hit_ratio`)."""
+        return self._hits_total
+
+    @property
+    def admitted(self) -> int:
+        """Requests admitted to a batch slot so far."""
+        return self._admitted_total
+
+    def drain_backlog(self, window: int | None = None) -> None:
+        """Tick until the queue and slots are empty (bounded by
+        ``cfg.drain_max_ticks``)."""
+        cfg = self.cfg
+        if window is None:
+            window = cfg.windows - 1
+        sched = self._sched
+        t = 0
+        while ((sched.queue or any(s is not None for s in sched.slots))
+               and t < cfg.drain_max_ticks):
+            self.tick(window)
+            t += 1
+
+    def report(self) -> SessionResult:
+        """The session's outcome so far — the replica-facing counterpart of
+        :meth:`run`'s return value."""
+        sched = self._sched
+        overhead = (1 + self.cfg.batching.lookup_tick_fraction
                     if self.use_cache else 1.0)
         ticks = sched.busy_ticks * overhead
         return SessionResult(
-            stats=sched.stats(), windows=reports, ticks=ticks,
-            served=sched.served, shed=sched.shed, arrivals=arrivals_total,
-            hit_ratio=hits_total / max(admitted_total, 1),
-            accuracy=correct / max(served_labeled, 1),
+            stats=sched.stats(), windows=list(self._reports), ticks=ticks,
+            served=sched.served, shed=sched.shed,
+            arrivals=self._arrivals_total,
+            hit_ratio=self._hits_total / max(self._admitted_total, 1),
+            accuracy=self._correct / max(self._served_labeled, 1),
             throughput=sched.served / max(ticks, 1e-9),
-            theta_trace=theta_trace,
-            exit_blocks=np.asarray(exit_blocks, np.int64))
+            theta_trace=list(self._theta_trace),
+            exit_blocks=np.asarray(self._exit_blocks, np.int64))
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> SessionResult:
+        """The classic closed loop, expressed on the seam."""
+        if self.workload is None:
+            raise RuntimeError("run() needs a workload; gateway-managed "
+                               "sessions are driven through the seam "
+                               "(start/submit/tick/end_window)")
+        cfg = self.cfg
+        self.start()
+        for w in range(cfg.windows):
+            self.begin_window(w)
+            counts, labels = self.workload.window(w, cfg.window_ticks)
+            offsets = np.concatenate([[0], np.cumsum(counts)])
+            for t in range(cfg.window_ticks):
+                for lab in labels[offsets[t]:offsets[t + 1]]:
+                    self.submit(int(lab))
+                self.tick(w)
+            self.end_window(w)
+        if cfg.drain:
+            self.drain_backlog(cfg.windows - 1)
+        return self.report()
 
 
 def throughput_gain(cached: SessionResult, nocache: SessionResult) -> float:

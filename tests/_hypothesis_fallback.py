@@ -1,89 +1,436 @@
-"""Minimal stand-in for ``hypothesis`` when the package is not installed.
+"""Offline stand-in for ``hypothesis`` that *runs* property tests.
 
-The tier-1 suite decorates a handful of property tests with
-``@given(...)``/``@settings(...)`` and builds strategies at import time
-(``st.floats``, ``hnp.arrays``, ...).  Without this fallback the mere
-*import* of hypothesis aborts collection of six test modules.  The stub
-accepts any strategy construction and turns each ``@given`` test into a
-``pytest.skip`` at call time, so the rest of the suite runs unaffected.
+The tier-1 suite decorates its property tests with ``@given(...)`` /
+``@settings(...)`` and builds strategies at import time (``st.floats``,
+``hnp.arrays``, ...).  With the real package installed (the CI path —
+``hypothesis`` is in ``requirements.txt``) none of this module is used.
+Offline, this fallback is installed into ``sys.modules`` by ``conftest.py``
+and provides a miniature property-testing engine instead of the old
+skip-at-call-time stub: each ``@given`` test executes ``max_examples``
+deterministically seeded examples (boundary values first, then random
+draws), so the properties are genuinely exercised in every environment —
+no network, no new dependency, zero hypothesis-related skips.
 
-Installed into ``sys.modules`` by ``conftest.py`` only when the real
-package is missing; with hypothesis installed the property tests run
-normally.
+Differences from real hypothesis, by design: no shrinking (the falsifying
+example is reported verbatim), no example database, and only the strategy
+surface the suite actually uses.  The per-test seed derives from the test's
+qualified name, so runs replay bit-for-bit and adding a test never shifts
+another test's examples.
 """
 
 from __future__ import annotations
 
+import functools
 import sys
 import types
+import zlib
 
-import pytest
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 25
 
 
-class _Strategy:
-    """Opaque placeholder accepted anywhere a real strategy would be."""
+class Unsatisfied(Exception):
+    """Raised by ``assume(False)`` — the runner discards the example."""
 
-    def __init__(self, name="stub"):
-        self._name = name
+
+def assume(condition) -> bool:
+    if not condition:
+        raise Unsatisfied
+    return True
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+
+class Strategy:
+    """One value generator.  ``boundary()`` lists the edge cases tried
+    before random sampling; ``draw(rng)`` produces one random example."""
+
+    def boundary(self) -> list:
+        return []
+
+    def draw(self, rng: np.random.Generator):
+        raise NotImplementedError
+
+    # chaining used by a few suites; cheap to support
+    def map(self, f):
+        return _Mapped(self, f)
+
+    def filter(self, pred):
+        return _Filtered(self, pred)
 
     def __repr__(self):
-        return f"<hypothesis-fallback strategy {self._name}>"
-
-    def map(self, *_a, **_k):
-        return self
-
-    def filter(self, *_a, **_k):
-        return self
-
-    def flatmap(self, *_a, **_k):
-        return self
+        return f"<fallback strategy {type(self).__name__}>"
 
 
-def _make_strategy_factory(name):
-    def factory(*_args, **_kwargs):
-        return _Strategy(name)
-    factory.__name__ = name
-    return factory
+class _Mapped(Strategy):
+    def __init__(self, inner, f):
+        self.inner, self.f = inner, f
+
+    def boundary(self):
+        return [self.f(v) for v in self.inner.boundary()]
+
+    def draw(self, rng):
+        return self.f(self.inner.draw(rng))
 
 
-def given(*_args, **_kwargs):
+class _Filtered(Strategy):
+    def __init__(self, inner, pred):
+        self.inner, self.pred = inner, pred
+
+    def boundary(self):
+        return [v for v in self.inner.boundary() if self.pred(v)]
+
+    def draw(self, rng):
+        for _ in range(100):
+            v = self.inner.draw(rng)
+            if self.pred(v):
+                return v
+        raise Unsatisfied
+
+
+class _Integers(Strategy):
+    def __init__(self, min_value=None, max_value=None):
+        self.lo = -(2 ** 31) if min_value is None else int(min_value)
+        self.hi = 2 ** 31 - 1 if max_value is None else int(max_value)
+        if self.lo > self.hi:
+            raise ValueError(f"integers({self.lo}, {self.hi}): empty range")
+
+    def boundary(self):
+        edge = {self.lo, self.hi}
+        for v in (0, 1, self.lo + 1, self.hi - 1):
+            if self.lo <= v <= self.hi:
+                edge.add(v)
+        return sorted(edge)
+
+    def draw(self, rng):
+        return int(rng.integers(self.lo, self.hi, endpoint=True))
+
+
+class _Floats(Strategy):
+    def __init__(self, min_value=None, max_value=None, *, width=64,
+                 allow_nan=None, allow_infinity=None):
+        self.lo = -1e9 if min_value is None else float(min_value)
+        self.hi = 1e9 if max_value is None else float(max_value)
+        self.width = width
+
+    def _cast(self, v: float) -> float:
+        if self.width == 32:
+            v = float(np.float32(v))
+            # float32 rounding must not escape a closed [lo, hi] range
+            v = min(max(v, self.lo), self.hi)
+        return float(v)
+
+    def boundary(self):
+        mid = 0.5 * (self.lo + self.hi)
+        return [self._cast(v) for v in
+                dict.fromkeys((self.lo, self.hi, mid))]
+
+    def draw(self, rng):
+        return self._cast(self.lo + (self.hi - self.lo) * rng.random())
+
+
+class _Booleans(Strategy):
+    def boundary(self):
+        return [False, True]
+
+    def draw(self, rng):
+        return bool(rng.integers(0, 2))
+
+
+class _Just(Strategy):
+    def __init__(self, value):
+        self.value = value
+
+    def boundary(self):
+        return [self.value]
+
+    def draw(self, rng):
+        return self.value
+
+
+class _SampledFrom(Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from() needs a non-empty collection")
+
+    def boundary(self):
+        return [self.elements[0], self.elements[-1]]
+
+    def draw(self, rng):
+        return self.elements[int(rng.integers(len(self.elements)))]
+
+
+class _OneOf(Strategy):
+    def __init__(self, strategies):
+        self.strategies = [to_strategy(s) for s in strategies]
+
+    def boundary(self):
+        return [v for s in self.strategies for v in s.boundary()[:1]]
+
+    def draw(self, rng):
+        s = self.strategies[int(rng.integers(len(self.strategies)))]
+        return s.draw(rng)
+
+
+class _Lists(Strategy):
+    def __init__(self, elements, *, min_size=0, max_size=None, unique=False):
+        self.elements = to_strategy(elements)
+        self.min_size = int(min_size)
+        self.max_size = int(max_size) if max_size is not None \
+            else self.min_size + 10
+        self.unique = unique
+
+    def boundary(self):
+        out = []
+        for size in dict.fromkeys((self.min_size, self.max_size)):
+            rng = np.random.default_rng(size)
+            try:
+                out.append(self._of_size(size, rng))
+            except Unsatisfied:
+                pass
+        return out
+
+    def _of_size(self, size, rng):
+        vals = []
+        attempts = 0
+        while len(vals) < size:
+            v = self.elements.draw(rng)
+            if self.unique and v in vals:
+                attempts += 1
+                if attempts > 100:
+                    raise Unsatisfied
+                continue
+            vals.append(v)
+        return vals
+
+    def draw(self, rng):
+        size = int(rng.integers(self.min_size, self.max_size, endpoint=True))
+        return self._of_size(size, rng)
+
+
+class _Tuples(Strategy):
+    def __init__(self, *strategies):
+        self.strategies = [to_strategy(s) for s in strategies]
+
+    def boundary(self):
+        bs = [s.boundary() for s in self.strategies]
+        if all(bs):
+            return [tuple(b[0] for b in bs)]
+        return []
+
+    def draw(self, rng):
+        return tuple(s.draw(rng) for s in self.strategies)
+
+
+class _Arrays(Strategy):
+    """``hypothesis.extra.numpy.arrays``: dtype × (shape | shape strategy)
+    × elements strategy."""
+
+    def __init__(self, dtype, shape, *, elements=None, fill=None,
+                 unique=False):
+        self.dtype = np.dtype(dtype)
+        self.shape = shape
+        self.elements = (to_strategy(elements) if elements is not None
+                         else _Floats(0.0, 1.0))
+
+    def _shape(self, rng):
+        shape = self.shape
+        if isinstance(shape, Strategy):
+            shape = shape.draw(rng)
+        if isinstance(shape, (int, np.integer)):
+            shape = (int(shape),)
+        return tuple(int(s) for s in shape)
+
+    def boundary(self):
+        rng = np.random.default_rng(0)
+        out = []
+        for v in self.elements.boundary()[:2]:
+            out.append(np.full(self._shape(rng), v, self.dtype))
+        return out
+
+    def draw(self, rng):
+        shape = self._shape(rng)
+        n = int(np.prod(shape)) if shape else 1
+        flat = np.asarray([self.elements.draw(rng) for _ in range(n)],
+                          self.dtype)
+        return flat.reshape(shape)
+
+
+def to_strategy(obj) -> Strategy:
+    if isinstance(obj, Strategy):
+        return obj
+    return _Just(obj)
+
+
+def _composite(fn):
+    """``st.composite``: the wrapped function receives ``draw``."""
+
+    @functools.wraps(fn)
+    def builder(*args, **kwargs):
+        class _Composite(Strategy):
+            def draw(self, rng):
+                return fn(lambda s: to_strategy(s).draw(rng),
+                          *args, **kwargs)
+        return _Composite()
+    return builder
+
+
+# ---------------------------------------------------------------------------
+# @given / @settings — the runner
+# ---------------------------------------------------------------------------
+
+
+def settings(*_args, **kwargs):
+    """Record the knobs the suite uses (``max_examples``); ignore the rest
+    (``deadline`` etc. — the fallback imposes no deadline)."""
+
     def decorate(fn):
-        def skipper(*a, **k):
-            pytest.skip("hypothesis not installed — property test skipped")
-        skipper.__name__ = fn.__name__
-        skipper.__doc__ = fn.__doc__
-        return skipper
+        fn._fallback_settings = dict(kwargs)
+        return fn
     return decorate
 
 
-def settings(*_args, **_kwargs):
+def given(*strategies, **kw_strategies):
+    strategies = [to_strategy(s) for s in strategies]
+    kw_strategies = {k: to_strategy(s) for k, s in kw_strategies.items()}
+
+    def decorate(fn):
+        def runner(*outer_args, **outer_kwargs):
+            conf = (getattr(fn, "_fallback_settings", None)
+                    or getattr(runner, "_fallback_settings", None) or {})
+            max_examples = int(conf.get("max_examples",
+                                        _DEFAULT_MAX_EXAMPLES))
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}"
+                              .encode())
+            rng = np.random.default_rng(seed)
+            boundary = _boundary_examples(strategies, kw_strategies)
+            ran = tried = 0
+            while ran < max_examples and tried < 10 * max_examples + 100:
+                tried += 1
+                try:
+                    if boundary:
+                        args, kwargs = boundary.pop(0)
+                    else:
+                        args = [s.draw(rng) for s in strategies]
+                        kwargs = {k: s.draw(rng)
+                                  for k, s in kw_strategies.items()}
+                except Unsatisfied:
+                    continue
+                try:
+                    fn(*outer_args, *args, **outer_kwargs, **kwargs)
+                except Unsatisfied:
+                    continue
+                except Exception as exc:
+                    raise AssertionError(
+                        f"falsifying example (fallback engine, "
+                        f"example {ran + 1}/{max_examples}):\n"
+                        f"  args={args!r}\n  kwargs={kwargs!r}\n"
+                        f"  -> {type(exc).__name__}: {exc}") from exc
+                ran += 1
+        # NOTE: no functools.wraps — copying ``__wrapped__`` would expose the
+        # inner test's parameters to pytest's fixture resolution, which would
+        # then demand fixtures named after the strategy arguments.
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = fn.__qualname__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        runner.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return runner
+    return decorate
+
+
+def _boundary_examples(strategies, kw_strategies):
+    """Zip each positional strategy's boundary values into whole examples
+    (missing entries padded with the strategy's first boundary value or a
+    seeded draw)."""
+    bounds = [s.boundary() for s in strategies]
+    depth = max((len(b) for b in bounds), default=0)
+    rng = np.random.default_rng(0)
+    out = []
+    for i in range(depth):
+        try:
+            args = [b[i % len(b)] if b else s.draw(rng)
+                    for s, b in zip(strategies, bounds)]
+            kwargs = {k: s.draw(rng) for k, s in kw_strategies.items()}
+        except Unsatisfied:
+            continue
+        out.append((args, kwargs))
+    return out
+
+
+def example(*_args, **_kwargs):
     def decorate(fn):
         return fn
     return decorate
 
 
+def note(*_args, **_kwargs):
+    return None
+
+
+# ---------------------------------------------------------------------------
+# module installation
+# ---------------------------------------------------------------------------
+
+
 def install() -> None:
-    """Register stub ``hypothesis`` / ``hypothesis.strategies`` /
+    """Register fallback ``hypothesis`` / ``hypothesis.strategies`` /
     ``hypothesis.extra.numpy`` modules in ``sys.modules``."""
     root = types.ModuleType("hypothesis")
     root.given = given
     root.settings = settings
-    root.assume = lambda *_a, **_k: True
-    root.note = lambda *_a, **_k: None
-    root.example = lambda *_a, **_k: (lambda fn: fn)
+    root.assume = assume
+    root.note = note
+    root.example = example
     root.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    root.__fallback__ = True
 
     st = types.ModuleType("hypothesis.strategies")
-    for name in ("integers", "floats", "booleans", "text", "lists", "tuples",
-                 "sampled_from", "one_of", "just", "none", "composite",
-                 "builds", "dictionaries", "binary", "characters", "sets",
-                 "slices", "data"):
-        setattr(st, name, _make_strategy_factory(name))
+    st.integers = _Integers
+    st.floats = _Floats
+    st.booleans = _Booleans
+    st.just = _Just
+    st.none = lambda: _Just(None)
+    st.sampled_from = _SampledFrom
+    st.one_of = lambda *s: _OneOf(s[0] if len(s) == 1
+                                  and isinstance(s[0], (list, tuple))
+                                  else s)
+    st.lists = _Lists
+    st.tuples = _Tuples
+    st.composite = _composite
+    st.builds = lambda target, *a, **k: _Tuples(*a).map(
+        lambda args: target(*args, **{kk: to_strategy(vv).draw(
+            np.random.default_rng(0)) for kk, vv in k.items()}))
+    st.binary = lambda **_k: _Just(b"")
+
+    def _text(*_a, min_size=0, max_size=None, **_k):
+        def to_s(i):
+            s = (f"s{i}αΔ" * (1 + i % 3))[:max_size]
+            return s + "x" * max(min_size - len(s), 0)
+        return _Integers(0, 2 ** 31 - 1).map(to_s)
+
+    st.text = _text
+    st.characters = lambda **_k: _Just("c")
+    st.sets = lambda elements, **k: _Lists(elements, **{
+        kk: vv for kk, vv in k.items()
+        if kk in ("min_size", "max_size")}).map(set)
+    st.slices = lambda n: _Integers(0, max(int(n) - 1, 0)).map(
+        lambda i: slice(0, i + 1))
+    st.dictionaries = lambda keys, values, **_k: _Just({})
+    st.data = lambda: _Just(None)
 
     extra = types.ModuleType("hypothesis.extra")
     hnp = types.ModuleType("hypothesis.extra.numpy")
-    for name in ("arrays", "array_shapes", "scalar_dtypes", "from_dtype"):
-        setattr(hnp, name, _make_strategy_factory(name))
+    hnp.arrays = _Arrays
+    hnp.array_shapes = lambda **_k: _Just((3,))
+    hnp.scalar_dtypes = lambda: _Just(np.dtype(np.float32))
+    hnp.from_dtype = lambda dtype, **k: _Floats(
+        k.get("min_value"), k.get("max_value"))
 
     root.strategies = st
     extra.numpy = hnp

@@ -13,15 +13,26 @@ import pytest
 REPO = Path(__file__).resolve().parent.parent
 SRC = REPO / "src"
 
-# hypothesis is an optional dependency: several modules build strategies at
-# import time, so without the package collection itself dies.  Install a
-# skip-at-call-time stub before any test module is imported.
+# Persistent XLA compilation cache: the tier-1 suite is compile-dominated on
+# a single CPU core, and the same jitted programs recompile on every run.
+# Setting the env vars here (before any test module imports jax) warms a
+# cache under .pytest_cache on the first run and cuts repeat tier-1 wall
+# clock; run_multidevice subprocesses inherit it via os.environ.
+os.environ.setdefault("JAX_COMPILATION_CACHE_DIR",
+                      str(REPO / ".pytest_cache" / "jax-cache"))
+os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0.5")
+
+# hypothesis is a listed test dependency (requirements.txt) and CI installs
+# it; offline containers without the package fall back to the miniature
+# property-test engine in tests/_hypothesis_fallback.py, which *executes*
+# every @given test on deterministically seeded examples — property tests
+# run in every environment, never skip.
 try:
     import hypothesis  # noqa: F401
 except ImportError:                                  # pragma: no cover
     sys.path.insert(0, str(Path(__file__).resolve().parent))
-    from _hypothesis_fallback import install as _install_hypothesis_stub
-    _install_hypothesis_stub()
+    from _hypothesis_fallback import install as _install_hypothesis_fallback
+    _install_hypothesis_fallback()
 
 
 def run_multidevice(code: str, devices: int = 4, timeout: int = 600) -> str:

@@ -16,6 +16,15 @@ from repro.training.train_step import make_train_step
 ARCHS = list_archs()
 B, S = 2, 16
 
+# the large-config smokes dominate tier-1 wall clock; keep them in CI's
+# full run (-m "") but out of the default loop
+_SLOW_ARCHS = {"jamba-v0.1-52b", "seamless-m4t-medium"}
+
+
+def _arch_params(archs):
+    return [pytest.param(a, marks=pytest.mark.slow) if a in _SLOW_ARCHS else a
+            for a in archs]
+
 
 def make_batch(cfg, key=1):
     batch = {"tokens": jax.random.randint(jax.random.PRNGKey(key), (B, S), 0,
@@ -29,7 +38,7 @@ def make_batch(cfg, key=1):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _arch_params(ARCHS))
 def test_forward_shapes_no_nan(arch):
     cfg = get_config(arch, smoke=True)
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -46,7 +55,7 @@ def test_forward_shapes_no_nan(arch):
         assert out.cls_logits.shape == (B, cfg.num_classes)
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _arch_params(ARCHS))
 def test_one_train_step(arch):
     cfg = get_config(arch, smoke=True)
     mesh = make_debug_mesh()
@@ -66,8 +75,9 @@ def test_one_train_step(arch):
     assert moved
 
 
-@pytest.mark.parametrize("arch", ["glm4-9b", "jamba-v0.1-52b", "mamba2-780m",
-                                  "seamless-m4t-medium", "olmoe-1b-7b"])
+@pytest.mark.parametrize("arch", _arch_params(
+    ["glm4-9b", "jamba-v0.1-52b", "mamba2-780m",
+     "seamless-m4t-medium", "olmoe-1b-7b"]))
 def test_prefill_decode_consistency(arch):
     """decode_step after prefill reproduces the full forward's next logits."""
     cfg = get_config(arch, smoke=True)

@@ -1,5 +1,6 @@
 """Gradient compression: quantiser bounds + EF convergence under shard_map."""
 
+import pytest
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings
@@ -24,6 +25,7 @@ def test_quantize_error_bound(x):
     assert np.all(err <= step[:, None] / 2 + 1e-6)
 
 
+@pytest.mark.slow
 def test_compressed_dp_training_converges():
     """4-replica shard_map DP: compressed loss curve tracks uncompressed."""
     from tests.conftest import run_multidevice

@@ -168,6 +168,7 @@ def test_engine_policy_metrics_carry_labels_and_clients():
 # variable-length / ragged streaming
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_variable_length_rounds_and_ragged_batches():
     sim, cm, tap_shared, shared, tap_fn, labels = _world()
     server = api.bootstrap_server(jax.random.PRNGKey(0), sim, tap_shared,

@@ -61,6 +61,7 @@ def test_rotation_keeps_latest(tmp_path):
     assert mgr.all_steps() == [3, 4]
 
 
+@pytest.mark.slow
 def test_restart_drill_bit_exact(tmp_path):
     """Crash after 2 steps; resumed run must equal an uninterrupted run."""
     params0, opt0, run = _setup(tmp_path)

@@ -1,0 +1,233 @@
+"""The fleet gateway (repro/fleet/): parity, routing, chaos.
+
+The two regression anchors the ISSUE asks for:
+
+* **Degenerate-case parity** — a 1-replica fleet replays the exact call
+  sequence of a bare :class:`ServingSession` through the seam, so every
+  number in its report is bit-identical to ``session.run()``.  This pins
+  the seam refactor: any drift between ``run()`` and the
+  start/begin_window/submit/tick/end_window path breaks this test.
+* **Chaos** — an injected replica outage (``FaultSpec`` scheduled window)
+  degrades fleet attainment gracefully: the dead replica's backlog spills
+  to ring neighbors, membership churns through ``ClientChurn``, recovery
+  resyncs a fresh table, and nothing errors — including the total-outage
+  window where *no* replica is alive.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AcaPolicy, CacheConfig, CocaCluster,
+                        SimulationConfig, calibrate)
+from repro.data import (PoissonArrivals, RequestStream, Stationary,
+                        StreamConfig, make_tap_model, perturb_tap_model,
+                        synthesize_taps, zipf_prior)
+from repro.distributed.faults import FaultSpec
+from repro.fleet import FleetGateway
+from repro.serving.batching import BatchingConfig
+from repro.serving.loop import ServeLoopConfig, ServingSession
+
+I, L, D = 16, 4, 16
+NB = L + 1
+
+
+@pytest.fixture(scope="module")
+def fleet_world():
+    scfg = StreamConfig(num_classes=I, num_layers=L, sem_dim=D)
+    tm = make_tap_model(jax.random.PRNGKey(0), scfg)
+    tm_cal = perturb_tap_model(jax.random.PRNGKey(42), tm, 0.3)
+    cm = calibrate(np.full(NB, 5.0), np.full(L, D), head_cost=1.0)
+    shared = np.tile(np.arange(I), 10)
+
+    def make_cluster(theta=0.06, num_clients=1):
+        cache = CacheConfig(num_classes=I, num_layers=L, sem_dim=D,
+                            theta=theta)
+        sim = SimulationConfig(cache=cache, round_frames=40,
+                               mem_budget=float(6 * I * D))
+        cluster = CocaCluster(sim, cm, policy=AcaPolicy(),
+                              num_clients=num_clients)
+        cluster.bootstrap(
+            jax.random.PRNGKey(0),
+            lambda lab: synthesize_taps(jax.random.PRNGKey(1), tm_cal,
+                                        jnp.asarray(lab), scfg),
+            shared)
+        return cluster
+
+    def tap_fn(w, lab):
+        return synthesize_taps(jax.random.PRNGKey(777 + w), tm,
+                               jnp.asarray(lab), scfg)
+
+    return make_cluster, tap_fn
+
+
+CFG = ServeLoopConfig(windows=5, window_ticks=32, slo_ticks=20.0,
+                      batching=BatchingConfig(max_slots=4, num_blocks=NB))
+
+
+def _workloads(n, rate=0.5):
+    """n clients with distinct Zipf hot sets (rolled priors)."""
+    return [RequestStream(num_classes=I, arrivals=PoissonArrivals(rate=rate),
+                          process=Stationary(
+                              prior=np.roll(zipf_prior(I), 4 * c)),
+                          seed=3 + c)
+            for c in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# degenerate-case parity
+# ---------------------------------------------------------------------------
+
+
+def test_one_replica_fleet_is_bit_identical_to_bare_session(fleet_world):
+    make_cluster, tap_fn = fleet_world
+    wl = _workloads(1)[0]
+    base = ServingSession(make_cluster(), CFG, wl, tap_fn).run()
+    fleet = FleetGateway(make_cluster(), CFG, [wl], tap_fn,
+                         router="affinity").run()
+    rep = fleet.replicas[0]
+    assert (base.served, base.shed, base.arrivals) == \
+        (rep.served, rep.shed, rep.arrivals)
+    assert base.theta_trace == rep.theta_trace == fleet.theta_trace
+    assert np.array_equal(base.exit_blocks, rep.exit_blocks)
+    assert base.stats == rep.stats == fleet.stats
+    assert base.hit_ratio == pytest.approx(fleet.hit_ratio, abs=0)
+    assert base.accuracy == pytest.approx(fleet.accuracy, abs=0)
+    for bw, rw in zip(base.windows, rep.windows):
+        assert bw == rw
+    assert fleet.door_shed == 0
+
+
+def test_run_seam_equivalence(fleet_world):
+    """session.run() is written on the seam — driving the seam by hand
+    reproduces run() exactly (the contract the gateway relies on)."""
+    make_cluster, tap_fn = fleet_world
+    wl = _workloads(1)[0]
+    auto = ServingSession(make_cluster(), CFG, wl, tap_fn).run()
+    s = ServingSession(make_cluster(), CFG, wl, tap_fn)
+    s.start()
+    for w in range(CFG.windows):
+        s.begin_window(w)
+        counts, labels = wl.window(w, CFG.window_ticks)
+        offsets = np.concatenate([[0], np.cumsum(counts)])
+        for t in range(CFG.window_ticks):
+            for lab in labels[offsets[t]:offsets[t + 1]]:
+                s.submit(int(lab))
+            s.tick(w)
+        s.end_window(w)
+    s.drain_backlog(CFG.windows - 1)
+    manual = s.report()
+    assert auto.stats == manual.stats
+    assert auto.theta_trace == manual.theta_trace
+    assert np.array_equal(auto.exit_blocks, manual.exit_blocks)
+
+
+def test_gateway_managed_session_refuses_run(fleet_world):
+    make_cluster, tap_fn = fleet_world
+    s = ServingSession(make_cluster(), CFG, None, tap_fn)
+    with pytest.raises(RuntimeError, match="workload"):
+        s.run()
+
+
+# ---------------------------------------------------------------------------
+# multi-replica routing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("router", ["affinity", "hash", "round_robin"])
+def test_fleet_accounting_identity(fleet_world, router):
+    """Every arrival is served, shed (at a replica or the door), or still
+    in a backlog — nothing is lost or double-counted."""
+    make_cluster, tap_fn = fleet_world
+    gw = FleetGateway(make_cluster(num_clients=3), CFG, _workloads(5),
+                      tap_fn, router=router)
+    res = gw.run()
+    leftover = sum(s.backlog() for s in gw.sessions.values())
+    assert res.served + res.shed + leftover == res.arrivals
+    assert res.arrivals == sum(w.arrivals for w in res.windows)
+    assert 0.0 <= res.stats.attainment <= 1.0
+    assert set(res.per_replica_hit_ratio) == {0, 1, 2}
+    assert res.served > 0
+
+
+def test_replicas_see_disjoint_traffic_under_affinity(fleet_world):
+    """Cache-aware routing concentrates: under affinity each replica
+    admits a proper subset of the traffic (no replica sees everything),
+    and collectively they see it all."""
+    make_cluster, tap_fn = fleet_world
+    gw = FleetGateway(make_cluster(num_clients=3), CFG, _workloads(6),
+                      tap_fn, router="affinity")
+    res = gw.run()
+    per_rep = [gw.sessions[k].admitted for k in gw.replicas]
+    assert sum(per_rep) == res.served + sum(
+        s.backlog() for s in gw.sessions.values())
+    assert max(per_rep) < sum(per_rep)
+
+
+# ---------------------------------------------------------------------------
+# chaos: scheduled outage, spill, recovery
+# ---------------------------------------------------------------------------
+
+
+def test_outage_degrades_gracefully_and_recovers(fleet_world):
+    make_cluster, tap_fn = fleet_world
+    wls = _workloads(6)
+    calm = FleetGateway(make_cluster(num_clients=3), CFG, wls, tap_fn,
+                        router="affinity").run()
+    faults = {1: FaultSpec(outages=((2, 2),), seed=9)}
+    gw = FleetGateway(make_cluster(num_clients=3), CFG, wls, tap_fn,
+                      router="affinity", faults=faults)
+    res = gw.run()
+    # the outage windows are recorded, and only those
+    outaged = {w.window: w.outaged for w in res.windows if w.outaged}
+    assert set(outaged) == {2, 3} and all(o == (1,) for o in outaged.values())
+    # replica 1's backlog spilled to ring neighbors at the outage boundary
+    assert res.windows[2].spilled >= 0
+    # membership churned: replica 1 left and rejoined
+    assert set(gw.cluster.active_clients) == {0, 1, 2}
+    # graceful: the fleet still serves through the outage, no error;
+    # capacity loss can only hurt, never help
+    assert res.served > 0
+    assert res.stats.attainment <= calm.stats.attainment + 1e-9
+    assert res.stats.attainment > 0.3
+    # the outage windows themselves still retire work on the survivors
+    assert all(res.windows[w].stats.served > 0 for w in (2, 3))
+
+
+def test_total_outage_window_door_sheds(fleet_world):
+    """Every replica down at once: arrivals shed at the door, membership
+    is left untouched (an outage is not evidence of churn), and the fleet
+    resumes when the replicas return."""
+    make_cluster, tap_fn = fleet_world
+    faults = {k: FaultSpec(outages=((1, 1),), seed=k) for k in range(2)}
+    gw = FleetGateway(make_cluster(num_clients=2), CFG, _workloads(4),
+                      tap_fn, router="hash", faults=faults)
+    res = gw.run()
+    dark = res.windows[1]
+    assert dark.outaged == (0, 1)
+    assert dark.door_shed == dark.arrivals
+    assert dark.stats.served == 0
+    # service resumes after recovery
+    assert res.windows[2].stats.served > 0
+    assert set(gw.cluster.active_clients) == {0, 1}
+
+
+def test_long_outage_rejoins_cold(fleet_world):
+    """An outage longer than stale_limit windows wipes the replica's
+    recency on rejoin (ClientChurn's fresh=True path)."""
+    make_cluster, tap_fn = fleet_world
+    cfg = dataclasses.replace(CFG, windows=7)
+    faults = {1: FaultSpec(outages=((1, 4),), seed=9)}
+    gw = FleetGateway(make_cluster(num_clients=2), cfg, _workloads(4),
+                      tap_fn, router="affinity", faults=faults,
+                      stale_limit=2)
+    res = gw.run()
+    # replica 1 was out windows 1-4, back at 5 with a cold profile
+    assert {w.window for w in res.windows if w.outaged} == {1, 2, 3, 4}
+    sess = gw.sessions[1]
+    # recency was wiped at rejoin, then rebuilt from post-recovery traffic
+    assert sess._seen <= res.windows[5].arrivals + res.windows[6].arrivals
+    assert res.stats.attainment > 0.0

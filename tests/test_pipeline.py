@@ -1,6 +1,9 @@
 """Pipeline-parallel forward: equivalence + schedule properties."""
 
+import pytest
 
+
+@pytest.mark.slow
 def test_pipeline_forward_matches_plain():
     from tests.conftest import run_multidevice
     run_multidevice("""

@@ -1,0 +1,207 @@
+"""Property tests for the fleet router (repro/fleet/router.py).
+
+The routing invariants the gateway's correctness rests on:
+
+* **Determinism** — placement is a pure function of the key and the
+  membership set: same key → same replica across ring-construction order,
+  across processes, and across ``PYTHONHASHSEED`` values (the ring hashes
+  with blake2b, never Python's salted ``hash()``).
+* **Bounded remapping** — consistent hashing's monotonicity: a replica
+  join moves keys *only onto the joiner*; a leave moves *only the
+  leaver's* keys.  Everything else stays put — in expectation K/N of the
+  keyspace per membership change, asserted both exactly (set algebra) and
+  quantitatively (fraction moved).
+* **Liveness** — no policy ever dispatches to a replica marked outaged,
+  and the dead replica's keys spill to ring successors, returning to the
+  original owner on recovery.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.fleet.router import (AffinityRouter, ConsistentHashRing,
+                                HashRouter, RoundRobinRouter, stable_hash)
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def keys_for(n: int) -> list[str]:
+    return [f"class:{i}" for i in range(n)] + [f"client:{i}" for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 31), min_size=1, max_size=8, unique=True),
+       st.integers(0, 10_000))
+def test_placement_independent_of_construction_order(replicas, key_seed):
+    """Same membership set → same owner for every key, no matter the order
+    replicas joined in."""
+    a = ConsistentHashRing(replicas, vnodes=16)
+    b = ConsistentHashRing(list(reversed(replicas)), vnodes=16)
+    key = f"key:{key_seed}"
+    assert a.owner(key) == b.owner(key)
+    assert a.route(key) == b.route(key)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.text(min_size=0, max_size=64))
+def test_stable_hash_is_a_pure_function(s):
+    assert stable_hash(s) == stable_hash(s)
+    assert 0 <= stable_hash(s) < 2 ** 64
+
+
+def test_placement_stable_across_processes():
+    """The property PYTHONHASHSEED would break if the ring used ``hash()``:
+    a fresh interpreter with a different hash seed must place every key on
+    the same replica this process does."""
+    keys = keys_for(32)
+    ring = ConsistentHashRing(range(5), vnodes=16)
+    here = [ring.owner(k) for k in keys]
+    code = (
+        "from repro.fleet.router import ConsistentHashRing\n"
+        "ring = ConsistentHashRing(range(5), vnodes=16)\n"
+        f"keys = {keys!r}\n"
+        "print([ring.owner(k) for k in keys])\n")
+    env = dict(os.environ)
+    env["PYTHONHASHSEED"] = "12345"
+    env["PYTHONPATH"] = f"{REPO / 'src'}:{env.get('PYTHONPATH', '')}"
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stderr
+    assert eval(proc.stdout.strip()) == here
+
+
+# ---------------------------------------------------------------------------
+# bounded remapping (monotonicity)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 10), st.integers(0, 2 ** 31 - 1))
+def test_join_moves_keys_only_onto_the_joiner(n, seed):
+    keys = [f"key:{seed}:{i}" for i in range(64)]
+    ring = ConsistentHashRing(range(n), vnodes=16)
+    before = {k: ring.owner(k) for k in keys}
+    ring.add(n)                                   # join
+    for k in keys:
+        after = ring.owner(k)
+        assert after == before[k] or after == n
+    ring.remove(n)                                # leave again: full restore
+    assert {k: ring.owner(k) for k in keys} == before
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 10), st.integers(0, 2 ** 31 - 1))
+def test_leave_moves_only_the_leavers_keys(n, seed):
+    keys = [f"key:{seed}:{i}" for i in range(64)]
+    ring = ConsistentHashRing(range(n), vnodes=16)
+    before = {k: ring.owner(k) for k in keys}
+    ring.remove(n - 1)
+    for k in keys:
+        if before[k] != n - 1:
+            assert ring.owner(k) == before[k]
+
+
+def test_join_remaps_about_a_nth_of_the_keyspace():
+    """Quantitative K/N bound: joining the (N+1)-th replica should remap
+    roughly K/(N+1) of K keys — assert a generous 3x ceiling (exact
+    monotonicity is the hypothesis test above; this pins the magnitude)."""
+    K, n = 2000, 4
+    keys = [f"key:{i}" for i in range(K)]
+    ring = ConsistentHashRing(range(n), vnodes=64)
+    before = {k: ring.owner(k) for k in keys}
+    ring.add(n)
+    moved = sum(ring.owner(k) != before[k] for k in keys)
+    assert 0 < moved <= 3 * K // (n + 1)
+
+
+# ---------------------------------------------------------------------------
+# liveness: outaged replicas receive nothing
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 8),
+       st.lists(st.integers(0, 7), min_size=1, max_size=7, unique=True),
+       st.integers(0, 10_000))
+def test_ring_route_never_returns_a_dead_replica(n, dead, key_seed):
+    ring = ConsistentHashRing(range(n), vnodes=16)
+    dead = {d for d in dead if d < n}
+    if len(dead) == n:
+        dead.pop()                               # keep one alive
+    for d in dead:
+        ring.set_alive(d, False)
+    r = ring.route(f"key:{key_seed}")
+    assert r not in dead and r in ring.alive
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 5),
+       st.lists(st.tuples(st.integers(0, 31), st.integers(0, 15)),
+                min_size=1, max_size=40))
+def test_affinity_router_never_dispatches_to_outaged(n, dead, requests):
+    router = AffinityRouter(range(n), num_classes=16, vnodes=16)
+    dead = dead % n
+    router.set_alive(dead, False)
+    for client, label in requests:
+        assert router.route(client, label) != dead
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 5), st.integers(1, 40))
+def test_round_robin_skips_outaged(n, dead, m):
+    router = RoundRobinRouter(range(n))
+    dead = dead % n
+    router.set_alive(dead, False)
+    for i in range(m):
+        assert router.route(i, 0) != dead
+
+
+def test_spill_returns_to_owner_on_recovery():
+    """An outage moves only the dead arc (to alive successors); recovery
+    restores every key to its original owner — no residual remapping."""
+    ring = ConsistentHashRing(range(5), vnodes=32)
+    keys = keys_for(64)
+    before = {k: ring.route(k) for k in keys}
+    ring.set_alive(2, False)
+    for k in keys:
+        spilled = ring.route(k)
+        assert spilled != 2
+        if before[k] != 2:
+            assert spilled == before[k]          # survivors keep their keys
+    ring.set_alive(2, True)
+    assert {k: ring.route(k) for k in keys} == before
+
+
+def test_no_alive_replicas_raises():
+    ring = ConsistentHashRing([0, 1], vnodes=8)
+    ring.set_alive(0, False)
+    ring.set_alive(1, False)
+    with pytest.raises(RuntimeError):
+        ring.route("key:0")
+    rr = RoundRobinRouter([0])
+    rr.set_alive(0, False)
+    with pytest.raises(RuntimeError):
+        rr.route(0, 0)
+
+
+def test_affinity_profile_tracks_drift():
+    """The EWMA profile re-homes a client whose hot class moves: after a
+    burst of a new class, the predicted class follows."""
+    router = AffinityRouter([0, 1, 2], num_classes=8, decay=0.8)
+    for _ in range(10):
+        router.observe(7, 3)
+    assert router.predicted_class(7) == 3
+    for _ in range(10):
+        router.observe(7, 5)
+    assert router.predicted_class(7) == 5

@@ -197,6 +197,7 @@ def test_trace_replay_consumes_rows_and_flat_slices():
 # churn lifecycle on the engine
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_cluster_churn_lifecycle_and_errors():
     sim, cm, tap_shared, shared, tap_fn = _world()
     cluster = api.CocaCluster(sim, cm, num_clients=K,
@@ -224,6 +225,7 @@ def test_cluster_churn_lifecycle_and_errors():
     assert sorted(set(m.client.tolist())) == [0, 1, 2, 3]
 
 
+@pytest.mark.slow
 def test_churn_scenario_vectorized_matches_reference_bit_for_bit():
     sim, cm, tap_shared, shared, tap_fn = _world()
     server = _server(sim, cm, tap_shared, shared)
@@ -272,6 +274,7 @@ def test_remove_and_rejoin_converges_to_never_left():
     assert abs(m_churn.avg_latency / m_stay.avg_latency - 1.0) < 0.25
 
 
+@pytest.mark.slow
 def test_engine_policy_cluster_supports_churn():
     sim, cm, tap_shared, shared, tap_fn = _world()
     cluster = api.CocaCluster(sim, cm, policy=api.SMTMPolicy(), num_clients=K)
@@ -431,6 +434,7 @@ def test_run_simulation_warns_once_not_per_call():
     assert len(dep) == 1                     # once per process, not per call
 
 
+@pytest.mark.slow
 def test_run_simulation_reference_forwards_mesh(rng):
     """The reference wrapper accepts and forwards ``mesh=`` (parity with
     ``run_simulation``); a 1-device mesh must reproduce the no-mesh run."""

@@ -116,6 +116,7 @@ def test_pool_and_normalize_properties(x):
 
 
 @settings(max_examples=20, deadline=None)
+@pytest.mark.slow
 @given(st.integers(0, 2 ** 31 - 1), st.floats(0.0, 0.9))
 def test_accumulation_matches_manual(seed, alpha):
     t = make_table(seed % 100)

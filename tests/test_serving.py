@@ -231,6 +231,7 @@ def test_session_idle_workload(small_world):
     assert throughput_gain(res, base) == 1.0
 
 
+@pytest.mark.slow
 def test_session_overload_sheds_and_lowers_theta(small_world):
     make_cluster, taps_for = small_world
 
@@ -251,6 +252,7 @@ def test_session_overload_sheds_and_lowers_theta(small_world):
     assert res.theta_trace[-1] < res.theta_trace[0]
 
 
+@pytest.mark.slow
 def test_session_gain_under_load(small_world):
     """At saturating load the cached session beats its live no-cache twin."""
     make_cluster, taps_for = small_world

@@ -3,7 +3,10 @@ round driver must be bit-identical with the (L, I, d) table split over a
 device mesh — the only collective is the entries all-gather at subtable
 allocation (see repro/distributed/sharding.py, "CoCa server global cache")."""
 
+import pytest
 
+
+@pytest.mark.slow
 def test_global_update_sharded_parity():
     from tests.conftest import run_multidevice
     run_multidevice("""
@@ -47,6 +50,7 @@ print("GLOBAL UPDATE SHARDED PARITY OK")
 """, devices=4)
 
 
+@pytest.mark.slow
 def test_run_simulation_sharded_parity():
     from tests.conftest import run_multidevice
     run_multidevice("""

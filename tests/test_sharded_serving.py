@@ -1,7 +1,10 @@
 """Distributed serving paths (§Perf optimizations) — exact equivalence of the
 sequence-sharded flash-decode and the padded/chunked attention policies."""
 
+import pytest
 
+
+@pytest.mark.slow
 def test_seq_sharded_decode_matches_plain():
     from tests.conftest import run_multidevice
     run_multidevice("""
@@ -32,6 +35,7 @@ print("SEQ-SHARDED DECODE OK", err)
 """, devices=4, timeout=600)
 
 
+@pytest.mark.slow
 def test_flash_policy_matches_plain():
     from tests.conftest import run_multidevice
     run_multidevice("""

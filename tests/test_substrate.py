@@ -85,6 +85,7 @@ def test_grad_clipping():
 # microbatching equivalence
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_microbatch_grad_accumulation_matches():
     from repro.configs import get_config
     from repro.launch.mesh import make_debug_mesh

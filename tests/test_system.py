@@ -56,6 +56,7 @@ def _run(world, rounds=6, clients=3, p=2.0, **sim_over):
     return run_simulation(sim, server, tap_fn, labels, cm, rounds, clients), cm
 
 
+@pytest.mark.slow
 def test_latency_reduction_with_small_accuracy_loss(world):
     """Headline claim: meaningful latency reduction, accuracy within 3 % of
     Edge-Only (the full model on the same streams scores ~0.8)."""
@@ -67,6 +68,7 @@ def test_latency_reduction_with_small_accuracy_loss(world):
     assert res.hit_accuracy > 0.8
 
 
+@pytest.mark.slow
 def test_cache_warms_up_over_rounds(world):
     """Global updates should drive per-round latency down over time."""
     res, cm = _run(world, rounds=8)
