@@ -14,7 +14,6 @@ benchmark-specific metric (accuracy, hit ratio, reduction %, ...).
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +23,7 @@ from repro.core import (CacheConfig, CocaCluster, FoggyCachePolicy,
                         FrameBatch, LearnedCachePolicy, ReplacementPolicy,
                         SimulationConfig, SMTMPolicy, calibrate)
 from repro.core.client import AbsorptionConfig
-from repro.data import (StreamConfig, dirichlet_client_priors, longtail_prior,
+from repro.data import (StreamConfig, dirichlet_client_priors,
                         make_client_context, make_tap_model,
                         perturb_tap_model, sample_class_sequence,
                         synthesize_taps)
@@ -84,7 +83,7 @@ class PaperWorld:
         self.cm = calibrate(resnet_like_block_costs(s.num_layers + 1),
                             np.full(s.num_layers, s.sem_dim), head_cost=1.0)
         self.shared_labels = np.tile(np.arange(s.num_classes), 30)
-        self.rng = np.random.default_rng(s.seed)
+        self.rng = np.random.default_rng(np.random.SeedSequence((s.seed,)))
         self._ctr = 0
         self._cal_taps = None            # cached shared-set (sems, logits)
         self._servers = {}               # theta -> bootstrapped ServerState

@@ -33,8 +33,10 @@ def run(quick: bool = False):
     policy = AcaPolicy()
     ctx = AllocationContext(
         round_index=0, client_index=0,
-        phi_global=np.random.default_rng(0).uniform(0, 100, s.num_classes),
-        tau=np.random.default_rng(1).integers(0, 900, s.num_classes),
+        phi_global=np.random.default_rng(
+            np.random.SeedSequence((0,))).uniform(0, 100, s.num_classes),
+        tau=np.random.default_rng(
+            np.random.SeedSequence((1,))).integers(0, 900, s.num_classes),
         r_est=np.linspace(0.1, 0.9, s.num_layers),
         upsilon=np.linspace(3.0, 0.1, s.num_layers),
         entry_sizes=np.full(s.num_layers, s.sem_dim * 4.0),

@@ -3,19 +3,17 @@
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import world, row
 from repro.core import CacheConfig, CacheTable, lookup_all_layers
-from repro.core.semantic_cache import l2_normalize
 
 
 def run(quick: bool = False):
     w = world(quick)
     s = w.s
-    rng = np.random.default_rng(1)
+    rng = np.random.default_rng(np.random.SeedSequence((1,)))
     labels = w.client_labels(rounds=1)[0, 0]
     sems, logits = w.tap_fn()(0, 0, labels)
     sems, logits = np.asarray(sems), np.asarray(logits)

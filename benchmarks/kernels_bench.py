@@ -15,7 +15,6 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import ops, ref
 

@@ -27,7 +27,6 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 if __package__ in (None, ""):                      # plain-script invocation
     sys.path.insert(0, str(Path(__file__).resolve().parent.parent))

@@ -1,0 +1,12 @@
+"""Root conftest: registers the cocalint runtime sanitizer plugin
+(tools/cocalint/sanitize.py — transfer-guard marker, recompilation
+sentinel, checkify debug mode).  ``pytest_plugins`` must live in the
+rootdir conftest; the shared test fixtures stay in tests/conftest.py.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+pytest_plugins = ["tools.cocalint.sanitize"]

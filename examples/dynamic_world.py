@@ -17,7 +17,6 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
-import numpy as np
 
 from benchmarks.common import QUICK, PaperWorld
 from benchmarks.table4_dynamics import (_frozen_static_policy, _scenario,

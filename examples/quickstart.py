@@ -37,7 +37,7 @@ cluster.bootstrap(
                                 jnp.asarray(lab), scfg),
     np.tile(np.arange(I), 30))
 
-rng = np.random.default_rng(0)
+rng = np.random.default_rng(np.random.SeedSequence((0,)))
 clients, rounds = 3, 5
 priors = dirichlet_client_priors(rng, clients, I, p=2.0)
 ctxs = [make_client_context(jax.random.PRNGKey(100 + k), scfg)

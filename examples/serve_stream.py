@@ -30,7 +30,7 @@ B, S = 8, 8
 n_taps = len(cfg.tap_layers())
 num_blocks = n_taps + 1
 
-rng0 = np.random.default_rng(7)
+rng0 = np.random.default_rng(np.random.SeedSequence((7,)))
 class_dirs = rng0.normal(size=(cfg.num_classes, cfg.d_model))
 
 

@@ -20,6 +20,7 @@ LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 # The documentation set every session must keep intact: each page must exist
 # and be reachable from the README (a page nothing links to is dead docs).
 REQUIRED_PAGES = [
+    "docs/analysis.md",
     "docs/api.md",
     "docs/architecture.md",
     "docs/benchmarks.md",

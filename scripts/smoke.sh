@@ -17,6 +17,17 @@ elif [[ -n "${1:-}" ]]; then
   exit 2
 fi
 
+# Quick static gate before anything expensive: the project AST pass is
+# stdlib-only and runs everywhere; ruff is pinned in requirements.txt but
+# not baked into the offline container, so it runs only when present.
+echo "== lint (cocalint + ruff if available) =="
+python -m tools.cocalint src benchmarks examples
+if command -v ruff >/dev/null 2>&1; then
+  ruff check .
+else
+  echo "ruff not installed; skipping (CI lint job runs it)"
+fi
+
 if [[ "$QUICK" == "1" ]]; then
   echo "== tier-1 tests (fail-fast) =="
   python -m pytest -x -q

@@ -6,7 +6,7 @@ embeddings), matching how the paper treats it as a fixed frontend.  This is
 the 11th config: it anchors the paper-validation benchmarks to a backbone the
 paper actually used.
 """
-from repro.configs.common import NUM_CLASSES, SEM_DIM, reduced
+from repro.configs.common import SEM_DIM, reduced
 from repro.models.config import ModelConfig
 
 CONFIG = ModelConfig(

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.models.config import ModelConfig, MoEConfig, SSMConfig
+from repro.models.config import ModelConfig
 
 # CoCa integration defaults for serving cells: a semantic tap every 4 blocks,
 # ImageNet-100-scale stream label space (the paper's evaluation regime).

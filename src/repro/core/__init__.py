@@ -31,5 +31,7 @@ from repro.core.engine import (  # noqa: F401
     bootstrap_server, bootstrap_server_from_taps, resolve_policy, round_step,
 )
 from repro.core.simulation import (  # noqa: F401
+    # the deliberate legacy re-export surface: the wrappers warn on call
+    # cocalint: disable=CL402
     run_simulation, run_simulation_reference,
 )

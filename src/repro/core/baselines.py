@@ -209,7 +209,7 @@ class FoggyCache:
     seed: int = 0
 
     def __post_init__(self):
-        rng = np.random.default_rng(self.seed)
+        rng = np.random.default_rng(np.random.SeedSequence((self.seed,)))
         d = self.cm.sem_dims[self.key_layer]
         self.lsh = rng.normal(size=(self.lsh_bits, d))
         self.local = _KnnStore(self.local_capacity)

@@ -351,12 +351,13 @@ class ReplacementPolicy:
         # one shared stream across a cluster's clients (the Fig. 8 study),
         # restarted per engine *set* so each cluster replays the same seed;
         # lazily rebuilt engines (churn rejoins/joins) keep sharing it
-        self._rng = np.random.default_rng(self.seed)
+        self._rng = np.random.default_rng(np.random.SeedSequence((self.seed,)))
 
     def make_engine(self, ctx: ClientEngineContext):
         from repro.core.policies import PolicyCache
         if not hasattr(self, "_rng"):        # engine built without reset()
-            self._rng = np.random.default_rng(self.seed)
+            self._rng = np.random.default_rng(
+                np.random.SeedSequence((self.seed,)))
         L = ctx.cache.num_layers
         layers = (list(self.layers) if self.layers is not None else
                   list(np.linspace(0, L - 1, max(L // 3, 2))

@@ -24,7 +24,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-NEG = jnp.float32(-1e9)
+# Python float, not jnp.float32(...): a jnp call here would initialise the
+# backend at import time; weak-typed promotion keeps every use float32.
+NEG = -1e9
 
 
 @dataclasses.dataclass(frozen=True)
@@ -260,6 +262,21 @@ def lookup_all_layers(table: CacheTable, sems: jax.Array, cfg: CacheConfig,
                         scores=scores, acc=None)
 
 
+_F32_ZERO = None
+
+
+def _f32_zero() -> jax.Array:
+    """Lazily-cached device-resident float32 zero.  ``allocate_subtable``
+    runs *eagerly* at every round start; a literal ``0.0`` there would
+    re-materialise a host scalar each round — an implicit transfer the
+    runtime sanitizer's guard forbids.  One explicit device_put, reused."""
+    global _F32_ZERO
+    if _F32_ZERO is None:
+        import numpy as np
+        _F32_ZERO = jax.device_put(np.zeros((), np.float32))
+    return _F32_ZERO
+
+
 def allocate_subtable(global_entries: jax.Array, x: jax.Array) -> CacheTable:
     """Extract a client cache from the global table given an allocation matrix.
 
@@ -271,7 +288,7 @@ def allocate_subtable(global_entries: jax.Array, x: jax.Array) -> CacheTable:
     class_mask = x.any(axis=0)
     keep = (layer_mask[:, None] & class_mask[None, :])[..., None]
     return CacheTable(
-        entries=jnp.where(keep, global_entries, 0.0),
+        entries=jnp.where(keep, global_entries, _f32_zero()),
         class_mask=class_mask,
         layer_mask=layer_mask,
     )

@@ -71,7 +71,7 @@ def main() -> None:
         params, opt_state = restored
         print(f"[train] resumed from step {start}")
 
-    rng = np.random.default_rng(1234)
+    rng = np.random.default_rng(np.random.SeedSequence((1234,)))
     with mesh:
         for step in range(start, args.steps):
             batch = synthetic_lm_batch(rng, cfg, args.batch, args.seq)

@@ -8,9 +8,6 @@ accumulation is a ``lax.scan`` over the leading batch split (pairs with
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,358 @@
+"""cocalint static-analysis pass: one violating + one clean fixture snippet
+per rule, suppression semantics, CLI exit codes, and the repo-is-clean gate
+(`python -m tools.cocalint src benchmarks examples` must stay at zero
+un-suppressed violations — the same check CI runs).
+"""
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from tools.cocalint import RULES, lint_paths, lint_source
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def rules_in(source: str, path: str = "src/repro/mod.py") -> list[str]:
+    return [d.rule for d in lint_source(textwrap.dedent(source), path)]
+
+
+# ---------------------------------------------------------------------------
+# CL101 rng-global-draw
+# ---------------------------------------------------------------------------
+
+
+def test_cl101_flags_global_np_random_draw():
+    assert rules_in("""
+        import numpy as np
+        def f():
+            return np.random.rand(3)
+    """) == ["CL101"]
+
+
+def test_cl101_flags_from_import_of_draw():
+    assert "CL101" in rules_in("from numpy.random import rand\n")
+
+
+def test_cl101_clean_keyed_generator():
+    assert rules_in("""
+        import numpy as np
+        def f(seed):
+            rng = np.random.default_rng(np.random.SeedSequence((seed, 3)))
+            return rng.normal(size=4)
+    """) == []
+
+
+# ---------------------------------------------------------------------------
+# CL102 rng-stdlib
+# ---------------------------------------------------------------------------
+
+
+def test_cl102_flags_stdlib_random():
+    assert rules_in("import random\nx = random.random()\n") == [
+        "CL102", "CL102"]
+    assert rules_in("from random import shuffle\n") == ["CL102"]
+
+
+def test_cl102_clean_numpy_random_module():
+    assert rules_in("import numpy.random\n") == []
+
+
+# ---------------------------------------------------------------------------
+# CL103 rng-unkeyed
+# ---------------------------------------------------------------------------
+
+
+def test_cl103_flags_unkeyed_and_unseeded():
+    assert rules_in("""
+        import numpy as np
+        a = np.random.default_rng(7)
+        b = np.random.default_rng()
+    """) == ["CL103", "CL103"]
+
+
+def test_cl103_clean_seed_sequence_tuple():
+    assert rules_in("""
+        import numpy as np
+        a = np.random.default_rng(np.random.SeedSequence((7,)))
+        b = np.random.default_rng(
+            np.random.SeedSequence((1, 2) + tuple([3])))
+    """) == []
+
+
+# ---------------------------------------------------------------------------
+# CL201 host-sync-in-jit
+# ---------------------------------------------------------------------------
+
+
+def test_cl201_flags_host_sync_in_jitted_fn():
+    out = rules_in("""
+        import jax, numpy as np
+        from functools import partial
+        @partial(jax.jit, static_argnames=("k",))
+        def f(x, *, k):
+            y = np.asarray(x)
+            x.block_until_ready()
+            return float(x)
+    """)
+    assert out == ["CL201", "CL201", "CL201"]
+
+
+def test_cl201_jit_wrapped_assignment_form():
+    assert rules_in("""
+        import jax
+        def g(x):
+            return jax.device_get(x)
+        g = jax.jit(g)
+    """) == ["CL201"]
+
+
+def test_cl201_clean_static_argname_coercion_and_host_code():
+    # float(k) on a static argname never sees a tracer; an undecorated
+    # host function may sync freely
+    assert rules_in("""
+        import jax, numpy as np
+        from functools import partial
+        @partial(jax.jit, static_argnames=("k",))
+        def f(x, *, k):
+            return x * float(k)
+        def host(x):
+            return np.asarray(jax.device_get(x))
+    """) == []
+
+
+# ---------------------------------------------------------------------------
+# CL202 host-sync-in-tick
+# ---------------------------------------------------------------------------
+
+
+def test_cl202_flags_sync_in_serving_tick():
+    assert rules_in("""
+        import numpy as np
+        class ServingSession:
+            def tick(self, w):
+                return np.asarray(self.look.hit)
+    """) == ["CL202"]
+
+
+def test_cl202_clean_outside_tick_and_list_packing():
+    assert rules_in("""
+        import numpy as np
+        class ServingSession:
+            def tick(self, w):
+                return np.asarray([1, 2, 3])     # host-side list packing
+            def end_window(self, w):
+                return np.asarray(self.stats)    # window boundary is exempt
+    """) == []
+
+
+# ---------------------------------------------------------------------------
+# CL301 tracer-branch
+# ---------------------------------------------------------------------------
+
+
+def test_cl301_flags_python_branch_on_jnp():
+    assert rules_in("""
+        import jax, jax.numpy as jnp
+        @jax.jit
+        def f(x):
+            if jnp.sum(x) > 0:
+                return x
+            while jnp.any(x < 0):
+                x = x + 1
+            return -x
+    """) == ["CL301", "CL301"]
+
+
+def test_cl301_clean_static_branch_and_where():
+    assert rules_in("""
+        import jax, jax.numpy as jnp
+        @jax.jit
+        def f(x, flag=None):
+            if flag is None:
+                x = x * 2
+            return jnp.where(x > 0, x, -x)
+    """) == []
+
+
+# ---------------------------------------------------------------------------
+# CL302 jnp-import-time
+# ---------------------------------------------------------------------------
+
+
+def test_cl302_flags_module_level_jnp_call():
+    assert rules_in("""
+        import jax.numpy as jnp
+        NEG = jnp.float32(-1e9)
+    """) == ["CL302"]
+
+
+def test_cl302_clean_literal_lambda_and_function_body():
+    assert rules_in("""
+        import jax.numpy as jnp
+        NEG = -1e9
+        mk = lambda: jnp.zeros(3)
+        def f():
+            return jnp.zeros(3)
+    """) == []
+
+
+# ---------------------------------------------------------------------------
+# CL401 frozen-mutation
+# ---------------------------------------------------------------------------
+
+
+def test_cl401_flags_frozen_dataclass_self_assignment():
+    assert rules_in("""
+        import dataclasses
+        @dataclasses.dataclass(frozen=True)
+        class Cfg:
+            x: int = 0
+            def bump(self):
+                self.x += 1
+    """) == ["CL401"]
+
+
+def test_cl401_clean_unfrozen_and_replace():
+    assert rules_in("""
+        import dataclasses
+        @dataclasses.dataclass
+        class Mutable:
+            x: int = 0
+            def bump(self):
+                self.x += 1
+        @dataclasses.dataclass(frozen=True)
+        class Cfg:
+            x: int = 0
+            def bumped(self):
+                return dataclasses.replace(self, x=self.x + 1)
+    """) == []
+
+
+# ---------------------------------------------------------------------------
+# CL402 deprecated-run-simulation
+# ---------------------------------------------------------------------------
+
+
+def test_cl402_flags_use_outside_home_module():
+    assert rules_in("""
+        from repro.core.simulation import run_simulation
+        res = run_simulation(sim, server, taps, labels, cm, R, K)
+    """) == ["CL402", "CL402"]
+
+
+def test_cl402_clean_in_defining_module():
+    assert rules_in("""
+        def run_simulation(*a):
+            return run_simulation_reference(*a)
+        def run_simulation_reference(*a):
+            return None
+    """, path="src/repro/core/simulation.py") == []
+
+
+# ---------------------------------------------------------------------------
+# CL403 interpret-literal
+# ---------------------------------------------------------------------------
+
+
+def test_cl403_flags_literal_in_src_call_and_default():
+    assert rules_in("""
+        def kernel(x, interpret=True):
+            return launch(x, interpret=False)
+    """) == ["CL403", "CL403"]
+
+
+def test_cl403_clean_threaded_flag_and_outside_src():
+    assert rules_in("""
+        from repro.kernels.common import resolve_interpret
+        def kernel(x, interpret=None):
+            return launch(x, interpret=resolve_interpret(interpret))
+    """) == []
+    # benchmarks may pin interpret literals (measured configurations)
+    assert rules_in("def f():\n    launch(interpret=True)\n",
+                    path="benchmarks/bench.py") == []
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+
+
+def test_inline_suppression_silences_one_rule():
+    src = ("import numpy as np\n"
+           "r = np.random.default_rng(3)  # cocalint: disable=CL103\n")
+    assert lint_source(src, "src/m.py") == []
+
+
+def test_standalone_suppression_applies_to_next_line():
+    src = ("import numpy as np\n"
+           "# cocalint: disable=CL103\n"
+           "r = np.random.default_rng(3)\n")
+    assert lint_source(src, "src/m.py") == []
+
+
+def test_suppression_in_string_literal_is_inert():
+    src = ('s = "# cocalint: disable=CL103"\n'
+           "import numpy as np\n"
+           "r = np.random.default_rng(3)\n")
+    assert [d.rule for d in lint_source(src, "src/m.py")] == ["CL103"]
+
+
+def test_file_wide_suppression_and_disable_all():
+    src = ("# cocalint: disable-file=CL103\n"
+           "import numpy as np\n"
+           "a = np.random.default_rng(3)\n"
+           "b = np.random.rand(2)  # cocalint: disable=all\n")
+    assert lint_source(src, "src/m.py") == []
+
+
+def test_wrong_rule_suppression_does_not_silence():
+    src = ("import numpy as np\n"
+           "r = np.random.default_rng(3)  # cocalint: disable=CL101\n")
+    assert [d.rule for d in lint_source(src, "src/m.py")] == ["CL103"]
+
+
+# ---------------------------------------------------------------------------
+# Diagnostics / CLI / repo gate
+# ---------------------------------------------------------------------------
+
+
+def test_diagnostic_format_has_location_and_rule_name():
+    d = lint_source("import numpy as np\nx = np.random.rand(1)\n",
+                    "src/m.py")[0]
+    assert d.format() == (
+        "src/m.py:2:4: CL101[rng-global-draw] `np.random.rand(...)` draws "
+        "the module-level global RNG; use a keyed Generator")
+
+
+def test_rule_ids_are_unique_and_documented():
+    assert len(RULES) == 10
+    for rule_id, rule in RULES.items():
+        assert rule_id == rule.id and rule.summary
+
+
+def test_cli_exit_codes(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import random\n")
+    env = {"PYTHONPATH": str(REPO)}
+    ok = subprocess.run(
+        [sys.executable, "-m", "tools.cocalint", "--list-rules"],
+        capture_output=True, text=True, cwd=REPO, env=env)
+    assert ok.returncode == 0 and "CL101" in ok.stdout
+    fail = subprocess.run(
+        [sys.executable, "-m", "tools.cocalint", str(bad), "--statistics"],
+        capture_output=True, text=True, cwd=REPO, env=env)
+    assert fail.returncode == 1
+    assert "CL102[rng-stdlib]" in fail.stdout
+
+
+def test_repo_is_cocalint_clean():
+    """The CI gate, in-process: src/benchmarks/examples lint clean."""
+    diags = lint_paths([REPO / "src", REPO / "benchmarks", REPO / "examples"])
+    assert diags == [], "\n".join(d.format() for d in diags)
+
+
+def test_tools_package_is_cocalint_clean():
+    diags = lint_paths([REPO / "tools"])
+    assert diags == [], "\n".join(d.format() for d in diags)

@@ -1,7 +1,6 @@
 """Fault-tolerance drills: atomic checkpoints, bit-exact restart, elastic
 re-mesh restore, straggler policy."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

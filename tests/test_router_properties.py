@@ -26,7 +26,7 @@ from hypothesis import given, settings
 import hypothesis.strategies as st
 
 from repro.fleet.router import (AffinityRouter, ConsistentHashRing,
-                                HashRouter, RoundRobinRouter, stable_hash)
+                                RoundRobinRouter, stable_hash)
 
 REPO = Path(__file__).resolve().parent.parent
 

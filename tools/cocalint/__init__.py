@@ -1,0 +1,26 @@
+"""cocalint — CoCa's project-native static-analysis pass.
+
+The repo's latency claims rest on a handful of hand-enforced conventions
+(keyed ``SeedSequence`` randomness, one bundled ``device_get`` per round,
+jit-stable shapes in the serving tick).  ``cocalint`` machine-checks them:
+
+* AST rules with stable IDs (``python -m tools.cocalint --list-rules``),
+  ``file:line:col`` diagnostics, and ``# cocalint: disable=RULE``
+  suppressions — see :mod:`tools.cocalint.rules` and ``docs/analysis.md``.
+* A runtime sanitizer half (:mod:`tools.cocalint.sanitize`, a pytest
+  plugin): ``jax.transfer_guard`` scopes, a recompilation sentinel, and a
+  checkify NaN/OOB debug mode for the fused lookup.
+
+CLI: ``python -m tools.cocalint src benchmarks examples`` (exit 1 on any
+un-suppressed violation).
+"""
+
+from tools.cocalint.rules import (  # noqa: F401  (public API re-exports)
+    RULES,
+    Diagnostic,
+    lint_file,
+    lint_paths,
+    lint_source,
+)
+
+__all__ = ["RULES", "Diagnostic", "lint_file", "lint_paths", "lint_source"]

@@ -1,0 +1,3 @@
+from tools.cocalint.cli import main
+
+raise SystemExit(main())

@@ -1,0 +1,58 @@
+"""cocalint command line: ``python -m tools.cocalint src benchmarks examples``.
+
+Prints one ``path:line:col: ID[name] message`` diagnostic per un-suppressed
+violation and exits 1 if any were found — the CI lint gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from collections import Counter
+from pathlib import Path
+
+from tools.cocalint.rules import RULES, lint_paths
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.cocalint",
+        description="CoCa's project-native static-analysis pass")
+    parser.add_argument("paths", nargs="*", default=[],
+                        help="files or directories to lint (recursively)")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule catalog and exit")
+    parser.add_argument("--statistics", action="store_true",
+                        help="append a per-rule violation count summary")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule in RULES.values():
+            print(f"{rule.id}  {rule.name:<26} {rule.summary}")
+        return 0
+    if not args.paths:
+        parser.error("no paths given (try: src benchmarks examples)")
+
+    missing = [p for p in args.paths if not Path(p).exists()]
+    if missing:
+        print(f"cocalint: no such path: {', '.join(missing)}",
+              file=sys.stderr)
+        return 2
+
+    diags = lint_paths(args.paths)
+    for d in diags:
+        print(d.format())
+    if args.statistics and diags:
+        counts = Counter(d.rule for d in diags)
+        print("--")
+        for rule_id, n in sorted(counts.items()):
+            print(f"{rule_id}[{RULES[rule_id].name}]: {n}")
+    if diags:
+        print(f"cocalint: {len(diags)} violation(s)", file=sys.stderr)
+        return 1
+    print(f"cocalint: clean ({', '.join(args.paths)})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

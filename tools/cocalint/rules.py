@@ -1,0 +1,590 @@
+"""The cocalint rule set: project-specific AST checks for the invariants
+CoCa's latency reproduction depends on.
+
+Rule families (catalog with rationale in ``docs/analysis.md``):
+
+=======  ========================  ==========================================
+ID       name                      invariant guarded
+=======  ========================  ==========================================
+CL101    rng-global-draw           no module-level ``np.random.<fn>`` draws
+CL102    rng-stdlib                no stdlib ``random`` anywhere
+CL103    rng-unkeyed               ``default_rng`` fed a keyed SeedSequence
+CL201    host-sync-in-jit          no host syncs inside jitted functions
+CL202    host-sync-in-tick         no stray syncs in serving/fleet tick paths
+CL301    tracer-branch             no Python ``if``/``while`` on jnp results
+                                   in jitted scopes
+CL302    jnp-import-time           no ``jnp`` calls at module import time
+CL401    frozen-mutation           no ``self.x = ...`` in frozen dataclasses
+CL402    deprecated-run-simulation ``run_simulation*`` stays in its module
+CL403    interpret-literal         no ``interpret=True/False`` literals in
+                                   ``src/`` (route through resolve_interpret)
+=======  ========================  ==========================================
+
+Suppressions: ``# cocalint: disable=CL201`` (same line, or a standalone
+comment line directly above a multi-line statement),
+``# cocalint: disable=all`` and ``# cocalint: disable-file=CL403`` for
+whole-file opt-outs.  Every suppression of a true-but-legitimate site is
+expected to carry a short justification in the surrounding comment.
+"""
+
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterable
+
+# ---------------------------------------------------------------------------
+# Rule registry
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Rule:
+    id: str
+    name: str
+    summary: str
+
+
+RULES: dict[str, Rule] = {
+    r.id: r
+    for r in [
+        Rule("CL101", "rng-global-draw",
+             "np.random.<fn> draws the hidden module-level RNG; use a keyed "
+             "np.random.default_rng(SeedSequence((...))) generator"),
+        Rule("CL102", "rng-stdlib",
+             "stdlib `random` is process-global and unkeyed; use numpy "
+             "Generators keyed by SeedSequence tuples"),
+        Rule("CL103", "rng-unkeyed",
+             "default_rng must be fed a keyed SeedSequence tuple so chaos "
+             "runs replay bit-for-bit (the PR 6 invariant)"),
+        Rule("CL201", "host-sync-in-jit",
+             "host sync (device_get / block_until_ready / np.asarray / "
+             "float(tracer)) inside a jit-compiled function"),
+        Rule("CL202", "host-sync-in-tick",
+             "host sync inside a ServingSession/FleetGateway per-tick body; "
+             "bundle into the tick's one explicit device_get or hoist to a "
+             "window boundary"),
+        Rule("CL301", "tracer-branch",
+             "Python if/while on a jnp comparison inside a jitted scope "
+             "traces once and silently freezes the branch"),
+        Rule("CL302", "jnp-import-time",
+             "jnp call at module import time initialises the backend on "
+             "import and bakes device state into module constants"),
+        Rule("CL401", "frozen-mutation",
+             "attribute assignment on a frozen dataclass raises at runtime; "
+             "use dataclasses.replace"),
+        Rule("CL402", "deprecated-run-simulation",
+             "run_simulation/run_simulation_reference are deprecated "
+             "wrappers; use repro.api.CocaCluster"),
+        Rule("CL403", "interpret-literal",
+             "interpret=True/False literal in src/ pins the Pallas backend; "
+             "route through repro.kernels.common.resolve_interpret"),
+    ]
+}
+
+
+@dataclass(frozen=True)
+class Diagnostic:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+    end_line: int = 0        # statement's last line; suppressions anywhere
+                             # in [line, end_line] apply
+
+    def format(self) -> str:
+        name = RULES[self.rule].name
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.rule}[{name}] {self.message}")
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+# np.random attributes that are *not* draws on the hidden global RNG.
+_NP_RANDOM_ALLOWED = {
+    "default_rng", "SeedSequence", "Generator", "BitGenerator",
+    "PCG64", "PCG64DXSM", "Philox", "MT19937", "SFC64", "RandomState",
+}
+
+# Host-sync call names (attribute tails) flagged in jit scopes / tick bodies.
+_SYNC_ATTRS = {"block_until_ready", "item", "tolist"}
+
+# Per-tick hot bodies: class -> methods forming the per-tick path.  Window
+# boundaries (begin_window/end_window/_window_table/resync) are exempt by
+# construction — a sync there is the designed once-per-window transfer.
+_HOT_TICK_METHODS = {
+    "ServingSession": {"tick", "_classify", "submit"},
+    "FleetGateway": {"_dispatch", "_spill_target"},
+}
+
+_DEPRECATED_NAMES = {"run_simulation", "run_simulation_reference"}
+_DEPRECATED_HOME = ("repro", "core", "simulation")   # module that owns them
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*cocalint:\s*(disable|disable-file)\s*=\s*([A-Za-z0-9_,\s\-]+)")
+
+
+def _attr_chain(node: ast.AST) -> str:
+    """Dotted name of an attribute/name chain, '' if not a plain chain."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jnp_rooted(chain: str) -> bool:
+    return chain.startswith(("jnp.", "jax.numpy.")) or chain in (
+        "jnp", "jax.numpy")
+
+
+def _contains_jnp(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, (ast.Attribute, ast.Name)):
+            chain = _attr_chain(sub)
+            if chain and _is_jnp_rooted(chain):
+                return True
+    return False
+
+
+def _static_argnames(call: ast.Call) -> frozenset[str]:
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return frozenset([v.value])
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return frozenset(
+                    e.value for e in v.elts
+                    if isinstance(e, ast.Constant) and isinstance(e.value, str))
+    return frozenset()
+
+
+def _jit_decorator(dec: ast.expr) -> tuple[bool, frozenset[str]]:
+    """(is-jit, static_argnames) for one decorator expression.
+
+    Recognises ``@jit`` / ``@jax.jit``, ``@jax.jit(...)`` and
+    ``@partial(jax.jit, ...)`` / ``@functools.partial(jax.jit, ...)``.
+    """
+    chain = _attr_chain(dec)
+    if chain in ("jit", "jax.jit"):
+        return True, frozenset()
+    if isinstance(dec, ast.Call):
+        fchain = _attr_chain(dec.func)
+        if fchain in ("jit", "jax.jit"):
+            return True, _static_argnames(dec)
+        if fchain in ("partial", "functools.partial") and dec.args:
+            inner = _attr_chain(dec.args[0])
+            if inner in ("jit", "jax.jit"):
+                return True, _static_argnames(dec)
+    return False, frozenset()
+
+
+def _frozen_dataclass_decorator(dec: ast.expr) -> bool:
+    if isinstance(dec, ast.Call):
+        chain = _attr_chain(dec.func)
+        if chain in ("dataclass", "dataclasses.dataclass"):
+            for kw in dec.keywords:
+                if (kw.arg == "frozen"
+                        and isinstance(kw.value, ast.Constant)
+                        and kw.value.value is True):
+                    return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# The analyzer
+# ---------------------------------------------------------------------------
+
+
+class _Frame:
+    """One lexical function frame on the visitor stack."""
+
+    def __init__(self, jitted: bool, static_names: frozenset[str],
+                 hot_tick: bool):
+        self.jitted = jitted
+        self.static_names = static_names
+        self.hot_tick = hot_tick
+
+
+class Analyzer(ast.NodeVisitor):
+    def __init__(self, path: str, *, in_src: bool, is_deprecated_home: bool,
+                 jit_wrapped: frozenset[str]):
+        self.path = path
+        self.in_src = in_src
+        self.is_deprecated_home = is_deprecated_home
+        self.jit_wrapped = jit_wrapped     # names later wrapped via jax.jit(f)
+        self.diags: list[Diagnostic] = []
+        self._funcs: list[_Frame] = []
+        self._classes: list[tuple[str, bool]] = []   # (name, frozen)
+
+    # ------------------------------------------------------------- plumbing
+    def _emit(self, node: ast.AST, rule: str, message: str) -> None:
+        line = getattr(node, "lineno", 1)
+        self.diags.append(Diagnostic(
+            self.path, line, getattr(node, "col_offset", 0), rule, message,
+            end_line=getattr(node, "end_lineno", None) or line))
+
+    @property
+    def _frame(self) -> _Frame | None:
+        return self._funcs[-1] if self._funcs else None
+
+    @property
+    def _jitted(self) -> bool:
+        return any(f.jitted for f in self._funcs)
+
+    @property
+    def _static_names(self) -> frozenset[str]:
+        names: set[str] = set()
+        for f in self._funcs:
+            if f.jitted:
+                names |= f.static_names
+        return frozenset(names)
+
+    @property
+    def _hot_tick(self) -> bool:
+        return any(f.hot_tick for f in self._funcs)
+
+    @property
+    def _import_time(self) -> bool:
+        return not self._funcs
+
+    # -------------------------------------------------------------- imports
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            if alias.name == "random" or alias.name.startswith("random."):
+                self._emit(node, "CL102",
+                           "stdlib `random` imported; use numpy "
+                           "default_rng(SeedSequence((...)))")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.module == "random":
+            self._emit(node, "CL102",
+                       "stdlib `random` imported; use numpy "
+                       "default_rng(SeedSequence((...)))")
+        if node.module in ("numpy.random", "numpy"):
+            for alias in node.names:
+                if (node.module == "numpy.random"
+                        and alias.name not in _NP_RANDOM_ALLOWED):
+                    self._emit(node, "CL101",
+                               f"`from numpy.random import {alias.name}` "
+                               "aliases the hidden global RNG")
+        if not self.is_deprecated_home:
+            for alias in node.names:
+                if alias.name in _DEPRECATED_NAMES:
+                    self._emit(node, "CL402",
+                               f"`{alias.name}` is a deprecated wrapper; "
+                               "drive repro.api.CocaCluster instead")
+        self.generic_visit(node)
+
+    # ------------------------------------------------------- defs / classes
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        frozen = any(_frozen_dataclass_decorator(d) for d in node.decorator_list)
+        self._classes.append((node.name, frozen))
+        self.generic_visit(node)
+        self._classes.pop()
+
+    def _visit_func(self, node: ast.FunctionDef | ast.AsyncFunctionDef) -> None:
+        jitted, static = False, frozenset()
+        for dec in node.decorator_list:
+            j, s = _jit_decorator(dec)
+            if j:
+                jitted, static = True, s
+                break
+        if not jitted and node.name in self.jit_wrapped:
+            jitted = True
+        hot = False
+        if self._classes and not self._funcs:
+            cls = self._classes[-1][0]
+            hot = node.name in _HOT_TICK_METHODS.get(cls, ())
+        # interpret=True/False as a *default* pins the backend just like a
+        # call-site literal does (src/ only, same as CL403 below).
+        if self.in_src:
+            args = node.args
+            for arg, default in zip(
+                    args.args[len(args.args) - len(args.defaults):]
+                    + args.kwonlyargs,
+                    args.defaults + list(args.kw_defaults)):
+                if (default is not None and arg.arg == "interpret"
+                        and isinstance(default, ast.Constant)
+                        and isinstance(default.value, bool)):
+                    self._emit(default, "CL403",
+                               "interpret= bool literal default; default to "
+                               "None and resolve via resolve_interpret()")
+        self._funcs.append(_Frame(jitted, static, hot))
+        self.generic_visit(node)
+        self._funcs.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        # a lambda body runs when called, not at import time; it inherits
+        # the enclosing jit/hot-tick scope like a nested def
+        self._funcs.append(_Frame(False, frozenset(), False))
+        self.generic_visit(node)
+        self._funcs.pop()
+
+    # ------------------------------------------------------------ call sites
+    def visit_Call(self, node: ast.Call) -> None:
+        chain = _attr_chain(node.func)
+
+        # CL101 — draws on the hidden global RNG
+        if chain.startswith(("np.random.", "numpy.random.")):
+            fn = chain.rsplit(".", 1)[-1]
+            if fn not in _NP_RANDOM_ALLOWED:
+                self._emit(node, "CL101",
+                           f"`{chain}(...)` draws the module-level global "
+                           "RNG; use a keyed Generator")
+        if chain.startswith("random.") and chain.count(".") == 1:
+            self._emit(node, "CL102",
+                       f"`{chain}(...)` uses the stdlib global RNG")
+
+        # CL103 — default_rng keying discipline
+        if chain.rsplit(".", 1)[-1] == "default_rng":
+            self._check_default_rng(node)
+
+        # CL302 — jnp at import time
+        if self._import_time and chain and _is_jnp_rooted(chain):
+            self._emit(node, "CL302",
+                       f"`{chain}(...)` runs at module import time; compute "
+                       "lazily or use a Python literal")
+
+        # CL201 / CL202 — host syncs in hot scopes
+        sync = self._sync_kind(node, chain)
+        if sync is not None:
+            if self._jitted:
+                self._emit(node, "CL201",
+                           f"{sync} inside a jit-compiled function forces a "
+                           "host sync at trace time")
+            elif self._hot_tick:
+                self._emit(node, "CL202",
+                           f"{sync} inside a per-tick body; bundle into the "
+                           "tick's one explicit device_get or hoist to the "
+                           "window boundary")
+
+        # CL403 — interpret= call-site literals (src/ only)
+        if self.in_src:
+            for kw in node.keywords:
+                if (kw.arg == "interpret"
+                        and isinstance(kw.value, ast.Constant)
+                        and isinstance(kw.value.value, bool)):
+                    self._emit(kw.value, "CL403",
+                               "interpret= bool literal; pass interpret=None "
+                               "(auto) or thread the caller's flag through "
+                               "resolve_interpret()")
+
+        self.generic_visit(node)
+
+    def _sync_kind(self, node: ast.Call, chain: str) -> str | None:
+        if chain in ("jax.device_get", "device_get"):
+            return "jax.device_get"
+        if chain in ("np.asarray", "numpy.asarray", "np.array", "numpy.array"):
+            # packing a Python list/tuple literal is host-side construction,
+            # not a device sync
+            if node.args and isinstance(
+                    node.args[0], (ast.List, ast.ListComp, ast.Tuple)):
+                return None
+            return f"`{chain}(...)`"
+        if isinstance(node.func, ast.Attribute) and node.func.attr in _SYNC_ATTRS:
+            return f"`.{node.func.attr}()`"
+        if (self._jitted and isinstance(node.func, ast.Name)
+                and node.func.id in ("float", "int", "bool") and node.args):
+            arg = node.args[0]
+            if isinstance(arg, ast.Constant):
+                return None
+            if (isinstance(arg, ast.Name)
+                    and arg.id in self._static_names):
+                return None        # float(static_argname) never sees a tracer
+            return f"`{node.func.id}(...)` on a potential tracer"
+        return None
+
+    def _check_default_rng(self, node: ast.Call) -> None:
+        if len(node.args) != 1 or node.keywords:
+            self._emit(node, "CL103",
+                       "default_rng without a keyed SeedSequence; seed it "
+                       "with SeedSequence((component, ...))")
+            return
+        arg = node.args[0]
+        if not (isinstance(arg, ast.Call)
+                and _attr_chain(arg.func).endswith("SeedSequence")
+                and arg.args):
+            self._emit(node, "CL103",
+                       "default_rng argument is not a SeedSequence((...)) "
+                       "call; key the stream explicitly")
+
+    # ----------------------------------------------------------- statements
+    def visit_If(self, node: ast.If) -> None:
+        self._check_tracer_branch(node, "if")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        self._check_tracer_branch(node, "while")
+        self.generic_visit(node)
+
+    def _check_tracer_branch(self, node: ast.If | ast.While, kind: str) -> None:
+        if self._jitted and _contains_jnp(node.test):
+            self._emit(node, "CL301",
+                       f"Python `{kind}` on a jnp expression in a jitted "
+                       "scope freezes the branch at trace time; use "
+                       "jnp.where / lax.cond")
+
+    def _check_self_assign(self, target: ast.expr, node: ast.AST) -> None:
+        if (isinstance(target, ast.Attribute)
+                and isinstance(target.value, ast.Name)
+                and target.value.id == "self"
+                and self._classes and self._classes[-1][1]):
+            self._emit(node, "CL401",
+                       f"assignment to `self.{target.attr}` inside frozen "
+                       f"dataclass `{self._classes[-1][0]}`; use "
+                       "dataclasses.replace (or object.__setattr__ in "
+                       "__post_init__)")
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            self._check_self_assign(t, node)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._check_self_assign(node.target, node)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None:
+            self._check_self_assign(node.target, node)
+        self.generic_visit(node)
+
+    def visit_Delete(self, node: ast.Delete) -> None:
+        for t in node.targets:
+            self._check_self_assign(t, node)
+        self.generic_visit(node)
+
+    # ------------------------------------------------------------ name uses
+    def visit_Name(self, node: ast.Name) -> None:
+        if (isinstance(node.ctx, ast.Load)
+                and node.id in _DEPRECATED_NAMES
+                and not self.is_deprecated_home):
+            self._emit(node, "CL402",
+                       f"`{node.id}` is a deprecated wrapper; drive "
+                       "repro.api.CocaCluster instead")
+        self.generic_visit(node)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if (isinstance(node.ctx, ast.Load)
+                and node.attr in _DEPRECATED_NAMES
+                and not self.is_deprecated_home):
+            self._emit(node, "CL402",
+                       f"`{node.attr}` is a deprecated wrapper; drive "
+                       "repro.api.CocaCluster instead")
+        self.generic_visit(node)
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+
+
+def _suppressions(source: str) -> tuple[dict[int, set[str]], set[str]]:
+    """(per-line suppressed rule sets, file-wide suppressed rules).
+
+    Comments are found with :mod:`tokenize`, so a ``# cocalint:`` inside a
+    string literal never suppresses anything.  A standalone suppression
+    comment applies to the *next* line (for multi-line statements); an
+    inline one applies to its own line.  Rule "all" suppresses everything.
+    """
+    by_line: dict[int, set[str]] = {}
+    file_wide: set[str] = set()
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(source).readline))
+    except tokenize.TokenError:
+        return by_line, file_wide
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = _SUPPRESS_RE.search(tok.string)
+        if not m:
+            continue
+        kind = m.group(1)
+        rules = {r.strip().upper() for r in m.group(2).split(",") if r.strip()}
+        rules = {("ALL" if r == "ALL" else r) for r in rules}
+        if kind == "disable-file":
+            file_wide |= rules
+        else:
+            line = tok.start[0]
+            standalone = tok.line.lstrip().startswith("#")
+            by_line.setdefault(line, set()).update(rules)
+            if standalone:
+                by_line.setdefault(line + 1, set()).update(rules)
+    return by_line, file_wide
+
+
+def _suppressed(diag: Diagnostic, by_line: dict[int, set[str]],
+                file_wide: set[str]) -> bool:
+    if "ALL" in file_wide or diag.rule in file_wide:
+        return True
+    for line in range(diag.line, max(diag.end_line, diag.line) + 1):
+        rules = by_line.get(line, set())
+        if "ALL" in rules or diag.rule in rules:
+            return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def _collect_jit_wrapped(tree: ast.Module) -> frozenset[str]:
+    """Function names wrapped post-hoc: ``g = jax.jit(f, ...)``."""
+    names: set[str] = set()
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and _attr_chain(node.func) in ("jit", "jax.jit")
+                and node.args and isinstance(node.args[0], ast.Name)):
+            names.add(node.args[0].id)
+    return frozenset(names)
+
+
+def lint_source(source: str, path: str = "<string>", *,
+                in_src: bool | None = None) -> list[Diagnostic]:
+    """Lint one source string.  ``in_src`` controls the src/-only rules
+    (CL403); ``None`` infers it from ``path``."""
+    p = Path(path)
+    if in_src is None:
+        in_src = "src" in p.parts
+    is_home = p.name == "simulation.py" and "core" in p.parts
+    tree = ast.parse(source, filename=path)
+    analyzer = Analyzer(path, in_src=in_src, is_deprecated_home=is_home,
+                        jit_wrapped=_collect_jit_wrapped(tree))
+    analyzer.visit(tree)
+    by_line, file_wide = _suppressions(source)
+    return sorted(
+        (d for d in analyzer.diags if not _suppressed(d, by_line, file_wide)),
+        key=lambda d: (d.line, d.col, d.rule))
+
+
+def lint_file(path: Path | str) -> list[Diagnostic]:
+    p = Path(path)
+    return lint_source(p.read_text(), str(p))
+
+
+def lint_paths(paths: Iterable[Path | str]) -> list[Diagnostic]:
+    """Lint files and/or directories (recursively, ``*.py``)."""
+    diags: list[Diagnostic] = []
+    for entry in paths:
+        p = Path(entry)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            diags.extend(lint_file(f))
+    return diags
