@@ -85,7 +85,8 @@ def _all_layer_sweep(quick: bool):
                      t_fused, f"unfused_us={t_ref:.0f};"
                               f"speedup={rec['speedup']:.2f};impl={impl}"))
     BENCH_LOOKUP_JSON.write_text(json.dumps(
-        {"benchmark": "all_layer_cache_lookup_fused_vs_unfused",
+        {"generated_by": "benchmarks/kernels_bench.py",
+         "benchmark": "all_layer_cache_lookup_fused_vs_unfused",
          "records": records}, indent=2) + "\n")
     return rows
 

@@ -23,6 +23,7 @@ MODULES = [
     "table4_dynamics",
     "table5_chaos",
     "table6_fleet",
+    "table7_topology",
     "fig8_aca",
     "fig9_ablation",
     "fig10_load",

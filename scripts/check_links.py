@@ -28,6 +28,7 @@ REQUIRED_PAGES = [
     "docs/robustness.md",
     "docs/scenarios.md",
     "docs/serving.md",
+    "docs/topology.md",
 ]
 
 

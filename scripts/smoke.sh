@@ -43,6 +43,9 @@ if [[ "$QUICK" == "1" ]]; then
 
   echo "== fleet gate: cache-aware gateway sweep + outage cell (quick) =="
   python -m benchmarks.table6_fleet --quick
+
+  echo "== topology gate: multi-tier escalation sweep + parity cell (quick) =="
+  python -m benchmarks.table7_topology --quick
   exit 0
 fi
 

@@ -31,3 +31,7 @@ from repro.data.scenarios import (  # noqa: F401
     Scenario, ScenarioError, Stationary, TraceReplay, drive_scenario,
     zipf_prior,
 )
+from repro.topology import (  # noqa: F401
+    CacheNode, CacheTopology, TopologyCluster, TopologyError, TopologyResult,
+    TopologyRoundMetrics, check_conservation, depth1,
+)

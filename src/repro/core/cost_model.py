@@ -29,6 +29,7 @@ class CostModel:
     lookup_base: float               # fixed per-lookup cost (s)
     lookup_per_elem: float           # per (class x dim) element cost (s)
     head_cost: float = 0.0           # classifier head (s), paid on miss
+    hop_latency: float = 0.0         # default per-tier escalation hop (s)
 
     @property
     def num_layers(self) -> int:
@@ -41,6 +42,27 @@ class CostModel:
         """(L,) lookup seconds per layer for an ``n_hot``-class cache."""
         return (self.lookup_base
                 + self.lookup_per_elem * np.asarray(self.sem_dims) * n_hot)
+
+    def prefix_compute(self, exit_layer: int) -> float:
+        """Model-compute seconds through cache layer ``exit_layer`` — the
+        ``block_csum[e]`` term of :func:`frame_latency`, host-side.  A client
+        that escalates a miss past its deepest active layer has paid exactly
+        this much compute (``exit_layer >= L`` = the full forward pass)."""
+        csum = np.cumsum(np.asarray(self.block_costs, np.float64))
+        return float(csum[min(int(exit_layer), self.num_layers)])
+
+    def tier_lookup_cost(self, layers, n_hot: int) -> float:
+        """Eq.-(1)/(2) lookup seconds one escalation tier bills: the bill of
+        scanning its ``n_hot`` resident classes at its active ``layers``."""
+        per_layer = self.lookup_costs(int(n_hot))
+        return float(sum(per_layer[int(j)] for j in layers))
+
+    def hop_cost(self, hop_latency: float | None = None) -> float:
+        """One escalation hop (s); ``None`` = this model's default hop."""
+        h = self.hop_latency if hop_latency is None else float(hop_latency)
+        if not (np.isfinite(h) and h >= 0.0):
+            raise ValueError(f"hop latency must be finite and >= 0, got {h}")
+        return float(h)
 
     def saved_time(self) -> np.ndarray:
         """Υ — (L,) model-compute seconds saved by a hit at layer j (§V.B)."""

@@ -692,6 +692,13 @@ class CocaCluster:
         return self._policy
 
     @property
+    def cost_model(self) -> CostModel:
+        """The analytic latency model this session bills rounds with — the
+        escalation layers (:mod:`repro.topology`) bill their hops and tier
+        lookups against the same model."""
+        return self._cm
+
+    @property
     def server(self) -> ServerState | None:
         return self._server
 
@@ -879,6 +886,19 @@ class CocaCluster:
                                                self._mesh)
         return self._alloc_entries
 
+    def gathered_entries(self) -> jax.Array:
+        """Public snapshot of the dense (L, I, d) global table.
+
+        Every *external* table cut — serving-window re-allocation, a
+        topology tier cutting its own cache (:mod:`repro.topology`) — slices
+        this one snapshot via :func:`allocate_subtable`, so N cuts in a
+        round still cost the mesh path one collective (the
+        ``_gathered_entries`` cache)."""
+        if self._server is None:
+            raise RuntimeError("no server: call bootstrap() or "
+                               "attach_server() before gathered_entries()")
+        return self._gathered_entries()
+
     def allocation_context(self, client: int) -> AllocationContext:
         if self._server is None:
             raise RuntimeError("no server: call bootstrap() or "
@@ -925,7 +945,8 @@ class CocaCluster:
     def serving_table(self, *, client: int = 0,
                       tau: np.ndarray | None = None,
                       phi: np.ndarray | None = None,
-                      round_index: int | None = None) -> CacheTable:
+                      round_index: int | None = None,
+                      mem_budget: float | None = None) -> CacheTable:
         """Cut one serving :class:`CacheTable` from the live server with the
         active allocation policy — the online loop's **window-boundary
         re-allocation hook**.
@@ -937,6 +958,12 @@ class CocaCluster:
         served rather than the simulator's client states.  Defaults fall
         back to the engine's own host mirrors (zeros for a cold client).
         Reuses the one-gather-per-round entries cache on the mesh path.
+
+        ``mem_budget`` overrides the per-client byte budget Π for this one
+        cut — how a topology tier (:mod:`repro.topology`) sizes its own
+        cache from the same policy and server snapshot (an edge node's cut
+        at 2Π, a regional node's at 4Π, ...).  ``None`` keeps the
+        configured ``sim.mem_budget`` bit-for-bit.
         """
         if self._server is None:
             raise RuntimeError("no server: call bootstrap() or "
@@ -958,7 +985,8 @@ class CocaCluster:
                         else np.asarray(phi, float)),
             tau=np.asarray(tau), r_est=self._host_r, upsilon=self._host_ups,
             entry_sizes=self._cm.entry_sizes(),
-            mem_budget=self.sim.mem_budget,
+            mem_budget=(self.sim.mem_budget if mem_budget is None
+                        else float(mem_budget)),
             round_frames=self.sim.round_frames)
         return allocate_subtable(self._gathered_entries(),
                                  jnp.asarray(self._policy.allocate(ctx)))

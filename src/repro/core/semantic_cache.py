@@ -19,6 +19,7 @@ bit-parity oracle) elsewhere.
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -167,9 +168,17 @@ class LookupResult(NamedTuple):
     acc: jax.Array | None
 
 
+@partial(jax.jit, static_argnames=("cfg",))
 def lookup_all_layers_ref(table: CacheTable, sems: jax.Array,
                           cfg: CacheConfig) -> LookupResult:
     """Unfused ``lax.scan`` reference for Eq. (1)/(2) across all L layers.
+
+    Jitted at module level (``cfg`` static, like ``round_step``): called
+    eagerly, the fresh ``step`` closure would force ``lax.scan`` to re-trace
+    and re-compile on *every* call — each compile mmaps JIT code pages that
+    are never released, so per-round callers (the topology tier lookups, the
+    serving loop) leak address-space maps until ``vm.max_map_count`` kills
+    the process with a misleading "Cannot allocate memory".
 
     ``sems`` — (B, L, d) pooled semantic vectors at every cache layer.
 

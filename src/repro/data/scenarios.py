@@ -81,17 +81,35 @@ def _resolve_prior(prior, num_classes: int, who: str) -> np.ndarray:
 # --------------------------------------------------------------------------
 
 
+def _base_prior(process, num_classes: int, who: str) -> np.ndarray:
+    """Resolve a process's class marginal from its ``prior`` / ``zipf_alpha``
+    knobs.  ``zipf_alpha`` is the sweepable long-tail skew dial (Snippet-3's
+    α axis); α=0 produces exactly the uniform marginal ``prior=None`` does,
+    bit for bit, so the knob degenerates cleanly."""
+    if process.zipf_alpha is not None:
+        if process.prior is not None:
+            raise ScenarioError(f"{who}: prior= and zipf_alpha= are mutually "
+                                "exclusive (zipf_alpha builds the prior)")
+        a = float(process.zipf_alpha)
+        if not np.isfinite(a) or a < 0:
+            raise ScenarioError(f"{who}: zipf_alpha must be finite and "
+                                f">= 0, got {process.zipf_alpha}")
+        return zipf_prior(num_classes, a)
+    return _resolve_prior(process.prior, num_classes, who)
+
+
 @dataclasses.dataclass(frozen=True)
 class Stationary:
     """Fixed class marginal — the world every pre-PR-4 experiment ran in."""
 
     prior: object = None         # None = uniform; else (I,) weights
+    zipf_alpha: float | None = None   # Zipf skew knob (exclusive with prior)
 
     def validate(self, sc: "Scenario", who: str) -> None:
-        _resolve_prior(self.prior, sc.num_classes, who)
+        _base_prior(self, sc.num_classes, who)
 
     def prior_at(self, round_index: int, num_classes: int) -> np.ndarray:
-        return _resolve_prior(self.prior, num_classes, "Stationary")
+        return _base_prior(self, num_classes, "Stationary")
 
     def labels(self, rng: np.random.Generator, round_index: int,
                frames: int, stay_prob: float, num_classes: int) -> np.ndarray:
@@ -116,9 +134,10 @@ class Drift:
     every: int = 2               # drift period in rounds (ignored w/ schedule)
     shift: int = 1               # class ids the marginal rotates by per event
     schedule: tuple[int, ...] | None = None   # explicit drift rounds
+    zipf_alpha: float | None = None   # Zipf skew knob (exclusive with prior)
 
     def validate(self, sc: "Scenario", who: str) -> None:
-        _resolve_prior(self.prior, sc.num_classes, who)
+        _base_prior(self, sc.num_classes, who)
         if self.schedule is None:
             if self.every < 1:
                 raise ScenarioError(f"{who}: Drift.every must be >= 1, "
@@ -143,7 +162,7 @@ class Drift:
         return round_index // self.every
 
     def prior_at(self, round_index: int, num_classes: int) -> np.ndarray:
-        base = _resolve_prior(self.prior, num_classes, "Drift")
+        base = _base_prior(self, num_classes, "Drift")
         return np.roll(base, self.shift * self.rotations(round_index))
 
     def labels(self, rng: np.random.Generator, round_index: int,

@@ -1,0 +1,26 @@
+"""Multi-tier cache topologies: escalation trees over the CoCa engine.
+
+See :mod:`repro.topology.spec` for the validated tree spec,
+:mod:`repro.topology.placement` for the on-path placement family
+(LCE / LCD / ProbCache), and :mod:`repro.topology.engine` for the
+escalation engine wrapping :class:`~repro.core.engine.CocaCluster`.
+Docs: docs/topology.md.
+"""
+
+from repro.topology.engine import (  # noqa: F401
+    BACKBONE, PlacementEvent, TopologyCluster, TopologyResult,
+    TopologyRoundMetrics, check_conservation,
+)
+from repro.topology.placement import (  # noqa: F401
+    LCD, LCE, PlacementPolicy, ProbCache, resolve_placement,
+)
+from repro.topology.spec import (  # noqa: F401
+    CacheNode, CacheTopology, TopologyError, depth1,
+)
+
+__all__ = [
+    "BACKBONE", "CacheNode", "CacheTopology", "LCD", "LCE",
+    "PlacementEvent", "PlacementPolicy", "ProbCache", "TopologyCluster",
+    "TopologyError", "TopologyResult", "TopologyRoundMetrics",
+    "check_conservation", "depth1", "resolve_placement",
+]

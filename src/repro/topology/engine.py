@@ -1,0 +1,447 @@
+"""The escalation engine: a CocaCluster behind a multi-tier cache topology.
+
+:class:`TopologyCluster` wraps one bootstrapped
+:class:`~repro.core.engine.CocaCluster` and plays its rounds through a
+:class:`~repro.topology.spec.CacheTopology`:
+
+1. **Leaf round, unchanged.**  The client tier *is* today's CoCa round —
+   per-client ACA tables, Eq.-(1)/(2) lookups, Eq.-4/5 merges — delegated to
+   ``cluster.step()`` verbatim.  Clients whose escalation path holds no
+   budgeted tier (the :func:`~repro.topology.spec.depth1` degenerate case)
+   are *completely* untouched: their misses run the backbone locally at the
+   leaf's own billed latency, so the depth-1 topology reproduces the bare
+   cluster bit-for-bit.
+2. **Escalation.**  A frame that misses every activated client layer has
+   paid only its partial forward (compute through the deepest active layer
+   plus its own lookups); it then climbs the client's ``caching_path``.
+   Every visited tier bills ``hop_latency`` + its Eq.-(1)/(2) lookup cost
+   (:meth:`~repro.core.cost_model.CostModel.tier_lookup_cost`) against the
+   tier's *round-start* table — a cut of the same global cache the clients
+   share, sized by the node's byte budget via
+   ``cluster.serving_table(mem_budget=...)`` at init and re-sliced from the
+   live ``cluster.gathered_entries()`` snapshot each round.
+3. **Backbone.**  A frame missing every tier runs the full model at the
+   root (``cost_model.full_latency()``); its prediction is the leaf's model
+   prediction (the client already computed the full forward's logits in the
+   simulator — the backbone is the same model).
+4. **Placement.**  Each resolution above the client applies the configured
+   :mod:`~repro.topology.placement` policy to the down-path; inserted
+   classes join a tier's LRU-ordered resident set and appear in its table
+   from the *next* round (round-start snapshot semantics, like the clients'
+   own allocation).  Draws are keyed ``SeedSequence((seed, round, client))``
+   — bit-reproducible, order-free across clients.
+
+Per-round accounting lands in :class:`TopologyRoundMetrics`; the
+conservation invariants every benchmark cell is gated on live in
+:func:`check_conservation`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import CocaCluster
+from repro.core.metrics import FrameBatch, RoundMetrics
+from repro.core.semantic_cache import allocate_subtable, lookup_all_layers
+from repro.topology.placement import resolve_placement
+from repro.topology.spec import CacheTopology, TopologyError
+
+BACKBONE = "backbone"
+
+
+class PlacementEvent(NamedTuple):
+    """One down-path copy decision — the audit record the LCD/ProbCache
+    invariant tests replay (``resolved_at`` is a node name or
+    :data:`BACKBONE`)."""
+
+    client: int
+    cls: int
+    resolved_at: str
+    target: str
+
+
+class TopologyRoundMetrics(NamedTuple):
+    """One topology round: the adjusted per-frame record + tier accounting.
+
+    ``metrics`` — the canonical :class:`~repro.core.metrics.RoundMetrics`
+    after escalation (``hit`` = resolved by *any* cache tier, ``pred``
+    updated on tier hits, ``latency`` re-billed for escalated frames;
+    ``exit_layer`` keeps the client-tier meaning, ``L`` = escalated).
+    ``leaf_hit`` — the pre-escalation client-tier hit flags.
+    ``resolve_depth`` — per frame: 0 = client hit, ``d >= 1`` = resolved at
+    the ``d``-th budgeted tier up the path, ``len(caching_path) + 1`` = the
+    backbone (1 on a path with no budgeted tier — the local-backbone case).
+    """
+
+    metrics: RoundMetrics
+    leaf_hit: np.ndarray
+    resolve_depth: np.ndarray
+    node_requests: dict
+    node_hits: dict
+    backbone_hits: int
+    placements: tuple
+
+    def escalation_histogram(self) -> np.ndarray:
+        """(max_depth + 1,) — escalated frames per resolve depth (index d =
+        resolved after d upward hops); sums to the leaf misses."""
+        esc = self.resolve_depth[~self.leaf_hit]
+        return np.bincount(esc, minlength=2).astype(np.int64)
+
+    @property
+    def node_hit_ratio(self) -> dict:
+        return {v: self.node_hits[v] / max(self.node_requests[v], 1)
+                for v in self.node_requests}
+
+
+class TopologyResult(NamedTuple):
+    """Session aggregate over (optionally warmup-trimmed) rounds."""
+
+    rounds: int
+    frames: int
+    avg_latency: float
+    accuracy: float
+    hit_ratio: float              # resolved by any cache tier (incl. client)
+    client_hit_ratio: float
+    node_requests: dict
+    node_hits: dict
+    node_hit_ratio: dict
+    backbone_hits: int
+    backbone_ratio: float
+    depth_histogram: np.ndarray
+
+
+def check_conservation(tm: TopologyRoundMetrics) -> list[str]:
+    """The request-accounting invariants, as violated-gate strings.
+
+    * every request resolves exactly once:
+      ``leaf hits + Σ tier hits + backbone hits == total frames``;
+    * the escalation-depth histogram sums to the misses-at-leaves;
+    * a frame's final ``hit`` flag agrees with where it resolved.
+
+    Shared verbatim by ``tests/test_topology.py`` and the
+    ``benchmarks/table7_topology.py`` gate — the tests and the benchmark
+    hold the same line.
+    """
+    bad = []
+    total = tm.metrics.frames
+    leaf_hits = int(tm.leaf_hit.sum())
+    tier_hits = int(sum(tm.node_hits.values()))
+    if leaf_hits + tier_hits + tm.backbone_hits != total:
+        bad.append(f"hit accounting: {leaf_hits} leaf + {tier_hits} tier + "
+                   f"{tm.backbone_hits} backbone != {total} requests")
+    hist = tm.escalation_histogram()
+    if int(hist.sum()) != total - leaf_hits:
+        bad.append(f"escalation histogram sums to {int(hist.sum())}, "
+                   f"expected {total - leaf_hits} leaf misses")
+    if int(hist[0]) != 0:
+        bad.append(f"{int(hist[0])} leaf-missed frames have no escalation "
+                   "depth assigned")
+    cache_hits = int(tm.metrics.hit.sum())
+    if cache_hits != leaf_hits + tier_hits:
+        bad.append(f"final hit flags count {cache_hits}, expected "
+                   f"{leaf_hits} leaf + {tier_hits} tier hits")
+    return bad
+
+
+@dataclasses.dataclass
+class _NodeState:
+    """Host-side mutable state of one budgeted tier."""
+
+    layers: np.ndarray            # int layer ids this tier caches
+    capacity: int                 # max resident classes under the budget
+    recency: dict                 # class id -> last-touch stamp (LRU order)
+    hop: float                    # resolved escalation hop latency (s)
+
+
+class TopologyCluster:
+    """A :class:`~repro.core.engine.CocaCluster` behind an escalation tree.
+
+    ``cluster`` must be constructed with ``num_clients=`` matching
+    ``topology.num_clients`` and bootstrapped before the first
+    :meth:`step`.  ``placement`` — a name (``"lce"`` / ``"lcd"`` /
+    ``"probcache"``) or any :class:`~repro.topology.placement.
+    PlacementPolicy`.  ``seed`` keys the placement draws.
+    """
+
+    def __init__(self, cluster: CocaCluster, topology: CacheTopology, *,
+                 placement="lce", seed: int = 0):
+        if not isinstance(topology, CacheTopology):
+            raise TopologyError(f"topology must be a CacheTopology, "
+                                f"got {type(topology)}")
+        if cluster.num_clients is None:
+            raise TopologyError(
+                "construct the cluster with num_clients= (the topology "
+                f"attaches {topology.num_clients} clients)")
+        if cluster.num_clients != topology.num_clients:
+            raise TopologyError(
+                f"cluster has num_clients={cluster.num_clients}, topology "
+                f"attaches {topology.num_clients}")
+        if topology.caching_nodes() and hasattr(cluster.policy,
+                                                "make_engine"):
+            raise TopologyError(
+                "budgeted tiers cut their tables with the cluster's "
+                "allocation policy; a client-engine baseline policy has "
+                "no table cuts")
+        self._cluster = cluster
+        self._topo = topology
+        self._placement = resolve_placement(placement)
+        self._seed = int(seed)
+        self._nodes: dict | None = None
+        self._round = 0
+        self._clock = 0
+        self._history: list[TopologyRoundMetrics] = []
+
+    # ----------------------------------------------------------- properties
+    @property
+    def cluster(self) -> CocaCluster:
+        return self._cluster
+
+    @property
+    def topology(self) -> CacheTopology:
+        return self._topo
+
+    @property
+    def placement(self):
+        return self._placement
+
+    @property
+    def round_index(self) -> int:
+        return self._round
+
+    @property
+    def history(self) -> list[TopologyRoundMetrics]:
+        return list(self._history)
+
+    def node_classes(self, name: str) -> list[int]:
+        """The tier's resident classes, least-recently-touched first."""
+        self._ensure_nodes()
+        st = self._nodes[name]
+        return sorted(st.recency, key=st.recency.get)
+
+    def node_layers(self, name: str) -> list[int]:
+        self._ensure_nodes()
+        return [int(j) for j in self._nodes[name].layers]
+
+    # ------------------------------------------------------------- tier init
+    def _ensure_nodes(self) -> None:
+        if self._nodes is not None:
+            return
+        cl = self._cluster
+        if cl.server is None:
+            raise TopologyError("bootstrap the cluster before step(): "
+                                "tier cuts need the global table")
+        cm = cl.cost_model
+        sizes = cm.entry_sizes()
+        self._nodes = {}
+        for name in self._topo.caching_nodes():
+            node = self._topo.node(name)
+            subtree = [k for k in range(self._topo.num_clients)
+                       if name in self._topo.path(k)]
+            # the tier's recency view is its subtree's: most recent touch
+            # across the clients whose misses can ever reach it
+            tau = np.maximum.reduce(
+                [np.asarray(cl.allocation_context(k).tau) for k in subtree])
+            cut = cl.serving_table(client=subtree[0], tau=tau,
+                                   mem_budget=node.budget)
+            layers = np.flatnonzero(np.asarray(cut.layer_mask))
+            classes = np.flatnonzero(np.asarray(cut.class_mask))
+            per_class = float(sizes[layers].sum()) if len(layers) else 0.0
+            capacity = (int(node.budget // per_class) if per_class > 0
+                        else 0)
+            recency = {}
+            for c in classes[:capacity]:
+                self._clock += 1
+                recency[int(c)] = self._clock
+            self._nodes[name] = _NodeState(
+                layers=layers, capacity=capacity, recency=recency,
+                hop=cm.hop_cost(node.hop_latency))
+
+    def _node_table(self, st: _NodeState, entries):
+        cfg = self._cluster.sim.cache
+        x = np.zeros((cfg.num_layers, cfg.num_classes), bool)
+        if st.recency and len(st.layers):
+            x[np.ix_(st.layers, sorted(st.recency))] = True
+        return allocate_subtable(entries, jnp.asarray(x))
+
+    # ------------------------------------------------------ placement state
+    def _touch(self, name: str, cls: int) -> None:
+        st = self._nodes[name]
+        if cls in st.recency:
+            self._clock += 1
+            st.recency[cls] = self._clock
+
+    def _insert(self, name: str, cls: int) -> None:
+        st = self._nodes[name]
+        if st.capacity <= 0 or not len(st.layers):
+            return
+        self._clock += 1
+        st.recency[cls] = self._clock
+        while len(st.recency) > st.capacity:
+            evict = min(st.recency, key=st.recency.get)
+            del st.recency[evict]
+
+    # ----------------------------------------------------------------- step
+    def step(self, frames: Sequence) -> TopologyRoundMetrics:
+        """One round: leaf CoCa round, then per-client miss escalation."""
+        frames = [fb if isinstance(fb, FrameBatch) else FrameBatch(*fb)
+                  for fb in frames]
+        self._ensure_nodes()
+        cl = self._cluster
+        topo = self._topo
+        act = cl.active_clients
+        escalating = any(topo.caching_path(k) for k in act)
+        round_index = self._round
+
+        if not escalating:
+            # the degenerate path is *literally* the bare cluster call:
+            # nothing extra touches the round, which is what makes the
+            # depth-1 parity bit-for-bit rather than merely very close
+            leaf = cl.step(frames)
+            node_req = {v: 0 for v in self._nodes}
+            node_hits = {v: 0 for v in self._nodes}
+            depth = np.zeros(leaf.frames, np.int64)
+            depth[~leaf.hit] = 1          # miss = local backbone, one level
+            tm = TopologyRoundMetrics(
+                metrics=leaf, leaf_hit=leaf.hit.copy(), resolve_depth=depth,
+                node_requests=node_req, node_hits=node_hits,
+                backbone_hits=int((~leaf.hit).sum()), placements=())
+            self._round += 1
+            self._history.append(tm)
+            return tm
+
+        cm = cl.cost_model
+        cfg = cl.sim.cache
+        # round-start snapshots: tier tables and client tables are cut from
+        # the same pre-merge server state the clients serve this round with
+        entries = cl.gathered_entries()
+        node_tables = {v: self._node_table(st, entries)
+                       for v, st in self._nodes.items()}
+        client_tables = cl.allocate_tables()
+        leaf = cl.step(frames, tables=client_tables)
+
+        pred = np.array(leaf.pred)
+        hit = np.array(leaf.hit)
+        lat = np.array(leaf.latency, np.float64)
+        depth = np.zeros(leaf.frames, np.int64)
+        node_req = {v: 0 for v in self._nodes}
+        node_hits = {v: 0 for v in self._nodes}
+        backbone = 0
+        events: list[PlacementEvent] = []
+
+        for i, k in enumerate(act):
+            sel = np.flatnonzero(leaf.client == k)
+            miss = sel[~hit[sel]]
+            cpath = topo.caching_path(k)
+            if not len(miss):
+                continue
+            if not cpath:
+                depth[miss] = 1           # CoCa-classic: local backbone
+                backbone += len(miss)
+                continue
+
+            # the escalated frame's bill restarts from the client's partial
+            # forward: compute through its deepest active layer + its own
+            # (all-miss) lookups — the full-forward tail it *didn't* run
+            t = client_tables[i]
+            active_layers = np.flatnonzero(np.asarray(t.layer_mask))
+            n_hot_k = int(np.asarray(t.class_mask).sum())
+            partial = (cm.prefix_compute(int(active_layers[-1]))
+                       if len(active_layers) else 0.0)
+            partial += cm.tier_lookup_cost(active_layers, n_hot_k)
+            lat[miss] = partial
+
+            rng = np.random.default_rng(
+                np.random.SeedSequence((self._seed, round_index, k)))
+            pending = miss
+            d = 0
+            for v in cpath:
+                if not len(pending):
+                    break
+                d += 1
+                st = self._nodes[v]
+                node_req[v] += len(pending)
+                lat[pending] += st.hop + cm.tier_lookup_cost(
+                    st.layers, len(st.recency))
+                if not st.recency or not len(st.layers):
+                    continue
+                look = lookup_all_layers(node_tables[v],
+                                         jnp.asarray(frames[i].sems), cfg)
+                nhit = np.asarray(look.hit)
+                npred = np.asarray(look.pred)
+                local = np.searchsorted(sel, pending)
+                here = nhit[local]
+                resolved = pending[here]
+                if len(resolved):
+                    node_hits[v] += len(resolved)
+                    pred[resolved] = npred[local[here]]
+                    hit[resolved] = True
+                    depth[resolved] = d
+                    below = tuple(reversed(cpath[:d - 1]))
+                    for f in resolved:
+                        c = int(pred[f])
+                        self._touch(v, c)
+                        for tgt in self._placement.copy_targets(below, rng):
+                            self._insert(tgt, c)
+                            events.append(PlacementEvent(k, c, v, tgt))
+                pending = pending[~here]
+
+            if len(pending):              # every tier missed: the backbone
+                lat[pending] += cm.full_latency()
+                depth[pending] = len(cpath) + 1
+                backbone += len(pending)
+                below = tuple(reversed(cpath))
+                for f in pending:
+                    c = int(pred[f])      # leaf kept the model prediction
+                    for tgt in self._placement.copy_targets(below, rng):
+                        self._insert(tgt, c)
+                        events.append(PlacementEvent(k, c, BACKBONE, tgt))
+
+        tm = TopologyRoundMetrics(
+            metrics=leaf._replace(pred=pred, hit=hit, latency=lat),
+            leaf_hit=leaf.hit.copy(), resolve_depth=depth,
+            node_requests=node_req, node_hits=node_hits,
+            backbone_hits=backbone, placements=tuple(events))
+        self._round += 1
+        self._history.append(tm)
+        return tm
+
+    # --------------------------------------------------------------- result
+    def result(self, *, warmup: int = 0) -> TopologyResult:
+        """Aggregate rounds ``>= warmup`` (the Snippet-3 measured split)."""
+        rounds = self._history[warmup:]
+        if not rounds:
+            raise RuntimeError(f"result(warmup={warmup}) has no measured "
+                               f"rounds ({len(self._history)} played)")
+        frames = sum(tm.metrics.frames for tm in rounds)
+        lat = sum(tm.metrics.latency_sum for tm in rounds)
+        correct = sum(tm.metrics.correct for tm in rounds)
+        cache_hits = sum(tm.metrics.hits for tm in rounds)
+        leaf_hits = sum(int(tm.leaf_hit.sum()) for tm in rounds)
+        node_req = {v: 0 for v in self._nodes or {}}
+        node_hits = {v: 0 for v in self._nodes or {}}
+        for tm in rounds:
+            for v in tm.node_requests:
+                node_req[v] += tm.node_requests[v]
+                node_hits[v] += tm.node_hits[v]
+        backbone = sum(tm.backbone_hits for tm in rounds)
+        width = max(len(tm.escalation_histogram()) for tm in rounds)
+        hist = np.zeros(width, np.int64)
+        for tm in rounds:
+            h = tm.escalation_histogram()
+            hist[:len(h)] += h
+        return TopologyResult(
+            rounds=len(rounds), frames=frames,
+            avg_latency=lat / max(frames, 1),
+            accuracy=correct / max(frames, 1),
+            hit_ratio=cache_hits / max(frames, 1),
+            client_hit_ratio=leaf_hits / max(frames, 1),
+            node_requests=node_req, node_hits=node_hits,
+            node_hit_ratio={v: node_hits[v] / max(node_req[v], 1)
+                            for v in node_req},
+            backbone_hits=backbone,
+            backbone_ratio=backbone / max(frames, 1),
+            depth_histogram=hist)

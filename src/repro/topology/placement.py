@@ -1,0 +1,115 @@
+"""On-path placement strategies for the escalation tree.
+
+When a request resolves at an upper tier (or at the backbone), the classical
+in-network caching question is *where to leave a copy* on the way back down
+(arXiv:2010.12899 §II; icarus's strategy axis in SNIPPETS.md Snippet 3).
+These are :class:`~repro.core.engine.AllocationPolicy`-style variants — one
+method, data in / decision out — over the **down-path**: the budgeted tiers
+strictly below the resolving level, ordered from just-below-the-hit toward
+the requesting client.
+
+* :class:`LCE` — leave-copy-everywhere: every down-path tier caches the
+  resolved class.  Fastest convergence, maximal redundancy.
+* :class:`LCD` — leave-copy-down: only the tier immediately below the hit
+  caches it, so a class creeps one level toward clients per repeated hit.
+  By construction it never copies at or above the resolving tier — the
+  invariant ``tests/test_topology.py`` checks on the event log.
+* :class:`ProbCache` — probabilistic insert with path-position weighting:
+  down-path slot ``i`` of ``n`` inserts with probability
+  ``base * (i + 1) / n``, biasing copies toward the requester (the
+  ProbCache "cache weight grows with distance travelled" heuristic).
+
+Placement draws are deterministic per ``(seed, round, client)`` — the
+engine hands each decision the keyed generator for its frame's client, so
+traces replay bit-for-bit (cocalint CL103).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from repro.topology.spec import TopologyError
+
+
+@runtime_checkable
+class PlacementPolicy(Protocol):
+    """Decides which down-path tiers cache a class a higher level resolved.
+
+    ``below`` is ordered from just-below-the-resolving-tier toward the
+    client; the return value must be a subset of it.
+    """
+
+    def copy_targets(self, below: Sequence[str],
+                     rng: np.random.Generator) -> list[str]:
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class LCE:
+    """Leave-copy-everywhere: every tier below the hit takes a copy."""
+
+    name = "lce"
+
+    def copy_targets(self, below: Sequence[str],
+                     rng: np.random.Generator) -> list[str]:
+        return list(below)
+
+
+@dataclasses.dataclass(frozen=True)
+class LCD:
+    """Leave-copy-down: only the tier immediately below the hit."""
+
+    name = "lcd"
+
+    def copy_targets(self, below: Sequence[str],
+                     rng: np.random.Generator) -> list[str]:
+        return list(below[:1])
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbCache:
+    """Probabilistic insert, weighted toward the requesting client."""
+
+    base: float = 0.8
+    name = "probcache"
+
+    def __post_init__(self):
+        if not (np.isfinite(self.base) and 0.0 <= self.base <= 1.0):
+            raise TopologyError(f"ProbCache.base must be in [0, 1], "
+                                f"got {self.base}")
+
+    def insert_prob(self, i: int, n: int) -> float:
+        """Insert probability for down-path slot ``i`` of ``n`` (0 = just
+        below the resolving tier, ``n - 1`` = nearest the client).  In
+        ``[0, 1]`` for every valid slot — a property
+        ``tests/test_topology.py`` sweeps."""
+        if n < 1 or not 0 <= i < n:
+            raise TopologyError(f"slot {i} outside a {n}-tier down-path")
+        return self.base * (i + 1) / n
+
+    def copy_targets(self, below: Sequence[str],
+                     rng: np.random.Generator) -> list[str]:
+        n = len(below)
+        return [v for i, v in enumerate(below)
+                if rng.random() < self.insert_prob(i, n)]
+
+
+def resolve_placement(placement) -> PlacementPolicy:
+    """Resolve ``placement=`` inputs: a registry name or a policy object."""
+    if isinstance(placement, str):
+        name = placement.lower()
+        if name == "lce":
+            return LCE()
+        if name == "lcd":
+            return LCD()
+        if name in ("prob", "probcache"):
+            return ProbCache()
+        raise TopologyError(f"unknown placement name: {placement!r} "
+                            "(known: lce, lcd, probcache)")
+    if not hasattr(placement, "copy_targets"):
+        raise TopologyError(f"placement {placement!r} has no copy_targets() "
+                            "method")
+    return placement

@@ -1,0 +1,177 @@
+"""Multi-tier cache topology specs: client → edge → regional → cloud.
+
+CoCa's deployment (PAPER.md §IV) is a two-level hierarchy — client
+layer-caches under one edge server.  In-network collaborative caching
+(PAPERS.md: arXiv:2010.12899; the icarus experiment grid in SNIPPETS.md
+Snippet 3) generalises that to a *tree* of cache nodes: a miss at a client's
+activated cache layers escalates up the client's root path, each budgeted
+tier answering from its own 2-D cut of the same global cache, before the
+request falls through to the backbone model at the root.
+
+A :class:`CacheTopology` is the declarative spec of that tree, validated at
+construction exactly like :class:`~repro.data.scenarios.Scenario`: a spec
+that exists is playable, and every malformed shape — duplicate node names,
+unknown parents, parent cycles, zero-or-many roots, nodes no client can ever
+reach (orphans), attach points that do not exist — raises
+:class:`TopologyError` before any engine is built.
+
+Two node flavours, by ``budget``:
+
+* ``budget=None`` (or 0) — a **control-plane** node: it exists in the tree
+  (today's CoCa edge server: merge + allocation duties) but owns no
+  data-path cache, so escalation passes it without billing.  The degenerate
+  :func:`depth1` topology — one control-plane edge node, no upper tiers —
+  is bit-for-bit today's :class:`~repro.core.engine.CocaCluster`.
+* ``budget>0`` — a **caching tier**: it cuts its own table from the shared
+  global cache at this byte budget (``CocaCluster.serving_table(
+  mem_budget=...)``) and answers escalated lookups, billing
+  ``hop_latency`` + its Eq.-(1)/(2) lookup cost per visit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+class TopologyError(ValueError):
+    """An invalid CacheTopology / CacheNode / placement specification."""
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheNode:
+    """One inner node of the escalation tree.
+
+    ``parent`` — name of the next node toward the cloud; ``None`` marks the
+    root.  ``budget`` — bytes of 2-D cache this tier owns (``None``/0 = a
+    control-plane node with no data-path cache).  ``hop_latency`` — seconds
+    billed when a request escalates *to* this tier's cache; ``None`` defers
+    to :attr:`repro.core.cost_model.CostModel.hop_latency`.
+    """
+
+    name: str
+    parent: str | None = None
+    budget: float | None = None
+    hop_latency: float | None = None
+
+    @property
+    def caching(self) -> bool:
+        return self.budget is not None and self.budget > 0
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheTopology:
+    """A validated tree of cache nodes with clients attached at its leaves.
+
+    ``nodes`` — the inner nodes; exactly one must be the root
+    (``parent=None``).  ``client_attach`` — one node name per client: the
+    first tier that client's misses escalate to; the client's escalation
+    path is the attach node's parent chain up to the root.
+    """
+
+    nodes: tuple[CacheNode, ...]
+    client_attach: tuple[str, ...]
+
+    def __post_init__(self):
+        if not self.nodes:
+            raise TopologyError("a CacheTopology needs at least one node")
+        names = [n.name for n in self.nodes]
+        dupes = {m for m in names if names.count(m) > 1}
+        if dupes:
+            raise TopologyError(f"duplicate node names: {sorted(dupes)}")
+        byname = {n.name: n for n in self.nodes}
+        roots = [n.name for n in self.nodes if n.parent is None]
+        if len(roots) != 1:
+            raise TopologyError(f"exactly one root (parent=None) required, "
+                                f"got {sorted(roots) or 'none'}")
+        for n in self.nodes:
+            if not n.name:
+                raise TopologyError("node names must be non-empty")
+            if n.parent is not None and n.parent not in byname:
+                raise TopologyError(f"node {n.name!r}: unknown parent "
+                                    f"{n.parent!r}")
+            if n.parent == n.name:
+                raise TopologyError(f"node {n.name!r} is its own parent")
+            if n.budget is not None and not (
+                    np.isfinite(n.budget) and n.budget >= 0):
+                raise TopologyError(f"node {n.name!r}: budget must be "
+                                    f"finite and >= 0, got {n.budget}")
+            if n.hop_latency is not None and not (
+                    np.isfinite(n.hop_latency) and n.hop_latency >= 0):
+                raise TopologyError(f"node {n.name!r}: hop_latency must be "
+                                    f"finite and >= 0, got {n.hop_latency}")
+        # cycle rejection: every parent chain must terminate at the root
+        for n in self.nodes:
+            seen = {n.name}
+            cur = n
+            while cur.parent is not None:
+                if cur.parent in seen:
+                    raise TopologyError(
+                        f"parent cycle through node {cur.parent!r}")
+                seen.add(cur.parent)
+                cur = byname[cur.parent]
+        if not self.client_attach:
+            raise TopologyError("a CacheTopology needs at least one client "
+                                "(client_attach is empty)")
+        for k, a in enumerate(self.client_attach):
+            if a not in byname:
+                raise TopologyError(f"client {k} attaches to unknown node "
+                                    f"{a!r}")
+        # orphan rejection: a node on no client's root path is dead cache
+        reachable: set[str] = set()
+        for k in range(len(self.client_attach)):
+            reachable.update(self.path(k))
+        orphans = sorted(set(names) - reachable)
+        if orphans:
+            raise TopologyError(f"orphan nodes on no client's escalation "
+                                f"path: {orphans}")
+
+    # ------------------------------------------------------------- accessors
+    @property
+    def num_clients(self) -> int:
+        return len(self.client_attach)
+
+    @property
+    def root(self) -> str:
+        return next(n.name for n in self.nodes if n.parent is None)
+
+    def node(self, name: str) -> CacheNode:
+        for n in self.nodes:
+            if n.name == name:
+                return n
+        raise KeyError(name)
+
+    def path(self, client: int) -> tuple[str, ...]:
+        """Client ``client``'s escalation path: attach node → ... → root."""
+        byname = {n.name: n for n in self.nodes}
+        out = []
+        cur = self.client_attach[client]
+        while cur is not None:
+            out.append(cur)
+            cur = byname[cur].parent
+        return tuple(out)
+
+    def caching_path(self, client: int) -> tuple[str, ...]:
+        """The budgeted tiers on :meth:`path`, in escalation order.  Empty
+        for a client under control-plane nodes only (the CoCa-classic
+        case: a miss runs the backbone locally)."""
+        return tuple(v for v in self.path(client) if self.node(v).caching)
+
+    def caching_nodes(self) -> tuple[str, ...]:
+        return tuple(n.name for n in self.nodes if n.caching)
+
+    def depth(self) -> int:
+        """Longest client escalation path, in nodes."""
+        return max(len(self.path(k)) for k in range(self.num_clients))
+
+
+def depth1(num_clients: int, edge: str = "edge") -> CacheTopology:
+    """The degenerate CoCa topology: one control-plane edge node, no upper
+    tiers.  :class:`~repro.topology.engine.TopologyCluster` over this spec
+    reproduces a bare :class:`~repro.core.engine.CocaCluster` bit-for-bit
+    (the parity oracle ``tests/test_topology.py`` pins)."""
+    if num_clients < 1:
+        raise TopologyError(f"num_clients must be >= 1, got {num_clients}")
+    return CacheTopology(nodes=(CacheNode(edge),),
+                         client_attach=(edge,) * num_clients)

@@ -1,0 +1,55 @@
+"""The benchmark registry stays closed: every sweep module is runnable via
+``benchmarks/run.py`` and every checked-in ``BENCH_*.json`` artifact names
+the module that emitted it.
+
+These are text-level checks on purpose — importing ``benchmarks.run`` would
+drag jax initialisation and the full sweep modules into the tier-1 loop;
+the registry contract is about what's *written down*, not what executes.
+"""
+
+import json
+import re
+from pathlib import Path
+
+BENCH = Path(__file__).resolve().parent.parent / "benchmarks"
+
+
+def _registered_modules() -> list[str]:
+    """The MODULES list in benchmarks/run.py, parsed from source."""
+    src = (BENCH / "run.py").read_text()
+    block = re.search(r"MODULES\s*=\s*\[(.*?)\]", src, re.S).group(1)
+    return re.findall(r'"([^"]+)"', block)
+
+
+def test_every_sweep_module_is_registered_in_run_py():
+    """A ``table*.py`` / ``fig*.py`` that exists but is not in MODULES is a
+    benchmark nobody runs — the drift this test exists to catch."""
+    registered = set(_registered_modules())
+    on_disk = {p.stem for p in BENCH.glob("table*.py")} | \
+              {p.stem for p in BENCH.glob("fig*.py")}
+    missing = sorted(on_disk - registered)
+    assert missing == [], f"benchmarks not registered in run.py: {missing}"
+
+
+def test_registered_modules_exist_and_are_unique():
+    mods = _registered_modules()
+    assert len(mods) == len(set(mods)), "duplicate entries in MODULES"
+    gone = [m for m in mods if not (BENCH / f"{m}.py").exists()]
+    assert gone == [], f"MODULES entries without a module file: {gone}"
+
+
+def test_every_bench_artifact_names_its_emitter():
+    """Every ``BENCH_*.json`` carries ``generated_by`` pointing at an
+    existing, registered benchmarks module — artifact provenance survives
+    module renames."""
+    registered = set(_registered_modules())
+    arts = sorted(BENCH.glob("BENCH_*.json"))
+    assert arts, "no BENCH_*.json artifacts found"
+    for art in arts:
+        data = json.loads(art.read_text())
+        src = data.get("generated_by")
+        assert src, f"{art.name}: missing generated_by"
+        path = Path(__file__).resolve().parent.parent / src
+        assert path.exists(), f"{art.name}: generated_by {src!r} not on disk"
+        assert path.parent == BENCH and path.stem in registered, \
+            f"{art.name}: emitter {src!r} is not a registered benchmark"

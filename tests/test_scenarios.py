@@ -456,3 +456,59 @@ def test_run_simulation_reference_forwards_mesh(rng):
                                plain.per_round_latency)
     np.testing.assert_array_equal(meshed.exit_histogram,
                                   plain.exit_histogram)
+
+
+# ---------------------------------------------------------------------------
+# Zipf-α knob on stream processes
+# ---------------------------------------------------------------------------
+
+def test_zipf_alpha_empirical_frequencies_match_pmf():
+    """With stay_prob=0 the Stationary stream is iid from the Zipf marginal:
+    at a fixed seed the empirical class frequencies track the pmf within a
+    max-deviation bound that a wrong marginal (uniform) clearly breaks."""
+    alpha, rounds, frames = 1.2, 40, 64
+    sc = Scenario(num_classes=I, rounds=rounds, frames=frames, seed=11,
+                  clients=(ClientSpec(process=Stationary(zipf_alpha=alpha),
+                                      stay_prob=0.0),))
+    draws = np.concatenate([lab[0] for lab in scenario_labels(sc)])
+    emp = np.bincount(draws, minlength=I) / draws.size
+    pmf = zipf_prior(I, alpha)
+    assert np.abs(emp - pmf).max() < 0.03
+    # the same bound rejects the uniform marginal: the knob actually skews
+    assert np.abs(emp - np.full(I, 1.0 / I)).max() > 0.1
+
+
+def test_zipf_alpha_zero_degenerates_to_uniform_bit_for_bit():
+    """α=0 is *exactly* prior=None: same marginal, same label stream."""
+    np.testing.assert_array_equal(zipf_prior(I, 0.0), np.full(I, 1.0 / I))
+    mk = lambda proc: Scenario(num_classes=I, rounds=R, frames=F, seed=7,
+                               clients=(ClientSpec(process=proc),
+                                        ClientSpec(process=proc)))
+    for a, b in ((Stationary(zipf_alpha=0.0), Stationary()),
+                 (Drift(zipf_alpha=0.0, shift=3), Drift(shift=3))):
+        for la, lb in zip(scenario_labels(mk(a)), scenario_labels(mk(b))):
+            assert sorted(la) == sorted(lb)
+            for k in la:
+                np.testing.assert_array_equal(la[k], lb[k])
+
+
+def test_zipf_alpha_drift_rotates_the_zipf_marginal():
+    d = Drift(zipf_alpha=1.0, every=2, shift=3)
+    np.testing.assert_array_equal(d.prior_at(0, I), zipf_prior(I, 1.0))
+    np.testing.assert_array_equal(d.prior_at(2, I),
+                                  np.roll(zipf_prior(I, 1.0), 3))
+
+
+def test_zipf_alpha_validation_errors():
+    with pytest.raises(ScenarioError, match="mutually exclusive"):
+        Scenario(num_classes=I, rounds=2, frames=F, clients=(
+            ClientSpec(process=Stationary(prior=zipf_prior(I, 1.0),
+                                          zipf_alpha=1.0)),))
+    with pytest.raises(ScenarioError, match="zipf_alpha"):
+        Scenario(num_classes=I, rounds=2, frames=F, clients=(
+            ClientSpec(process=Stationary(zipf_alpha=-0.5)),))
+    with pytest.raises(ScenarioError, match="zipf_alpha"):
+        Scenario(num_classes=I, rounds=2, frames=F, clients=(
+            ClientSpec(process=Drift(zipf_alpha=float("nan"), shift=3)),))
+    with pytest.raises(ScenarioError, match=">= 0"):
+        zipf_prior(I, -1.0)

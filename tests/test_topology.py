@@ -1,0 +1,363 @@
+"""Multi-tier topology subsystem: parity, conservation, placement, billing.
+
+The invariants this file pins are the subsystem's safety net:
+
+* **Depth-1 parity** — a :func:`~repro.topology.depth1` topology over a
+  ``CocaCluster`` reproduces the bare cluster **bit-for-bit**: per-frame
+  metrics (latencies included), server tables, and the allocation stream.
+* **Conservation** — on every sweep cell (shape × placement × Zipf-α):
+  Σ per-tier hits + backbone hits == total requests, and the
+  escalation-depth histogram sums to the misses-at-leaves
+  (:func:`~repro.topology.check_conservation`, the same gate
+  ``benchmarks/table7_topology.py`` runs).
+* **Placement** — LCD never copies at or above the resolving tier
+  (event-log replay); ProbCache's insert probability stays in [0, 1].
+* **Billing** — an escalated frame's latency decomposes exactly into
+  client partial forward + per-tier (hop + lookup) bills + backbone.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import calibrate
+from repro.topology import (BACKBONE, CacheNode, CacheTopology, LCD, LCE,
+                            ProbCache, TopologyCluster, TopologyError,
+                            check_conservation, depth1)
+
+I, L, D, F, K, R = 12, 4, 16, 30, 3, 4
+
+
+def _world(theta=0.05, mem_budget=600.0):
+    """A small world tuned so client tables cover only a slice of the class
+    space: leaf misses are plentiful and escalation actually escalates."""
+    cache = api.CacheConfig(num_classes=I, num_layers=L, sem_dim=D,
+                            theta=theta)
+    sim = api.SimulationConfig(cache=cache, round_frames=F,
+                               mem_budget=mem_budget)
+    cm = calibrate(np.linspace(2.0, 1.0, L + 1), np.full(L, D), head_cost=0.5)
+
+    centroids = jax.random.normal(jax.random.PRNGKey(0), (L, I, D))
+
+    def taps_for(labels, seed):
+        k = jax.random.PRNGKey(seed)
+        lab = jnp.asarray(labels)
+        sems = centroids[:, lab, :].transpose(1, 0, 2) + \
+            0.6 * jax.random.normal(k, (len(labels), L, D))
+        logits = (jax.nn.one_hot(lab, I) * 4.0
+                  + jax.random.normal(jax.random.fold_in(k, 1),
+                                      (len(labels), I)))
+        return sems, logits
+
+    def tap_shared(labels):
+        return taps_for(labels, 999)
+
+    def tap_fn(r, k_, labels):
+        return taps_for(labels, 7 + 13 * r + 131 * k_)
+
+    rng = np.random.default_rng(3)
+    labels = rng.integers(0, I, size=(R, K, F))
+    shared = np.tile(np.arange(I), 8)
+    server = api.bootstrap_server(jax.random.PRNGKey(0), sim, tap_shared,
+                                  shared, cm)
+    return sim, cm, server, tap_fn, labels
+
+
+def _batches(tap_fn, labels, r):
+    return [api.FrameBatch(*tap_fn(r, k, labels[r, k]), labels=labels[r, k])
+            for k in range(labels.shape[1])]
+
+
+def _three_tier(budgets=(1_200.0, 2_400.0, 4_800.0),
+                hops=(0.05, 0.15, 0.4)) -> CacheTopology:
+    """edge → regional → cloud chain, budgets growing toward the cloud."""
+    return CacheTopology(
+        nodes=(CacheNode("cloud", None, budget=budgets[2],
+                         hop_latency=hops[2]),
+               CacheNode("regional", "cloud", budget=budgets[1],
+                         hop_latency=hops[1]),
+               CacheNode("edge", "regional", budget=budgets[0],
+                         hop_latency=hops[0])),
+        client_attach=("edge",) * K)
+
+
+def _tree_topology() -> CacheTopology:
+    """Clients split across two edges under one regional, cloud on top."""
+    return CacheTopology(
+        nodes=(CacheNode("cloud", None, budget=4_800.0, hop_latency=0.4),
+               CacheNode("regional", "cloud", budget=2_400.0,
+                         hop_latency=0.15),
+               CacheNode("edge0", "regional", budget=1_200.0,
+                         hop_latency=0.05),
+               CacheNode("edge1", "regional", budget=1_200.0,
+                         hop_latency=0.05)),
+        client_attach=("edge0", "edge0", "edge1"))
+
+
+# ---------------------------------------------------------------------------
+# depth-1 parity: the degenerate topology IS today's CocaCluster
+# ---------------------------------------------------------------------------
+
+
+def test_depth1_parity_bit_for_bit():
+    sim, cm, server, tap_fn, labels = _world(mem_budget=8_000.0)
+    bare = api.CocaCluster(sim, cm, server=server, num_clients=K)
+    wrapped = api.CocaCluster(sim, cm, server=server, num_clients=K)
+    topo = TopologyCluster(wrapped, depth1(K))
+
+    for r in range(R):
+        mb = bare.step(_batches(tap_fn, labels, r))
+        tm = topo.step(_batches(tap_fn, labels, r))
+        for field in ("pred", "hit", "exit_layer", "latency", "labels",
+                      "client"):
+            np.testing.assert_array_equal(getattr(mb, field),
+                                          getattr(tm.metrics, field), field)
+        assert check_conservation(tm) == []
+        # the degenerate escalation record: every miss is one hop to the
+        # (local) backbone, no tier ever consulted
+        assert tm.node_requests == {} and tm.node_hits == {}
+        assert tm.backbone_hits == int((~mb.hit).sum())
+        assert tm.placements == ()
+
+    # identical server evolution: tables and status vectors, not just metrics
+    np.testing.assert_array_equal(np.asarray(bare.server.entries),
+                                  np.asarray(wrapped.server.entries))
+    np.testing.assert_array_equal(np.asarray(bare.server.phi_global),
+                                  np.asarray(wrapped.server.phi_global))
+    np.testing.assert_array_equal(np.asarray(bare.server.r_est),
+                                  np.asarray(wrapped.server.r_est))
+    b_res, t_res = bare.result(), wrapped.result()
+    assert b_res.avg_latency == t_res.avg_latency        # bitwise, not approx
+    assert b_res.accuracy == t_res.accuracy
+    np.testing.assert_array_equal(b_res.per_round_latency,
+                                  t_res.per_round_latency)
+
+    # and the next allocation the two clusters would cut is the same
+    for a, b in zip(bare.allocate_tables(), wrapped.allocate_tables()):
+        np.testing.assert_array_equal(np.asarray(a.class_mask),
+                                      np.asarray(b.class_mask))
+        np.testing.assert_array_equal(np.asarray(a.layer_mask),
+                                      np.asarray(b.layer_mask))
+
+
+def test_depth1_aggregate_result_matches_simulation_result():
+    sim, cm, server, tap_fn, labels = _world()
+    cl = api.CocaCluster(sim, cm, server=server, num_clients=K)
+    topo = TopologyCluster(cl, depth1(K))
+    for r in range(R):
+        topo.step(_batches(tap_fn, labels, r))
+    res = topo.result()
+    base = cl.result()
+    assert res.avg_latency == base.avg_latency
+    assert res.accuracy == base.accuracy
+    assert res.hit_ratio == base.hit_ratio
+    assert res.client_hit_ratio == base.hit_ratio
+    assert res.backbone_ratio == 1.0 - base.hit_ratio
+
+
+# ---------------------------------------------------------------------------
+# conservation invariants on every sweep cell
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_conservation_on_every_sweep_cell():
+    sim, cm, server, tap_fn, _ = _world()
+    shapes = {"path": _three_tier, "tree": _tree_topology}
+    tier_hits_seen = 0
+    for shape_id, (shape, make) in enumerate(shapes.items()):
+        for placement in ("lce", "lcd", "probcache"):
+            for alpha in (0.0, 1.2):
+                prior = api.zipf_prior(I, alpha)
+                rng = np.random.default_rng(
+                    np.random.SeedSequence((11, shape_id)))
+                labels = rng.choice(I, size=(R, K, F), p=prior)
+                cl = api.CocaCluster(sim, cm, server=server, num_clients=K)
+                topo = TopologyCluster(cl, make(), placement=placement,
+                                       seed=23)
+                for r in range(R):
+                    tm = topo.step(_batches(tap_fn, labels, r))
+                    bad = check_conservation(tm)
+                    assert bad == [], (shape, placement, alpha, r, bad)
+                res = topo.result(warmup=1)
+                tier_hits_seen += sum(res.node_hits.values())
+                # per-node accounting is closed under the sweep too
+                assert res.backbone_hits + sum(res.node_hits.values()) \
+                    + int(round(res.client_hit_ratio * res.frames)) \
+                    == res.frames
+    assert tier_hits_seen > 0, "sweep never exercised a tier hit"
+
+
+def test_escalation_depth_histogram_shape():
+    sim, cm, server, tap_fn, labels = _world()
+    cl = api.CocaCluster(sim, cm, server=server, num_clients=K)
+    topo = TopologyCluster(cl, _three_tier(), placement="lce")
+    tm = topo.step(_batches(tap_fn, labels, 0))
+    assert check_conservation(tm) == []          # the escalating-path cell
+    hist = tm.escalation_histogram()
+    assert hist[0] == 0                          # every miss got a depth
+    assert int(hist.sum()) == int((~tm.leaf_hit).sum())
+    assert len(hist) <= 3 + 2                    # ≤ 3 tiers + backbone bin
+
+
+# ---------------------------------------------------------------------------
+# placement-policy invariants
+# ---------------------------------------------------------------------------
+
+
+def _client_caching_path(topo: TopologyCluster, client: int):
+    return topo.topology.caching_path(client)
+
+
+def test_lcd_never_copies_at_or_above_hit_tier():
+    sim, cm, server, tap_fn, labels = _world()
+    cl = api.CocaCluster(sim, cm, server=server, num_clients=K)
+    topo = TopologyCluster(cl, _three_tier(), placement="lcd")
+    events = []
+    for r in range(R):
+        events += list(topo.step(_batches(tap_fn, labels, r)).placements)
+    assert events, "LCD run produced no placement events to audit"
+    for ev in events:
+        cpath = list(_client_caching_path(topo, ev.client))
+        if ev.resolved_at == BACKBONE:
+            # "down" from the backbone is the topmost tier, exactly
+            assert ev.target == cpath[-1], ev
+        else:
+            d = cpath.index(ev.resolved_at)
+            assert d >= 1, f"copy from the first tier has no down-path: {ev}"
+            # LCD: one level below the hit, never at/above it
+            assert ev.target == cpath[d - 1], ev
+            assert cpath.index(ev.target) < d
+
+
+def test_lce_copies_every_tier_below():
+    sim, cm, server, tap_fn, labels = _world()
+    cl = api.CocaCluster(sim, cm, server=server, num_clients=K)
+    topo = TopologyCluster(cl, _three_tier(), placement="lce")
+    events = []
+    for r in range(R):
+        events += list(topo.step(_batches(tap_fn, labels, r)).placements)
+    assert events
+    # group events by (client, class, resolver) per occurrence is ambiguous;
+    # the safe invariant: every target sits strictly below its resolver
+    for ev in events:
+        cpath = list(_client_caching_path(topo, ev.client))
+        top = len(cpath) if ev.resolved_at == BACKBONE \
+            else cpath.index(ev.resolved_at)
+        assert cpath.index(ev.target) < top, ev
+
+
+def test_probcache_insert_prob_in_unit_interval():
+    p = ProbCache(base=0.8)
+    for n in range(1, 9):
+        for i in range(n):
+            assert 0.0 <= p.insert_prob(i, n) <= 1.0
+    # monotone toward the client: closer tiers are likelier to cache
+    probs = [p.insert_prob(i, 5) for i in range(5)]
+    assert probs == sorted(probs)
+    with pytest.raises(TopologyError):
+        ProbCache(base=1.5)
+    with pytest.raises(TopologyError):
+        ProbCache(base=-0.1)
+    with pytest.raises(TopologyError):
+        p.insert_prob(5, 5)
+
+
+def test_tier_capacity_never_exceeded():
+    sim, cm, server, tap_fn, labels = _world()
+    cl = api.CocaCluster(sim, cm, server=server, num_clients=K)
+    topo = TopologyCluster(cl, _three_tier(), placement="lce")
+    for r in range(R):
+        topo.step(_batches(tap_fn, labels, r))
+        for name in topo.topology.caching_nodes():
+            st = topo._nodes[name]
+            assert len(topo.node_classes(name)) <= st.capacity, name
+
+
+# ---------------------------------------------------------------------------
+# escalation billing decomposes against the cost model
+# ---------------------------------------------------------------------------
+
+
+def test_escalated_latency_decomposes_exactly():
+    sim, cm, server, tap_fn, labels = _world()
+    cl = api.CocaCluster(sim, cm, server=server, num_clients=K)
+    topo = TopologyCluster(cl, _three_tier(), placement="lce")
+    # tier state must be read *before* the step mutates it (placement
+    # inserts change resident counts mid-round for *later* clients'
+    # bills, so the exact decomposition is audited on the first client)
+    topo._ensure_nodes()
+    resident = {v: len(topo._nodes[v].recency) for v in topo._nodes}
+    tables = cl.allocate_tables()
+    tm = topo.step(_batches(tap_fn, labels, 0))
+
+    first = cl.active_clients[0]
+    checked = 0
+    for f in np.flatnonzero(~tm.leaf_hit):
+        k = int(tm.metrics.client[f])
+        if k != first:
+            continue
+        i = cl.active_clients.index(k)
+        cpath = _client_caching_path(topo, k)
+        d = int(tm.resolve_depth[f])
+        active = np.flatnonzero(np.asarray(tables[i].layer_mask))
+        n_hot = int(np.asarray(tables[i].class_mask).sum())
+        want = (cm.prefix_compute(int(active[-1])) if len(active) else 0.0)
+        want += cm.tier_lookup_cost(active, n_hot)
+        for v in cpath[:min(d, len(cpath))]:
+            node = topo.topology.node(v)
+            want += cm.hop_cost(node.hop_latency)
+            want += cm.tier_lookup_cost(topo._nodes[v].layers, resident[v])
+        if d == len(cpath) + 1:
+            want += cm.full_latency()
+        assert tm.metrics.latency[f] == pytest.approx(want, rel=1e-9), f
+        checked += 1
+    assert checked > 0
+
+
+def test_leaf_hit_latencies_untouched_by_escalation():
+    sim, cm, server, tap_fn, labels = _world()
+    bare = api.CocaCluster(sim, cm, server=server, num_clients=K)
+    wrapped = api.CocaCluster(sim, cm, server=server, num_clients=K)
+    topo = TopologyCluster(wrapped, _three_tier())
+    mb = bare.step(_batches(tap_fn, labels, 0))
+    tm = topo.step(_batches(tap_fn, labels, 0))
+    np.testing.assert_array_equal(mb.hit, tm.leaf_hit)
+    np.testing.assert_array_equal(mb.latency[mb.hit],
+                                  tm.metrics.latency[tm.leaf_hit])
+    np.testing.assert_array_equal(mb.pred[mb.hit],
+                                  tm.metrics.pred[tm.leaf_hit])
+
+
+# ---------------------------------------------------------------------------
+# construction errors
+# ---------------------------------------------------------------------------
+
+
+def test_topology_cluster_construction_errors():
+    sim, cm, server, _, _ = _world()
+    cl = api.CocaCluster(sim, cm, server=server, num_clients=K)
+    with pytest.raises(TopologyError, match="num_clients"):
+        TopologyCluster(cl, depth1(K + 1))
+    with pytest.raises(TopologyError, match="num_clients="):
+        TopologyCluster(api.CocaCluster(sim, cm, server=server), depth1(K))
+    with pytest.raises(TopologyError, match="CacheTopology"):
+        TopologyCluster(cl, "edge")
+    with pytest.raises(TopologyError, match="unknown placement"):
+        TopologyCluster(cl, depth1(K), placement="mru")
+    engine_cl = api.CocaCluster(sim, cm, policy="lru", server=server,
+                                num_clients=K)
+    with pytest.raises(TopologyError, match="client-engine"):
+        TopologyCluster(engine_cl, _three_tier())
+    # ...but the degenerate topology has no tiers to cut: baselines pass
+    TopologyCluster(engine_cl, depth1(K))
+
+
+def test_unbootstrapped_cluster_rejected_at_first_step():
+    sim, cm, _, tap_fn, labels = _world()
+    cl = api.CocaCluster(sim, cm, num_clients=K)
+    topo = TopologyCluster(cl, _three_tier())
+    with pytest.raises(TopologyError, match="bootstrap"):
+        topo.step(_batches(tap_fn, labels, 0))

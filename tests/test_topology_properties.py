@@ -1,0 +1,263 @@
+"""Property tests for the multi-tier topology spec and placement family.
+
+Three invariant families, each over randomly generated inputs:
+
+* **Spec validation is total** — every tree the generator builds by the
+  rules (parents point at earlier nodes, every leaf gets a client) is
+  accepted, and every rule-breaking mutation (duplicate names, parent
+  cycles, orphan nodes, unknown parents, zero/two roots, no clients) is
+  rejected with :class:`~repro.topology.TopologyError` at construction.
+* **Placement is lawful** — for any down-path, LCE copies everywhere
+  below, LCD copies at most one tier (the one immediately below the hit),
+  ProbCache's targets are a subset of the path with insert probabilities
+  in [0, 1], monotone toward the client.
+* **Replay is deterministic** — the same seed replays the same session
+  bit-for-bit (placement draws are keyed ``SeedSequence((seed, round,
+  client))`` tuples, never shared stream state), and different seeds key
+  different draw streams.
+
+Runs under real hypothesis when installed, else under the deterministic
+fallback engine in ``tests/_hypothesis_fallback.py`` (see
+``tests/conftest.py``) — the strategies below stay inside the fallback's
+supported surface (integers / booleans / lists / composite / sampled_from).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.topology import (CacheNode, CacheTopology, LCD, LCE, ProbCache,
+                            TopologyError, depth1, resolve_placement)
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def topo_specs(draw):
+    """A random *valid* topology: node i's parent is a random earlier node
+    (so chains terminate at node 0, the unique root), budgets/hops drawn
+    from small grids, and one client attached at every leaf (orphan-free
+    by construction)."""
+    n = draw(st.integers(min_value=1, max_value=6))
+    parents = [None] + [draw(st.integers(min_value=0, max_value=i - 1))
+                        for i in range(1, n)]
+    budgets = [draw(st.sampled_from([None, 0.0, 512.0, 4096.0]))
+               for _ in range(n)]
+    hops = [draw(st.sampled_from([None, 0.0, 0.25])) for _ in range(n)]
+    nodes = tuple(
+        CacheNode(f"n{i}", None if parents[i] is None else f"n{parents[i]}",
+                  budget=budgets[i], hop_latency=hops[i])
+        for i in range(n))
+    leaves = [i for i in range(n) if i not in parents[1:]]
+    extra = draw(st.lists(st.integers(min_value=0, max_value=n - 1),
+                          min_size=0, max_size=3))
+    attach = tuple(f"n{i}" for i in leaves + extra)
+    return CacheTopology(nodes=nodes, client_attach=attach)
+
+
+@settings(max_examples=30, deadline=None)
+@given(topo_specs())
+def test_generated_specs_are_coherent(topo):
+    """A spec that constructs is playable: every client path runs attach →
+    root, the caching path is the budgeted subsequence, and every node is
+    on some client's path (no orphans survived validation)."""
+    assert topo.root == "n0"
+    on_a_path = set()
+    for k in range(topo.num_clients):
+        p = topo.path(k)
+        assert p[0] == topo.client_attach[k]
+        assert p[-1] == topo.root
+        assert len(set(p)) == len(p)                    # acyclic
+        cp = topo.caching_path(k)
+        assert cp == tuple(v for v in p if topo.node(v).caching)
+        on_a_path.update(p)
+    assert on_a_path == {n.name for n in topo.nodes}
+    assert set(topo.caching_nodes()) == {
+        n.name for n in topo.nodes if n.caching}
+    assert topo.depth() == max(len(topo.path(k))
+                               for k in range(topo.num_clients))
+
+
+@settings(max_examples=30, deadline=None)
+@given(topo_specs(), st.integers(min_value=0, max_value=5))
+def test_invalid_mutations_rejected(topo, which):
+    """Each structural corruption of a valid spec raises TopologyError."""
+    nodes = topo.nodes
+    if which == 0:                                       # duplicate name
+        broken = nodes + (CacheNode("n0", parent=topo.root),)
+        with pytest.raises(TopologyError, match="duplicate"):
+            CacheTopology(broken, topo.client_attach)
+    elif which == 1:                                     # unknown parent
+        broken = nodes + (CacheNode("zz", parent="ghost"),)
+        with pytest.raises(TopologyError, match="unknown parent"):
+            CacheTopology(broken, topo.client_attach)
+    elif which == 2:                                     # two roots
+        broken = nodes + (CacheNode("zz", parent=None),)
+        with pytest.raises(TopologyError, match="exactly one root"):
+            CacheTopology(broken, topo.client_attach)
+    elif which == 3:                                     # no clients
+        with pytest.raises(TopologyError, match="at least one client"):
+            CacheTopology(nodes, ())
+    elif which == 4:                                     # attach to nowhere
+        with pytest.raises(TopologyError, match="unknown node"):
+            CacheTopology(nodes, topo.client_attach + ("ghost",))
+    else:                                                # disconnected cycle
+        broken = nodes + (CacheNode("c0", parent="c1"),
+                          CacheNode("c1", parent="c0"))
+        with pytest.raises(TopologyError, match="cycle"):
+            CacheTopology(broken, topo.client_attach)
+
+
+def test_orphan_and_self_parent_rejection():
+    """The two corruptions the random mutator can't synthesise generically:
+    a reachable-but-unattached branch, and a node parenting itself."""
+    with pytest.raises(TopologyError, match="orphan"):
+        CacheTopology((CacheNode("root"), CacheNode("dead", "root")),
+                      client_attach=("root",))
+    with pytest.raises(TopologyError, match="own parent"):
+        CacheTopology((CacheNode("root"), CacheNode("a", "a")),
+                      client_attach=("a",))
+    with pytest.raises(TopologyError, match="at least one node"):
+        CacheTopology((), ("edge",))
+    with pytest.raises(TopologyError, match="budget"):
+        CacheTopology((CacheNode("root", budget=-1.0),), ("root",))
+    with pytest.raises(TopologyError, match="hop_latency"):
+        CacheTopology((CacheNode("root", hop_latency=float("nan")),),
+                      ("root",))
+    with pytest.raises(TopologyError):
+        depth1(0)
+
+
+# ---------------------------------------------------------------------------
+# placement laws over random down-paths
+# ---------------------------------------------------------------------------
+
+
+def _below(n):
+    return tuple(f"t{i}" for i in range(n))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=6), st.integers(min_value=0,
+                                                          max_value=2 ** 31))
+def test_placement_targets_lawful(n, seed):
+    below = _below(n)
+    rng = np.random.default_rng(seed)
+    assert LCE().copy_targets(below, rng) == list(below)
+    lcd = LCD().copy_targets(below, rng)
+    assert lcd == list(below[:1])
+    assert len(lcd) <= 1
+    prob = ProbCache(base=0.7).copy_targets(below, rng)
+    assert set(prob) <= set(below)
+    # order preserved: targets appear in down-path order
+    idx = [below.index(t) for t in prob]
+    assert idx == sorted(idx)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=8),
+       st.sampled_from([0.0, 0.3, 0.8, 1.0]))
+def test_probcache_probability_law(n, base):
+    p = ProbCache(base=base)
+    probs = [p.insert_prob(i, n) for i in range(n)]
+    assert all(0.0 <= q <= 1.0 for q in probs)
+    assert probs == sorted(probs)              # monotone toward the client
+    assert probs[-1] == pytest.approx(base)    # tier nearest the requester
+    if base == 0.0:
+        rng = np.random.default_rng(0)
+        assert p.copy_targets(_below(n), rng) == []
+    if base == 1.0:
+        # the slot nearest the client has insert_prob exactly 1: it always
+        # caches (rng.random() < 1.0 is certain); upper slots stay chancy
+        rng = np.random.default_rng(0)
+        assert _below(n)[-1] in p.copy_targets(_below(n), rng)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 31))
+def test_probcache_draws_reproducible(seed):
+    a = ProbCache().copy_targets(_below(5),
+                                 np.random.default_rng(seed))
+    b = ProbCache().copy_targets(_below(5),
+                                 np.random.default_rng(seed))
+    assert a == b
+
+
+def test_resolve_placement_names():
+    assert isinstance(resolve_placement("lce"), LCE)
+    assert isinstance(resolve_placement("LCD"), LCD)
+    assert isinstance(resolve_placement("prob"), ProbCache)
+    assert isinstance(resolve_placement("probcache"), ProbCache)
+    custom = LCD()
+    assert resolve_placement(custom) is custom
+    with pytest.raises(TopologyError, match="unknown placement"):
+        resolve_placement("mru")
+    with pytest.raises(TopologyError, match="placement"):
+        resolve_placement(42)
+
+
+# ---------------------------------------------------------------------------
+# same-seed replay determinism (full sessions — kept tiny)
+# ---------------------------------------------------------------------------
+
+
+def _session(seed):
+    import jax
+    import jax.numpy as jnp
+
+    from repro import api
+    from repro.core import calibrate
+    from repro.topology import TopologyCluster
+
+    I, L, D, F, K, R = 8, 3, 8, 16, 2, 3
+    cache = api.CacheConfig(num_classes=I, num_layers=L, sem_dim=D,
+                            theta=0.05)
+    sim = api.SimulationConfig(cache=cache, round_frames=F, mem_budget=400.0)
+    cm = calibrate(np.linspace(2.0, 1.0, L + 1), np.full(L, D),
+                   head_cost=0.5)
+    cent = jax.random.normal(jax.random.PRNGKey(0), (L, I, D))
+
+    def taps(labels, s):
+        k = jax.random.PRNGKey(s)
+        lab = jnp.asarray(labels)
+        sems = cent[:, lab, :].transpose(1, 0, 2) + \
+            0.5 * jax.random.normal(k, (len(labels), L, D))
+        logits = (jax.nn.one_hot(lab, I) * 4.0
+                  + jax.random.normal(jax.random.fold_in(k, 1),
+                                      (len(labels), I)))
+        return sems, logits
+
+    rng = np.random.default_rng(5)
+    labels = rng.integers(0, I, size=(R, K, F))
+    server = api.bootstrap_server(jax.random.PRNGKey(0), sim,
+                                  lambda lab: taps(lab, 999),
+                                  np.tile(np.arange(I), 6), cm)
+    cl = api.CocaCluster(sim, cm, server=server, num_clients=K)
+    topo = CacheTopology(
+        nodes=(CacheNode("cloud", None, budget=1_600.0, hop_latency=0.3),
+               CacheNode("edge", "cloud", budget=800.0, hop_latency=0.1)),
+        client_attach=("edge",) * K)
+    tc = TopologyCluster(cl, topo, placement="probcache", seed=seed)
+    out = []
+    for r in range(R):
+        fb = [api.FrameBatch(*taps(labels[r, k], 7 + 13 * r + 131 * k),
+                             labels=labels[r, k]) for k in range(K)]
+        tm = tc.step(fb)
+        out.append((tm.metrics.latency.copy(), tm.metrics.pred.copy(),
+                    tm.resolve_depth.copy(), tuple(tm.placements)))
+    return out
+
+
+@settings(max_examples=2, deadline=None)
+@given(st.integers(min_value=0, max_value=1_000))
+def test_same_seed_replays_bit_for_bit(seed):
+    a, b = _session(seed), _session(seed)
+    for (la, pa, da, ea), (lb, pb, db, eb) in zip(a, b):
+        np.testing.assert_array_equal(la, lb)
+        np.testing.assert_array_equal(pa, pb)
+        np.testing.assert_array_equal(da, db)
+        assert ea == eb
