@@ -37,10 +37,14 @@ def _all_layer_sweep(quick: bool):
     tracked from PR 1 on (interpret-mode caveat applies on CPU: the
     emulated-kernel time is not TPU time; the stable signals are the
     unfused-reference column, the op-count reduction, and
-    correctness-at-scale of the tiled path)."""
+    correctness-at-scale of the tiled path).  Every shape runs twice —
+    float32 and int8 (bf16-scale) entries — so the sweep records the
+    quantized parity claim and the larger int8 class block alongside the
+    fp32 baseline."""
     from repro.core.semantic_cache import (CacheConfig, CacheTable,
                                            l2_normalize, lookup_all_layers,
-                                           lookup_all_layers_ref)
+                                           lookup_all_layers_ref,
+                                           quantize_table)
     from repro.kernels import common as kcommon
     from repro.kernels.cache_lookup import default_interpret
 
@@ -55,35 +59,60 @@ def _all_layer_sweep(quick: bool):
     for B, L, I, d in grid:
         k = jax.random.PRNGKey(L * 1000 + I)
         entries = l2_normalize(jnp.abs(jax.random.normal(k, (L, I, d))))
-        table = CacheTable(entries, jnp.ones(I, bool), jnp.ones(L, bool))
+        fp32 = CacheTable(entries, jnp.ones(I, bool), jnp.ones(L, bool))
         sems = jnp.abs(jax.random.normal(jax.random.fold_in(k, 1), (B, L, d)))
         cfg = CacheConfig(num_classes=I, num_layers=L, sem_dim=d, theta=0.05)
-        fits = kcommon.single_pass_fits(L, I, d)
-        impl = "single" if fits else "tiled"
-        # jit both closures so padding/dispatch glue is compiled on each side
-        fused_jit = jax.jit(lambda s: lookup_all_layers(table, s, cfg,
-                                                        impl="fused"))
-        ref_jit = jax.jit(lambda s: lookup_all_layers_ref(table, s, cfg))
-        t_fused = _time(fused_jit, sems)
-        t_ref = _time(ref_jit, sems)
-        i_block = kcommon.pick_class_block(L, d)
-        rec = {"B": B, "L": L, "I": I, "d": d,
-               "fused_us": round(t_fused, 1), "unfused_us": round(t_ref, 1),
-               "speedup": round(t_ref / max(t_fused, 1e-9), 3),
-               "impl": impl,
-               "single_pass_vmem_mb": round(
-                   kcommon.lookup_single_pass_vmem_bytes(L, I, d) / 2**20, 2),
-               "tiled_vmem_mb": round(
-                   kcommon.lookup_tiled_vmem_bytes(L, i_block, d) / 2**20, 2),
-               "i_block": i_block,
-               "vmem_budget_mb": round(kcommon.vmem_budget_bytes() / 2**20, 2),
-               "single_pass_fits_vmem": fits,
-               "backend": jax.default_backend(),
-               "interpret": default_interpret()}
-        records.append(rec)
-        rows.append((f"kernels/cache_lookup_all_layers_B{B}_L{L}_I{I}",
-                     t_fused, f"unfused_us={t_ref:.0f};"
-                              f"speedup={rec['speedup']:.2f};impl={impl}"))
+        for entry_dtype in ("float32", "int8"):
+            table = quantize_table(fp32) if entry_dtype == "int8" else fp32
+            fits = kcommon.single_pass_fits(L, I, d, entry_dtype=entry_dtype)
+            impl = "single" if fits else "tiled"
+            # jit both closures so padding/dispatch glue is compiled on
+            # each side
+            fused_jit = jax.jit(lambda s, t=table: lookup_all_layers(
+                t, s, cfg, impl="fused"))
+            ref_jit = jax.jit(lambda s, t=table: lookup_all_layers_ref(
+                t, s, cfg))
+            t_fused = _time(fused_jit, sems)
+            t_ref = _time(ref_jit, sems)
+            # parity gate material: the fused kernel dequantizes in-register
+            # with the same elementwise op the reference materialises, so
+            # preds/exits must match exactly and scores to float tolerance
+            fused_out = fused_jit(sems)
+            ref_out = ref_jit(sems)
+            score_maxdiff = float(jnp.max(jnp.abs(fused_out.scores
+                                                  - ref_out.scores)))
+            decisions_equal = bool(
+                (fused_out.pred == ref_out.pred).all()
+                & (fused_out.hit == ref_out.hit).all()
+                & (fused_out.exit_layer == ref_out.exit_layer).all())
+            i_block = kcommon.pick_class_block(L, d, entry_dtype=entry_dtype)
+            rec = {"B": B, "L": L, "I": I, "d": d,
+                   "entry_dtype": entry_dtype,
+                   "fused_us": round(t_fused, 1),
+                   "unfused_us": round(t_ref, 1),
+                   "speedup": round(t_ref / max(t_fused, 1e-9), 3),
+                   "impl": impl,
+                   "score_maxdiff": score_maxdiff,
+                   "decisions_equal": decisions_equal,
+                   "single_pass_vmem_mb": round(
+                       kcommon.lookup_single_pass_vmem_bytes(
+                           L, I, d, entry_dtype=entry_dtype) / 2**20, 2),
+                   "tiled_vmem_mb": round(
+                       kcommon.lookup_tiled_vmem_bytes(
+                           L, i_block, d, entry_dtype=entry_dtype)
+                       / 2**20, 2),
+                   "i_block": i_block,
+                   "vmem_budget_mb": round(
+                       kcommon.vmem_budget_bytes() / 2**20, 2),
+                   "single_pass_fits_vmem": fits,
+                   "backend": jax.default_backend(),
+                   "interpret": default_interpret()}
+            records.append(rec)
+            rows.append((f"kernels/cache_lookup_all_layers_B{B}_L{L}_I{I}"
+                         f"_{entry_dtype}",
+                         t_fused, f"unfused_us={t_ref:.0f};"
+                                  f"speedup={rec['speedup']:.2f};impl={impl};"
+                                  f"decisions_equal={decisions_equal}"))
     BENCH_LOOKUP_JSON.write_text(json.dumps(
         {"generated_by": "benchmarks/kernels_bench.py",
          "benchmark": "all_layer_cache_lookup_fused_vs_unfused",
@@ -133,3 +162,55 @@ def run(quick: bool = False):
     rows.append(("kernels/ssd_scan", _time(
         lambda *aa: ops.ssd_scan(*aa, chunk=32), x, dt, a, Bm, Cm), "S=128"))
     return rows
+
+
+def check(data: dict) -> list[str]:
+    """Acceptance gates for BENCH_lookup.json — correctness/parity claims
+    only, never interpret-mode wall time (see the module caveat)."""
+    bad = []
+    recs = data.get("records", [])
+    if not recs:
+        bad.append("no lookup sweep records")
+    for c in recs:
+        key = (f"B{c['B']}_L{c['L']}_I{c['I']}_d{c['d']}"
+               f"_{c.get('entry_dtype', 'float32')}")
+        if not c.get("decisions_equal", False):
+            bad.append(f"{key}: fused hit/pred/exit diverged from the "
+                       "reference")
+        if c.get("score_maxdiff", 1.0) > 1e-4:
+            bad.append(f"{key}: fused score drift {c['score_maxdiff']} "
+                       "exceeds float tolerance vs the reference")
+        if c.get("tiled_vmem_mb", 0) > c.get("vmem_budget_mb", 0):
+            bad.append(f"{key}: chosen i_block {c['i_block']} oversubscribes "
+                       "the VMEM budget")
+    # the int8 slab is ~4x smaller: for every cell shape the quantized
+    # class block must be at least the float32 one
+    by_shape: dict = {}
+    for c in recs:
+        by_shape.setdefault((c["B"], c["L"], c["I"], c["d"]), {})[
+            c.get("entry_dtype", "float32")] = c
+    for shape, pair in by_shape.items():
+        if "int8" in pair and "float32" in pair:
+            if pair["int8"]["i_block"] < pair["float32"]["i_block"]:
+                bad.append(f"{shape}: int8 i_block {pair['int8']['i_block']} "
+                           f"below float32 {pair['float32']['i_block']}")
+    return bad
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CPU-friendly quick profile")
+    args = ap.parse_args()
+    for r in run(quick=args.quick):
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+    data = json.loads(BENCH_LOOKUP_JSON.read_text())
+    n_eq = sum(c.get("decisions_equal", False) for c in data["records"])
+    print(f"# lookup: {len(data['records'])} cells, decisions_equal="
+          f"{n_eq}/{len(data['records'])} -> {BENCH_LOOKUP_JSON.name}")
+    violations = check(data)
+    for v in violations:
+        print(f"# GATE FAILED: {v}")
+    sys.exit(1 if violations else 0)

@@ -1,0 +1,176 @@
+"""Fused Eq.-4/5 merge-kernel benchmark: one scatter-accumulate launch per
+round vs. the sequential per-client ``lax.scan`` reference.
+
+Emits BENCH_merge.json.  The gates (:func:`check`) are **correctness
+claims**, not wall-time claims: interpret-mode timings on this CPU container
+measure the *emulated* kernel (documented in EXPERIMENTS.md), so the stable
+signals are
+
+* the fused path is **bit-for-bit** equal to the scanned oracle on every
+  cell (all four ServerState leaves),
+* excluded uploads leave the state untouched and a zero-``u_touched`` round
+  leaves the entries bitwise intact,
+* the HBM-traffic model: the scan streams the (L, I, d) table through HBM
+  ``2·K`` times per round (read + write per client) while the fused kernel
+  holds the running block in VMEM scratch and crosses exactly twice.
+
+Every cell keys its RNG as ``SeedSequence((seed, K, L, I, d))`` — no shared
+stream state, so adding/removing cells never perturbs a neighbour's draw
+(bench seed hygiene; a shared counter flipped a gate once).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BENCH_MERGE_JSON = Path(__file__).resolve().parent / "BENCH_merge.json"
+
+SEED = 0
+
+
+def _time(fn, *args, reps=3):
+    jax.block_until_ready(fn(*args))            # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6   # us
+
+
+def _cell_world(K, L, I, d, *, touched_p=0.3, zero_touched=False):
+    """ServerState + a K-batched upload set, keyed per cell."""
+    from repro.core.client import ClientUpload
+    from repro.core.semantic_cache import l2_normalize
+    from repro.core.server import ServerState
+
+    rng = np.random.default_rng(np.random.SeedSequence((SEED, K, L, I, d)))
+    server = ServerState(
+        entries=l2_normalize(jnp.asarray(
+            rng.normal(size=(L, I, d)).astype(np.float32))),
+        phi_global=jnp.asarray(
+            np.abs(rng.normal(size=I)).astype(np.float32) * 10),
+        r_est=jnp.asarray(np.sort(rng.uniform(size=L)).astype(np.float32)),
+        upsilon=jnp.asarray(np.linspace(30.0, 5.0, L, dtype=np.float32)))
+    touched = (np.zeros((K, L, I), bool) if zero_touched
+               else rng.random((K, L, I)) < touched_p)
+    uploads = ClientUpload(
+        tau=jnp.zeros((K, I), jnp.int32),
+        phi=jnp.asarray(rng.integers(0, 5, size=(K, I)).astype(np.int32)),
+        u=jnp.asarray(rng.normal(size=(K, L, I, d)).astype(np.float32)),
+        u_touched=jnp.asarray(touched),
+        hit_counts=jnp.asarray(rng.integers(0, 10, (K, L)).astype(np.int32)),
+        lookup_counts=jnp.asarray(
+            rng.integers(0, 20, (K, L)).astype(np.int32)))
+    include = jnp.asarray(rng.random(K) < 0.8).at[0].set(True)
+    return server, uploads, include
+
+
+def _leaf_maxdiff(a, b):
+    return max(float(jnp.max(jnp.abs(
+        getattr(a, n).astype(jnp.float32) - getattr(b, n).astype(jnp.float32)
+    ))) if getattr(a, n).size else 0.0 for n in type(a)._fields)
+
+
+def run(quick: bool = False):
+    from repro.core.server import ServerConfig, merge_round_jit
+
+    grid = ([(3, 4, 256, 32), (2, 6, 1024, 64)] if quick
+            else [(2, 4, 256, 32), (4, 6, 1024, 64), (8, 12, 2048, 64),
+                  (16, 12, 4096, 64), (4, 24, 8192, 64)])
+    scfg_ref = ServerConfig(merge_impl="ref")
+    scfg_fused = ServerConfig(merge_impl="fused")
+
+    records, rows = [], []
+    for K, L, I, d in grid:
+        server, uploads, include = _cell_world(K, L, I, d)
+        ref_out = merge_round_jit(server, uploads, include, scfg_ref)
+        fused_out = merge_round_jit(server, uploads, include, scfg_fused)
+        maxdiff = _leaf_maxdiff(fused_out, ref_out)
+
+        t_ref = _time(lambda s, u, i: merge_round_jit(s, u, i, scfg_ref),
+                      server, uploads, include)
+        t_fused = _time(lambda s, u, i: merge_round_jit(s, u, i, scfg_fused),
+                        server, uploads, include)
+
+        # all-excluded round: the state must come back bitwise unchanged
+        none = jnp.zeros((K,), bool)
+        excl = merge_round_jit(server, uploads, none, scfg_fused)
+        excluded_unchanged = _leaf_maxdiff(excl, server) == 0.0
+
+        rec = {"K": K, "L": L, "I": I, "d": d,
+               "fused_us": round(t_fused, 1), "ref_us": round(t_ref, 1),
+               "max_abs_diff": maxdiff,
+               "bit_exact": maxdiff == 0.0,
+               "excluded_unchanged": excluded_unchanged,
+               # HBM crossings of the (L, I, d) table per round: the scan
+               # reads + writes it once per client; the fused kernel keeps
+               # the running block in VMEM scratch across the client axis.
+               "table_crossings_ref": 2 * K,
+               "table_crossings_fused": 2,
+               "table_mb": round(L * I * d * 4 / 2**20, 2),
+               "backend": jax.default_backend()}
+        records.append(rec)
+        rows.append((f"kernels/cache_merge_round_K{K}_L{L}_I{I}", t_fused,
+                     f"ref_us={t_ref:.0f};bit_exact={maxdiff == 0.0};"
+                     f"crossings={2 * K}->2"))
+
+    # identity cell: zero u_touched keeps the entries bitwise intact
+    server, uploads, include = _cell_world(*grid[0][:4], zero_touched=True)
+    out = merge_round_jit(server, uploads, include, scfg_fused)
+    identity = float(jnp.max(jnp.abs(out.entries - server.entries))) == 0.0
+
+    BENCH_MERGE_JSON.write_text(json.dumps(
+        {"generated_by": "benchmarks/merge_bench.py",
+         "benchmark": "fused_eq45_merge_vs_scanned_reference",
+         "quick": quick,
+         "seed_scheme": "SeedSequence((seed, K, L, I, d)) per cell",
+         "zero_touched_identity": identity,
+         "records": records}, indent=2) + "\n")
+    return rows
+
+
+def check(data: dict) -> list[str]:
+    """The acceptance gates smoke.sh/CI hold BENCH_merge.json to.
+    Parity/invariant claims only — never interpret-mode wall time."""
+    bad = []
+    if not data.get("records"):
+        bad.append("no benchmark cells recorded")
+    for c in data.get("records", []):
+        key = f"K{c['K']}_L{c['L']}_I{c['I']}_d{c['d']}"
+        if not c["bit_exact"]:
+            bad.append(f"{key}: fused merge diverged from the scanned "
+                       f"reference (max_abs_diff={c['max_abs_diff']})")
+        if not c["excluded_unchanged"]:
+            bad.append(f"{key}: an all-excluded round mutated server state")
+        if c["table_crossings_fused"] >= c["table_crossings_ref"] \
+                and c["K"] > 1:
+            bad.append(f"{key}: fused HBM crossings "
+                       f"{c['table_crossings_fused']} not below scan's "
+                       f"{c['table_crossings_ref']}")
+    if not data.get("zero_touched_identity", False):
+        bad.append("zero-u_touched round did not keep entries bitwise intact")
+    return bad
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CPU-friendly quick profile")
+    args = ap.parse_args()
+    for r in run(quick=args.quick):
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+    data = json.loads(BENCH_MERGE_JSON.read_text())
+    n_exact = sum(c["bit_exact"] for c in data["records"])
+    print(f"# merge: {len(data['records'])} cells, bit_exact="
+          f"{n_exact}/{len(data['records'])} -> {BENCH_MERGE_JSON.name}")
+    violations = check(data)
+    for v in violations:
+        print(f"# GATE FAILED: {v}")
+    sys.exit(1 if violations else 0)

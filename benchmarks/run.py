@@ -29,6 +29,7 @@ MODULES = [
     "fig10_load",
     "theta_schedule",
     "kernels_bench",
+    "merge_bench",
     "roofline",
 ]
 

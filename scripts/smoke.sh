@@ -46,6 +46,9 @@ if [[ "$QUICK" == "1" ]]; then
 
   echo "== topology gate: multi-tier escalation sweep + parity cell (quick) =="
   python -m benchmarks.table7_topology --quick
+
+  echo "== merge gate: fused Eq.-4/5 kernel parity cells (quick) =="
+  python -m benchmarks.merge_bench --quick
   exit 0
 fi
 
@@ -70,3 +73,6 @@ python -m benchmarks.table5_chaos --quick
 
 echo "== fleet gate: cache-aware gateway sweep + outage cell (quick) =="
 python -m benchmarks.table6_fleet --quick
+
+echo "== merge gate: fused Eq.-4/5 kernel parity cells (quick) =="
+python -m benchmarks.merge_bench --quick

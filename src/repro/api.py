@@ -24,7 +24,8 @@ from repro.core.engine import (  # noqa: F401
 from repro.core.metrics import FrameBatch, RoundMetrics  # noqa: F401
 from repro.core.semantic_cache import CacheConfig, CacheTable  # noqa: F401
 from repro.core.server import (  # noqa: F401
-    ServerConfig, ServerState, upload_digest, validate_upload,
+    ServerConfig, ServerState, merge_round, merge_round_jit, upload_digest,
+    validate_table, validate_upload,
 )
 from repro.data.scenarios import (  # noqa: F401
     Burst, BurstArrivals, ClientSpec, Drift, PoissonArrivals, RequestStream,

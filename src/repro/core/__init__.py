@@ -6,16 +6,18 @@ The session-style entry point is :class:`repro.core.engine.CocaCluster`
 """
 from repro.core.semantic_cache import (  # noqa: F401
     CacheConfig, CacheTable, LookupResult, allocate_subtable, cosine_scores,
-    discriminative_score, empty_table, l2_normalize, lookup_all_layers,
-    lookup_all_layers_ref, pool_semantic,
+    dequantize_entries, dequantize_table, discriminative_score, empty_table,
+    l2_normalize, lookup_all_layers, lookup_all_layers_ref, pool_semantic,
+    quantize_entries, quantize_table,
 )
 from repro.core.client import (  # noqa: F401
     AbsorptionConfig, ClientState, ClientUpload, RoundOutput, init_client,
     make_upload, reset_round, run_round,
 )
 from repro.core.server import (  # noqa: F401
-    ServerConfig, ServerState, global_update, init_server,
-    profile_initial_cache, upload_digest, validate_upload,
+    ServerConfig, ServerState, global_update, init_server, merge_round,
+    merge_round_jit, profile_initial_cache, upload_digest, validate_table,
+    validate_upload,
 )
 from repro.core.aca import (  # noqa: F401
     AllocationRequest, aca_allocate, class_scores, fixed_allocate,

@@ -77,7 +77,7 @@ from repro.core.metrics import FrameBatch, RoundMetrics
 from repro.core.semantic_cache import (CacheConfig, CacheTable,
                                        allocate_subtable, lookup_all_layers)
 from repro.core.server import (ServerConfig, ServerState, global_update,
-                               global_update_body, init_server,
+                               init_server, merge_round,
                                profile_initial_cache)
 
 # --------------------------------------------------------------------------
@@ -498,7 +498,12 @@ class AdaptiveAbsorption:
 
 
 def _stack_tables(tables: list[CacheTable]) -> CacheTable:
-    return CacheTable(*(jnp.stack(leaf) for leaf in zip(*tables)))
+    entries, class_mask, layer_mask, scale = zip(*tables)
+    if any((s is None) != (scale[0] is None) for s in scale):
+        raise ValueError("cannot stack mixed float32/int8 cache tables")
+    return CacheTable(jnp.stack(entries), jnp.stack(class_mask),
+                      jnp.stack(layer_mask),
+                      None if scale[0] is None else jnp.stack(scale))
 
 
 def _init_clients_batched(cfg: CacheConfig, num_clients: int) -> ClientState:
@@ -546,15 +551,7 @@ def round_step(states: ClientState, tables: CacheTable, sems: jax.Array,
         if upload_mask is not None:
             include = include & upload_mask
         uploads = make_upload(out.state)             # leading K axis on leaves
-
-        def merge(srv, inp):
-            up, inc = inp
-            new = global_update_body(srv, up, scfg)
-            srv = jax.tree_util.tree_map(
-                lambda n, o: jnp.where(inc, n, o), new, srv)
-            return srv, None
-
-        server, _ = jax.lax.scan(merge, server, (uploads, include))
+        server = merge_round(server, uploads, include, scfg)
 
     return out.state, server, metrics
 
@@ -925,7 +922,8 @@ class CocaCluster:
         return [allocate_subtable(
                     entries,
                     jnp.asarray(self._policy.allocate(
-                        self.allocation_context(k))))
+                        self.allocation_context(k))),
+                    entry_dtype=self.sim.cache.entry_dtype)
                 for k in self.active_clients]
 
     # -------------------------------------------------- serving-loop hooks
@@ -989,7 +987,8 @@ class CocaCluster:
                         else float(mem_budget)),
             round_frames=self.sim.round_frames)
         return allocate_subtable(self._gathered_entries(),
-                                 jnp.asarray(self._policy.allocate(ctx)))
+                                 jnp.asarray(self._policy.allocate(ctx)),
+                                 entry_dtype=self.sim.cache.entry_dtype)
 
     def serving_tables(self, taus: dict[int, np.ndarray], *,
                        round_index: int | None = None

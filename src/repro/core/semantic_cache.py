@@ -45,6 +45,15 @@ class CacheConfig:
     # Landscape-dependent: the paper uses 0.012 (ResNet) / 0.035 (VGG); our
     # synthetic-tap landscape calibrates to ~0.055-0.1 for the <3% loss SLO.
     theta: float | tuple = 0.10
+    # Storage dtype of *allocated* (client/serving/tier) cache entries:
+    # "float32" (exact, the default) or "int8" — symmetric per-(layer, class)
+    # quantization with bf16 scales (the serving/kv_quant.py idiom), cutting
+    # lookup bytes ~4× and roughly doubling the classes per VMEM block
+    # (repro.kernels.common.pick_class_block).  The *server's* global table
+    # and Eq.-3/4 update tensors stay float32 — only the downloaded lookup
+    # cuts are quantized, bounding the drift to the lookup scores
+    # (tests/test_quant_cache.py documents the error analysis).
+    entry_dtype: str = "float32"
 
     def theta_vec(self):
         import jax.numpy as jnp
@@ -57,14 +66,19 @@ class CacheConfig:
 class CacheTable(NamedTuple):
     """A (possibly partially-allocated) semantic cache.
 
-    ``entries``    — (L, I, d) float32, rows L2-normalised where valid.
-    ``class_mask`` — (I,) bool, hot-spot classes present in this cache.
-    ``layer_mask`` — (L,) bool, cache layers activated by the server.
+    ``entries``     — (L, I, d) float32 rows (L2-normalised where valid), or
+                      int8 quantized rows when ``entry_scale`` is set.
+    ``class_mask``  — (I,) bool, hot-spot classes present in this cache.
+    ``layer_mask``  — (L,) bool, cache layers activated by the server.
+    ``entry_scale`` — ``None`` for float32 tables; (L, I) bf16 per-row
+                      symmetric dequantization scales for int8 tables
+                      (``entries[l, i] ≈ q[l, i] * entry_scale[l, i]``).
     """
 
     entries: jax.Array
     class_mask: jax.Array
     layer_mask: jax.Array
+    entry_scale: jax.Array | None = None
 
     @property
     def num_layers(self) -> int:
@@ -73,6 +87,10 @@ class CacheTable(NamedTuple):
     @property
     def num_classes(self) -> int:
         return self.entries.shape[1]
+
+    @property
+    def quantized(self) -> bool:
+        return self.entry_scale is not None
 
 
 def empty_table(cfg: CacheConfig) -> CacheTable:
@@ -85,6 +103,58 @@ def empty_table(cfg: CacheConfig) -> CacheTable:
 
 def l2_normalize(x: jax.Array, axis: int = -1, eps: float = 1e-8) -> jax.Array:
     return x / (jnp.linalg.norm(x, axis=axis, keepdims=True) + eps)
+
+
+# ---------------------------------------------------------------------------
+# int8 entry quantization (the serving/kv_quant.py idiom, per cache row)
+# ---------------------------------------------------------------------------
+
+
+def quantize_entries(entries: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-(layer, class) int8 quantization with bf16 scales.
+
+    Same recipe as :func:`repro.serving.kv_quant.quantize` with one
+    refinement: the rounding step divides by the *stored* (bf16-rounded)
+    scale, not the exact float32 one, so dequantization satisfies the exact
+    bound ``|q * scale - x| ≤ scale / 2`` elementwise — the property
+    ``tests/test_quant_cache.py`` pins down.  (Rounding against the f32
+    scale would add a ``127 * |scale_bf16 - scale_f32|`` term.)
+
+    Returns ``(q (L, I, d) int8, scale (L, I) bf16)``.
+    """
+    scale = jnp.max(jnp.abs(entries), axis=-1) / 127.0          # (L, I) f32
+    scale = jnp.maximum(scale, 1e-12).astype(jnp.bfloat16)
+    sf = scale.astype(jnp.float32)[..., None]
+    q = jnp.clip(jnp.round(entries / sf), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_entries(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_entries`: ``q * scale`` in float32."""
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+
+
+# allocate_subtable runs eagerly at round start; the jitted version keeps the
+# 1/127-style constants inside the compiled program instead of tripping the
+# implicit-transfer guard with per-round host scalars (cf. _f32_zero below).
+_quantize_entries_jit = jax.jit(quantize_entries)
+
+
+def quantize_table(table: CacheTable) -> CacheTable:
+    """Quantize a float32 table's entries to int8 + bf16 scales."""
+    if table.entry_scale is not None:
+        return table
+    q, scale = quantize_entries(table.entries)
+    return table._replace(entries=q, entry_scale=scale)
+
+
+def dequantize_table(table: CacheTable) -> CacheTable:
+    """Materialise an int8 table back to float32 (no-op on float32 tables)."""
+    if table.entry_scale is None:
+        return table
+    return table._replace(
+        entries=dequantize_entries(table.entries, table.entry_scale),
+        entry_scale=None)
 
 
 def pool_semantic(h: jax.Array, mask: jax.Array | None = None) -> jax.Array:
@@ -190,7 +260,12 @@ def lookup_all_layers_ref(table: CacheTable, sems: jax.Array,
     (:func:`repro.kernels.cache_lookup.cache_lookup_all_layers`) and the
     CPU fallback; it is also the only path that materialises the full
     ``(B, L, I)`` accumulator (``acc``).
+
+    Quantized (int8) tables are dequantized up front — this defines the
+    reference semantics the fused quantized kernels reproduce (they fold the
+    identical elementwise ``q * scale`` into the slab load).
     """
+    table = dequantize_table(table)
     B = sems.shape[0]
     a0 = jnp.where(table.class_mask, 0.0, NEG) * jnp.ones((B, cfg.num_classes))
 
@@ -248,11 +323,12 @@ def lookup_all_layers(table: CacheTable, sems: jax.Array, cfg: CacheConfig,
         impl = "fused" if jax.default_backend() == "tpu" else "ref"
     if impl == "ref":
         return lookup_all_layers_ref(table, sems, cfg)
+    entry_dtype = "int8" if table.entry_scale is not None else "float32"
     if impl == "fused":
         from repro.kernels.common import single_pass_fits
         impl = ("fused_single"
                 if single_pass_fits(cfg.num_layers, cfg.num_classes,
-                                    cfg.sem_dim)
+                                    cfg.sem_dim, entry_dtype=entry_dtype)
                 else "fused_tiled")
     if impl not in ("fused_single", "fused_tiled"):
         raise ValueError(f"unknown lookup impl: {impl!r}")
@@ -263,7 +339,7 @@ def lookup_all_layers(table: CacheTable, sems: jax.Array, cfg: CacheConfig,
               else cache_lookup_all_layers_tiled)
     scores, preds, exit_layer = kernel(
         sems, table.entries, table.class_mask, table.layer_mask,
-        cfg.theta_vec(), alpha=cfg.alpha)
+        cfg.theta_vec(), alpha=cfg.alpha, entry_scale=table.entry_scale)
     hit = exit_layer < cfg.num_layers
     pred = jnp.take_along_axis(
         preds, jnp.minimum(exit_layer, cfg.num_layers - 1)[:, None], axis=1)[:, 0]
@@ -286,18 +362,31 @@ def _f32_zero() -> jax.Array:
     return _F32_ZERO
 
 
-def allocate_subtable(global_entries: jax.Array, x: jax.Array) -> CacheTable:
+def allocate_subtable(global_entries: jax.Array, x: jax.Array,
+                      *, entry_dtype: str = "float32") -> CacheTable:
     """Extract a client cache from the global table given an allocation matrix.
 
     ``x`` — (L, I) bool indicator (ACA output, transposed to layer-major).
     The paper allocates full rows of the hot-spot set at chosen layers, so
     class/layer masks are recovered by projection.
+
+    ``entry_dtype="int8"`` quantizes the cut on the way out (the download a
+    client/tier actually stores); the server-side ``global_entries`` stay
+    float32.  Unallocated rows quantize to all-zero ``q`` with the floor
+    scale, so masking semantics are unchanged.
     """
     layer_mask = x.any(axis=1)
     class_mask = x.any(axis=0)
     keep = (layer_mask[:, None] & class_mask[None, :])[..., None]
+    entries = jnp.where(keep, global_entries, _f32_zero())
+    if entry_dtype == "int8":
+        q, scale = _quantize_entries_jit(entries)
+        return CacheTable(entries=q, class_mask=class_mask,
+                          layer_mask=layer_mask, entry_scale=scale)
+    if entry_dtype != "float32":
+        raise ValueError(f"unknown entry dtype: {entry_dtype!r}")
     return CacheTable(
-        entries=jnp.where(keep, global_entries, _f32_zero()),
+        entries=entries,
         class_mask=class_mask,
         layer_mask=layer_mask,
     )

@@ -37,13 +37,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.client import ClientUpload
-from repro.core.semantic_cache import CacheConfig, l2_normalize
+from repro.core.semantic_cache import CacheConfig, CacheTable, l2_normalize
 
 
 @dataclasses.dataclass(frozen=True)
 class ServerConfig:
     gamma: float = 0.99       # Eq. (4) decay γ
     r_ema: float = 0.5        # EMA weight for client hit-ratio observations
+    # How a round's K uploads merge (:func:`merge_round`): "auto" picks the
+    # fused Pallas kernel on TPU backends and the scanned reference
+    # elsewhere; "fused" / "ref" pin a path (parity tests, benchmarks).
+    merge_impl: str = "auto"
 
 
 class ServerState(NamedTuple):
@@ -103,6 +107,66 @@ def global_update_body(server: ServerState, up: ClientUpload,
 global_update = partial(jax.jit, static_argnames=("scfg",))(global_update_body)
 
 
+def merge_round(server: ServerState, uploads: ClientUpload,
+                include: jax.Array, scfg: ServerConfig) -> ServerState:
+    """Merge one round's stacked uploads (leading K axis) in client order.
+
+    ``include`` — (K,) bool; an excluded client's Eq.-4/5 update is a no-op
+    (straggler deadline, fault quarantine).  Dispatch per
+    ``scfg.merge_impl``:
+
+    * ``"ref"``   — ``lax.scan`` of :func:`global_update_body` with the
+      include gate applied tree-wide: the bit-for-bit oracle, and the only
+      path that keeps a class-sharded ServerState collective-free.
+    * ``"fused"`` — one Pallas launch for the (L, I, d)/(I,) merge
+      (:func:`repro.kernels.cache_merge.cache_merge_round`) plus a tiny
+      (L,)-shaped ``jnp`` scan for the R-estimate EMA, op-for-op identical
+      to the reference (parity-gated in tests/test_merge_kernel.py).
+    * ``"auto"``  — fused on a TPU backend, reference otherwise (interpret-
+      mode emulation of the kernel is far slower than XLA on CPU).
+
+    Traceable; ``round_step`` calls it inside the round jit.  Standalone
+    callers should use :func:`merge_round_jit` — called eagerly, the fresh
+    scan closure would retrace every round.
+    """
+    impl = scfg.merge_impl
+    if impl == "auto":
+        impl = "fused" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        def merge(srv, inp):
+            up, inc = inp
+            new = global_update_body(srv, up, scfg)
+            return jax.tree_util.tree_map(
+                lambda n, o: jnp.where(inc, n, o), new, srv), None
+        server, _ = jax.lax.scan(merge, server, (uploads, include))
+        return server
+    if impl != "fused":
+        raise ValueError(f"unknown merge impl: {impl!r}")
+
+    from repro.kernels.cache_merge import cache_merge_round
+    entries, phi_global = cache_merge_round(
+        server.entries, server.phi_global, uploads.u, uploads.phi,
+        uploads.u_touched, include, gamma=scfg.gamma)
+
+    # R-estimate EMA: same ops in the same (client) order as the reference.
+    def rstep(r, inp):
+        phi_k, hits_k, looks_k, inc = inp
+        frames = jnp.maximum(phi_k.sum(), 1)
+        obs_cdf = jnp.cumsum(hits_k) / frames
+        new = jnp.where(looks_k > 0,
+                        (1 - scfg.r_ema) * r + scfg.r_ema * obs_cdf, r)
+        return jnp.where(inc, new, r), None
+
+    r_est, _ = jax.lax.scan(
+        rstep, server.r_est,
+        (uploads.phi, uploads.hit_counts, uploads.lookup_counts, include))
+    return ServerState(entries=entries, phi_global=phi_global,
+                       r_est=r_est, upsilon=server.upsilon)
+
+
+merge_round_jit = partial(jax.jit, static_argnames=("scfg",))(merge_round)
+
+
 # ---------------------------------------------------------------------------
 # Upload admission (the hardened Eq.-4/5 merge front door)
 # ---------------------------------------------------------------------------
@@ -131,7 +195,14 @@ def validate_upload(up: ClientUpload, cfg: CacheConfig | None = None) -> str | N
     Host-side and cheap relative to a merge; the chaos harness
     (:mod:`repro.distributed.faults`) routes every post-round merge through
     this plus :func:`upload_digest` duplicate detection.
+
+    Also accepts a :class:`~repro.core.semantic_cache.CacheTable` (the
+    download direction of the same transport): table payloads — including
+    quantized int8 tables, whose NaN-poisoned *scales* are just as fatal as
+    NaN entries — delegate to :func:`validate_table`.
     """
+    if isinstance(up, CacheTable):
+        return validate_table(up, cfg)
     u = np.asarray(jax.device_get(up.u))
     phi = np.asarray(jax.device_get(up.phi))
     tau = np.asarray(jax.device_get(up.tau))
@@ -155,6 +226,49 @@ def validate_upload(up: ClientUpload, cfg: CacheConfig | None = None) -> str | N
         return "u rows exceed the normalised-scale bound"
     if (touched & (norms <= 0.0)).any():
         return "touched cells with all-zero rows"
+    return None
+
+
+def validate_table(table: CacheTable,
+                   cfg: CacheConfig | None = None) -> str | None:
+    """Admission check for a transported cache table (downloads, tier cuts).
+
+    The float32 checks mirror :func:`validate_upload`'s (finiteness, the
+    normalised-scale row bound).  Quantized tables need their own rules:
+    the int8 payload cannot encode a NaN, so transport corruption surfaces
+    in the **bf16 scale plane** instead — a single NaN/Inf (or negative)
+    scale poisons every lookup score of that row exactly like a NaN entry
+    would, and must be rejected at the same door (the chaos-hardening
+    guarantee under ``entry_dtype="int8"``; see tests/test_faults.py).
+    Returns ``None`` when admissible, else a short reason string.
+    """
+    entries = np.asarray(jax.device_get(table.entries))
+    if cfg is not None:
+        want = (cfg.num_layers, cfg.num_classes, cfg.sem_dim)
+        if entries.shape != want:
+            return f"entries shape {entries.shape} != expected {want}"
+    if table.entry_scale is not None:
+        scale = np.asarray(jax.device_get(table.entry_scale),
+                           dtype=np.float32)           # (L, I)
+        if entries.dtype != np.int8:
+            return f"quantized table with {entries.dtype} entries"
+        if scale.shape != entries.shape[:2]:
+            return (f"entry_scale shape {scale.shape} != "
+                    f"{entries.shape[:2]}")
+        if not np.isfinite(scale).all():
+            return "non-finite entry scales"
+        if (scale < 0).any():
+            return "negative entry scales"
+        # Dequantized row norm bound — same transported-scale rule as u.
+        norms = np.linalg.norm(entries.astype(np.float32)
+                               * scale[..., None], axis=-1)
+        if (norms > _U_NORM_BOUND).any():
+            return "dequantized rows exceed the normalised-scale bound"
+        return None
+    if not np.isfinite(entries).all():
+        return "non-finite entries"
+    if (np.linalg.norm(entries, axis=-1) > _U_NORM_BOUND).any():
+        return "entry rows exceed the normalised-scale bound"
     return None
 
 

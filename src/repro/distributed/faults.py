@@ -306,7 +306,26 @@ def corrupt_table(table: CacheTable, rng: np.random.Generator) -> CacheTable:
     """A scrambled download: heavy gaussian noise swamps the entry
     directions, so lookups against it hit rarely and wrongly.  A hardened
     client detects the bad checksum and treats the transfer as failed; a
-    naive client serves a round from garbage."""
+    naive client serves a round from garbage.
+
+    Quantized (int8) tables cannot encode NaN in the payload, so the bit
+    flips land where they actually hurt: the bf16 **scale plane** gets NaN
+    poison (plus sign-flipped entries), the exact corruption
+    :func:`~repro.core.server.validate_table` must turn away."""
+    if table.entry_scale is not None:
+        q = np.array(jax.device_get(table.entries), np.int8)
+        flat = q.reshape(-1)
+        idx = rng.choice(flat.size, size=max(2, flat.size // 64),
+                         replace=False)
+        flat[idx] = -flat[idx]
+        scale = np.array(jax.device_get(table.entry_scale), np.float32)
+        sflat = scale.reshape(-1)
+        sidx = rng.choice(sflat.size, size=max(1, sflat.size // 16),
+                          replace=False)
+        sflat[sidx] = np.nan
+        return table._replace(
+            entries=jnp.asarray(q),
+            entry_scale=jnp.asarray(scale).astype(jnp.bfloat16))
     e = np.array(jax.device_get(table.entries), np.float32)
     noise = rng.normal(scale=1.0, size=e.shape).astype(np.float32)
     return table._replace(entries=jnp.asarray(0.1 * e + noise))
@@ -324,8 +343,9 @@ def truncate_table(table: CacheTable, frac: float) -> CacheTable:
     keep = hot[: max(1, int(np.ceil(frac * hot.size)))]
     new_mask = np.zeros_like(mask)
     new_mask[keep] = True
-    entries = np.array(jax.device_get(table.entries), np.float32)
-    entries[:, ~new_mask] = 0.0
+    # dtype-preserving: an int8 table's truncated rows stay int8 zeros.
+    entries = np.array(jax.device_get(table.entries))
+    entries[:, ~new_mask] = 0
     return table._replace(entries=jnp.asarray(entries),
                           class_mask=jnp.asarray(new_mask))
 

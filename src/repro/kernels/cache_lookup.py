@@ -184,9 +184,14 @@ def cache_lookup_layer(sem: jax.Array, entries: jax.Array, class_mask: jax.Array
 # ---------------------------------------------------------------------------
 
 def _kernel_all(sem_ref, entries_ref, cmask_ref, lmask_ref, theta_ref,
-                score_ref, pred_ref, exit_ref,                # outputs
-                a_ref,                                        # scratch
-                *, alpha: float, num_layers: int, n_i_tiles: int):
+                *args,
+                alpha: float, num_layers: int, n_i_tiles: int,
+                quantized: bool):
+    if quantized:
+        (scale_ref, score_ref, pred_ref, exit_ref, a_ref) = args
+    else:
+        (score_ref, pred_ref, exit_ref, a_ref) = args
+        scale_ref = None
     bt = a_ref.shape[0]
 
     # Eq.-1 accumulator A: 0 for active classes, NEG for inactive/padded —
@@ -210,6 +215,12 @@ def _kernel_all(sem_ref, entries_ref, cmask_ref, lmask_ref, theta_ref,
         for it in range(n_i_tiles):
             lo = it * I_TILE
             e = entries_ref[j, lo:lo + I_TILE, :].astype(jnp.float32)
+            if quantized:
+                # Same elementwise q * scale the reference path materialises
+                # (lookup_all_layers_ref dequantizes up front) — bitwise-equal
+                # dequantized operands feed the identical MXU dot.
+                s = scale_ref[j, lo:lo + I_TILE].astype(jnp.float32)
+                e = e * s[:, None]
             c = jnp.dot(semn, e.T,
                         preferred_element_type=jnp.float32)   # (B_t, I_t)
             apv = a_ref[:, lo:lo + I_TILE]
@@ -245,13 +256,16 @@ def _kernel_all(sem_ref, entries_ref, cmask_ref, lmask_ref, theta_ref,
 def cache_lookup_all_layers(sems: jax.Array, entries: jax.Array,
                             class_mask: jax.Array, layer_mask: jax.Array,
                             theta: jax.Array, *, alpha: float = 0.5,
+                            entry_scale: jax.Array | None = None,
                             interpret: bool | None = None):
     """Full Eq. (1)/(2) lookup across all L layers in one ``pallas_call``.
 
-    sems (B, L, d) raw pooled tap vectors; entries (L, I, d) unit rows;
-    class_mask (I,) bool; layer_mask (L,) bool; theta (L,) per-layer Θ.
-    Returns (scores (B, L) f32, preds (B, L) i32, exit_layer (B,) i32 with
-    L meaning "no hit").  The (B, L, I) accumulator never touches HBM.
+    sems (B, L, d) raw pooled tap vectors; entries (L, I, d) unit rows
+    (float32) or int8 quantized rows with ``entry_scale`` (L, I) bf16
+    per-row scales; class_mask (I,) bool; layer_mask (L,) bool; theta (L,)
+    per-layer Θ.  Returns (scores (B, L) f32, preds (B, L) i32, exit_layer
+    (B,) i32 with L meaning "no hit").  The (B, L, I) accumulator never
+    touches HBM.
     """
     interpret = _resolve_interpret(interpret)
     B, L, d = sems.shape
@@ -264,6 +278,19 @@ def cache_lookup_all_layers(sems: jax.Array, entries: jax.Array,
     lmp = layer_mask.astype(jnp.int32)
     thp = theta.astype(jnp.float32)
     n_i = Ip // I_TILE
+    quantized = entry_scale is not None
+
+    inputs = [semp, ep, cmp_, lmp, thp]
+    in_specs = [
+        pl.BlockSpec((B_TILE, L, d), lambda b: (b, 0, 0)),
+        pl.BlockSpec((L, Ip, d), lambda b: (0, 0, 0)),
+        pl.BlockSpec((Ip,), lambda b: (0,)),
+        pl.BlockSpec((L,), lambda b: (0,)),
+        pl.BlockSpec((L,), lambda b: (0,)),
+    ]
+    if quantized:
+        inputs.append(jnp.pad(entry_scale, ((0, 0), (0, Ip - I))))
+        in_specs.append(pl.BlockSpec((L, Ip), lambda b: (0, 0)))
 
     out_shapes = (
         jax.ShapeDtypeStruct((Bp, L), jnp.float32),    # scores
@@ -272,15 +299,9 @@ def cache_lookup_all_layers(sems: jax.Array, entries: jax.Array,
     )
     scores, preds, exit_layer = pl.pallas_call(
         functools.partial(_kernel_all, alpha=alpha, num_layers=L,
-                          n_i_tiles=n_i),
+                          n_i_tiles=n_i, quantized=quantized),
         grid=(Bp // B_TILE,),
-        in_specs=[
-            pl.BlockSpec((B_TILE, L, d), lambda b: (b, 0, 0)),
-            pl.BlockSpec((L, Ip, d), lambda b: (0, 0, 0)),
-            pl.BlockSpec((Ip,), lambda b: (0,)),
-            pl.BlockSpec((L,), lambda b: (0,)),
-            pl.BlockSpec((L,), lambda b: (0,)),
-        ],
+        in_specs=in_specs,
         out_specs=(
             pl.BlockSpec((B_TILE, L), lambda b: (b, 0)),
             pl.BlockSpec((B_TILE, L), lambda b: (b, 0)),
@@ -291,7 +312,7 @@ def cache_lookup_all_layers(sems: jax.Array, entries: jax.Array,
         ],
         out_shape=out_shapes,
         interpret=interpret,
-    )(semp, ep, cmp_, lmp, thp)
+    )(*inputs)
     return scores[:B], preds[:B], exit_layer[:B]
 
 
@@ -299,71 +320,121 @@ def cache_lookup_all_layers(sems: jax.Array, entries: jax.Array,
 # class-tiled all-layer kernel (huge-I tables that overflow VMEM)
 # ---------------------------------------------------------------------------
 
-def _kernel_all_tiled(sem_ref, entries_ref, cmask_ref, lmask_ref, theta_ref,
-                      score_ref, pred_ref, exit_ref,           # outputs
-                      m1_ref, m2_ref, a1_ref,                  # scratch
-                      *, alpha: float, num_layers: int, n_c_blocks: int,
-                      i_block: int):
-    """One (batch-tile, class-block) grid step of the tiled lookup.
+def _kernel_all_tiled(sem_ref, entries_hbm, cmask_hbm, lmask_ref, theta_ref,
+                      *args,
+                      alpha: float, num_layers: int, n_c_blocks: int,
+                      i_block: int, quantized: bool):
+    """One batch-tile grid step of the tiled lookup, class blocks streamed
+    through a **double-buffered DMA pipeline**.
 
-    The grid is ``(n_b_tiles, n_c_blocks)`` with the class-block axis minor,
-    so for a fixed batch tile the blocks arrive in class order and the
-    ``(B_TILE, L)`` running top-2/argmax scratch carries across revisits.
+    ``entries``/``class_mask`` (and the scale plane when quantized) arrive
+    unblocked (``ANY`` memory space = HBM on TPU); the kernel owns the slab
+    movement: two ``(L, i_block, d)`` VMEM slots, block ``t+1``'s async copy
+    started before block ``t``'s compute begins, so the MXU never waits on a
+    slab in the steady state — the lookup is bandwidth-, not latency-bound.
     The Eq.-1 accumulator only ever needs this block's ``(B_TILE, i_block)``
-    column range — accumulation is columnwise across layers — so it is a
-    block-local value, not persistent state.
+    column range — accumulation is columnwise across layers — so it rides the
+    ``fori_loop`` carry with the running per-layer top-2/argmax state rather
+    than persisting in scratch across grid revisits (there are none: the grid
+    is batch tiles only).
     """
-    t = pl.program_id(1)
-    bt = m1_ref.shape[0]
-    lo = t * i_block                       # global class offset of this block
+    if quantized:
+        (scale_hbm, score_ref, pred_ref, exit_ref,
+         ent_sl, msk_sl, scl_sl, dma_sems) = args
+    else:
+        (score_ref, pred_ref, exit_ref, ent_sl, msk_sl, dma_sems) = args
+        scale_hbm = scl_sl = None
+    bt = score_ref.shape[0]
 
-    # First class block of a batch tile: reset the carried top-2 state.
-    @pl.when(t == 0)
-    def _():
-        m1_ref[...] = jnp.full_like(m1_ref, NEG)
-        m2_ref[...] = jnp.full_like(m2_ref, NEG)
-        a1_ref[...] = jnp.zeros_like(a1_ref)
+    def ent_dma(slot, t):
+        return pltpu.make_async_copy(
+            entries_hbm.at[:, pl.ds(t * i_block, i_block), :],
+            ent_sl.at[slot], dma_sems.at[slot, 0])
 
-    cmask = cmask_ref[...] > 0                                # (i_block,)
-    a_prev = jnp.where(cmask[None, :], 0.0, NEG) * jnp.ones((bt, 1))
+    def msk_dma(slot, t):
+        return pltpu.make_async_copy(
+            cmask_hbm.at[pl.ds(t * i_block, i_block)],
+            msk_sl.at[slot], dma_sems.at[slot, 1])
 
-    for j in range(num_layers):
-        s = sem_ref[:, j, :].astype(jnp.float32)              # (B_t, d)
-        norm = jnp.sqrt(jnp.sum(s * s, axis=1, keepdims=True)) + 1e-8
-        semn = s / norm
-        active = lmask_ref[j] > 0
+    def scl_dma(slot, t):
+        return pltpu.make_async_copy(
+            scale_hbm.at[:, pl.ds(t * i_block, i_block)],
+            scl_sl.at[slot], dma_sems.at[slot, 2])
 
-        e = entries_ref[j].astype(jnp.float32)                # (i_block, d)
-        c = jnp.dot(semn, e.T,
-                    preferred_element_type=jnp.float32)       # (B_t, i_block)
-        at = jnp.where(cmask[None, :], c + alpha * a_prev, NEG)   # Eq. (1)
-        # Inactive layer: carry the accumulator state unchanged.
-        a_prev = jnp.where(active, at, a_prev)
+    def start(slot, t):
+        ent_dma(slot, t).start()
+        msk_dma(slot, t).start()
+        if quantized:
+            scl_dma(slot, t).start()
 
-        # Block-local top-2, merged into the carried per-layer state.
-        cols = jax.lax.broadcasted_iota(jnp.int32, at.shape, 1) + lo
-        b1 = jnp.max(at, axis=1)
-        ba1 = jnp.argmax(at, axis=1).astype(jnp.int32) + lo
-        b2 = jnp.max(jnp.where(cols == ba1[:, None], NEG, at), axis=1)
-        m1, m2, a1 = m1_ref[:, j], m2_ref[:, j], a1_ref[:, j]
-        a1_ref[:, j] = jnp.where(b1 > m1, ba1, a1)
-        m2_ref[:, j] = jnp.maximum(jnp.maximum(m2, b2), jnp.minimum(m1, b1))
-        m1_ref[:, j] = jnp.maximum(m1, b1)
+    def wait(slot, t):
+        ent_dma(slot, t).wait()
+        msk_dma(slot, t).wait()
+        if quantized:
+            scl_dma(slot, t).wait()
 
-    # Last class block: Eq. (2) + first-hit exit from the merged state.
-    @pl.when(t == n_c_blocks - 1)
-    def _():
-        m1, m2 = m1_ref[...], m2_ref[...]                     # (B_t, L)
-        d = jnp.where(m2 > 1e-6, (m1 - m2) / jnp.maximum(m2, 1e-6), 0.0)
-        d = jnp.where(m2 <= NEG / 2, 0.0, d)
-        active = lmask_ref[...] > 0                           # (L,)
-        d = jnp.where(active[None, :], d, 0.0)
-        score_ref[...] = d
-        pred_ref[...] = a1_ref[...]
-        hits = active[None, :] & (d > theta_ref[...][None, :])
-        first = jnp.argmax(hits, axis=1).astype(jnp.int32)
-        exit_ref[...] = jnp.where(hits.any(axis=1), first,
-                                  num_layers).astype(jnp.int32)
+    start(0, 0)                                       # warm-up: block 0
+
+    # Normalise the taps once for the whole block sweep.
+    s = sem_ref[...].astype(jnp.float32)              # (B_t, L, d)
+    norm = jnp.sqrt(jnp.sum(s * s, axis=2, keepdims=True)) + 1e-8
+    semn_all = s / norm
+
+    def block_step(t, carry):
+        m1c, m2c, a1c = carry                         # (B_t, L) each
+        slot = jax.lax.rem(t, 2)
+
+        @pl.when(t + 1 < n_c_blocks)
+        def _():                                      # prefetch block t+1
+            start(jax.lax.rem(t + 1, 2), t + 1)
+
+        wait(slot, t)
+        lo = t * i_block                  # global class offset of this block
+        cmask = msk_sl[slot] > 0                      # (i_block,)
+        a_prev = jnp.where(cmask[None, :], 0.0, NEG) * jnp.ones((bt, 1))
+
+        for j in range(num_layers):
+            semn = semn_all[:, j, :]
+            active = lmask_ref[j] > 0
+
+            e = ent_sl[slot, j].astype(jnp.float32)   # (i_block, d)
+            if quantized:
+                e = e * scl_sl[slot, j].astype(jnp.float32)[:, None]
+            c = jnp.dot(semn, e.T,
+                        preferred_element_type=jnp.float32)  # (B_t, i_block)
+            at = jnp.where(cmask[None, :], c + alpha * a_prev, NEG)  # Eq. (1)
+            # Inactive layer: carry the accumulator state unchanged.
+            a_prev = jnp.where(active, at, a_prev)
+
+            # Block-local top-2, merged into the carried per-layer state.
+            cols = jax.lax.broadcasted_iota(jnp.int32, at.shape, 1) + lo
+            b1 = jnp.max(at, axis=1)
+            ba1 = jnp.argmax(at, axis=1).astype(jnp.int32) + lo
+            b2 = jnp.max(jnp.where(cols == ba1[:, None], NEG, at), axis=1)
+            m1, m2, a1 = m1c[:, j], m2c[:, j], a1c[:, j]
+            a1c = a1c.at[:, j].set(jnp.where(b1 > m1, ba1, a1))
+            m2c = m2c.at[:, j].set(jnp.maximum(jnp.maximum(m2, b2),
+                                               jnp.minimum(m1, b1)))
+            m1c = m1c.at[:, j].set(jnp.maximum(m1, b1))
+        return m1c, m2c, a1c
+
+    m1, m2, a1 = jax.lax.fori_loop(
+        0, n_c_blocks, block_step,
+        (jnp.full((bt, num_layers), NEG, jnp.float32),
+         jnp.full((bt, num_layers), NEG, jnp.float32),
+         jnp.zeros((bt, num_layers), jnp.int32)))
+
+    # All blocks merged: Eq. (2) + first-hit exit.
+    d = jnp.where(m2 > 1e-6, (m1 - m2) / jnp.maximum(m2, 1e-6), 0.0)
+    d = jnp.where(m2 <= NEG / 2, 0.0, d)
+    active = lmask_ref[...] > 0                       # (L,)
+    d = jnp.where(active[None, :], d, 0.0)
+    score_ref[...] = d
+    pred_ref[...] = a1
+    hits = active[None, :] & (d > theta_ref[...][None, :])
+    first = jnp.argmax(hits, axis=1).astype(jnp.int32)
+    exit_ref[...] = jnp.where(hits.any(axis=1), first,
+                              num_layers).astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "i_block", "interpret"))
@@ -371,16 +442,19 @@ def cache_lookup_all_layers_tiled(sems: jax.Array, entries: jax.Array,
                                   class_mask: jax.Array, layer_mask: jax.Array,
                                   theta: jax.Array, *, alpha: float = 0.5,
                                   i_block: int | None = None,
+                                  entry_scale: jax.Array | None = None,
                                   interpret: bool | None = None):
     """Class-tiled variant of :func:`cache_lookup_all_layers` for tables too
     large to hold ``entries (L, I, d)`` VMEM-resident.
 
     Same contract as the single-pass kernel (returns ``(scores (B, L),
-    preds (B, L), exit_layer (B,))``) but the grid gains a minor class-block
-    axis: each step streams one ``(L, i_block, d)`` entries slab through
-    VMEM, and the running per-layer top-2/argmax state persists in scratch
-    across block revisits.  VMEM use is O(``L·i_block·d``) instead of
-    O(``L·I·d``), so ``I`` is bounded by HBM, not VMEM.
+    preds (B, L), exit_layer (B,))``) but ``entries`` stays in HBM
+    (``ANY`` memory space) and the kernel streams ``(L, i_block, d)`` slabs
+    through a two-slot VMEM scratch with manual async copies, prefetching
+    block ``t+1`` while block ``t`` computes (double buffering).  VMEM use is
+    O(``2·L·i_block·d``) instead of O(``L·I·d``), so ``I`` is bounded by HBM,
+    not VMEM.  Quantized (int8 + bf16 scale) tables stream a third slab of
+    per-row scales and dequantize in-register after the copy.
 
     ``i_block`` — class-block width (rounded to an ``I_TILE`` multiple);
     ``None`` picks the largest block whose working set fits the budget
@@ -389,8 +463,10 @@ def cache_lookup_all_layers_tiled(sems: jax.Array, entries: jax.Array,
     interpret = _resolve_interpret(interpret)
     B, L, d = sems.shape
     I = entries.shape[1]
+    quantized = entry_scale is not None
     if i_block is None:
-        i_block = pick_class_block(L, d)
+        i_block = pick_class_block(
+            L, d, entry_dtype="int8" if quantized else "float32")
     i_block = max(I_TILE, (i_block // I_TILE) * I_TILE)
     Bp = -(-B // B_TILE) * B_TILE
     Ip = -(-I // i_block) * i_block
@@ -401,6 +477,27 @@ def cache_lookup_all_layers_tiled(sems: jax.Array, entries: jax.Array,
     thp = theta.astype(jnp.float32)
     n_c = Ip // i_block
 
+    any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+    inputs = [semp, ep, cmp_, lmp, thp]
+    in_specs = [
+        pl.BlockSpec((B_TILE, L, d), lambda b: (b, 0, 0)),
+        any_spec,                                      # entries: kernel DMAs
+        any_spec,                                      # class mask: ditto
+        pl.BlockSpec((L,), lambda b: (0,)),
+        pl.BlockSpec((L,), lambda b: (0,)),
+    ]
+    n_dma = 2
+    scratch = [
+        pltpu.VMEM((2, L, i_block, d), ep.dtype),      # entry slabs (2 slots)
+        pltpu.VMEM((2, i_block), jnp.int32),           # class-mask slabs
+    ]
+    if quantized:
+        inputs.append(jnp.pad(entry_scale, ((0, 0), (0, Ip - I))))
+        in_specs.append(any_spec)                      # scales: kernel DMAs
+        scratch.append(pltpu.VMEM((2, L, i_block), entry_scale.dtype))
+        n_dma = 3
+    scratch.append(pltpu.SemaphoreType.DMA((2, n_dma)))
+
     out_shapes = (
         jax.ShapeDtypeStruct((Bp, L), jnp.float32),    # scores
         jax.ShapeDtypeStruct((Bp, L), jnp.int32),      # per-layer argmax
@@ -408,26 +505,17 @@ def cache_lookup_all_layers_tiled(sems: jax.Array, entries: jax.Array,
     )
     scores, preds, exit_layer = pl.pallas_call(
         functools.partial(_kernel_all_tiled, alpha=alpha, num_layers=L,
-                          n_c_blocks=n_c, i_block=i_block),
-        grid=(Bp // B_TILE, n_c),
-        in_specs=[
-            pl.BlockSpec((B_TILE, L, d), lambda b, t: (b, 0, 0)),
-            pl.BlockSpec((L, i_block, d), lambda b, t: (0, t, 0)),
-            pl.BlockSpec((i_block,), lambda b, t: (t,)),
-            pl.BlockSpec((L,), lambda b, t: (0,)),
-            pl.BlockSpec((L,), lambda b, t: (0,)),
-        ],
+                          n_c_blocks=n_c, i_block=i_block,
+                          quantized=quantized),
+        grid=(Bp // B_TILE,),
+        in_specs=in_specs,
         out_specs=(
-            pl.BlockSpec((B_TILE, L), lambda b, t: (b, 0)),
-            pl.BlockSpec((B_TILE, L), lambda b, t: (b, 0)),
-            pl.BlockSpec((B_TILE,), lambda b, t: (b,)),
+            pl.BlockSpec((B_TILE, L), lambda b: (b, 0)),
+            pl.BlockSpec((B_TILE, L), lambda b: (b, 0)),
+            pl.BlockSpec((B_TILE,), lambda b: (b,)),
         ),
-        scratch_shapes=[
-            pltpu.VMEM((B_TILE, L), jnp.float32),      # running top-1
-            pltpu.VMEM((B_TILE, L), jnp.float32),      # running top-2
-            pltpu.VMEM((B_TILE, L), jnp.int32),        # running argmax
-        ],
+        scratch_shapes=scratch,
         out_shape=out_shapes,
         interpret=interpret,
-    )(semp, ep, cmp_, lmp, thp)
+    )(*inputs)
     return scores[:B], preds[:B], exit_layer[:B]

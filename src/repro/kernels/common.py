@@ -20,6 +20,20 @@ VMEM_BYTES = 16 * 2 ** 20          # per-core VMEM (TPU v4/v5-class)
 VMEM_FRACTION = 0.75               # plannable fraction (pipeline headroom)
 _F32 = 4                           # bytes
 
+# Per-element entry bytes by table dtype, plus the per-(layer, class) scale
+# that rides along with quantized entries (bf16, see kv_quant idiom in
+# repro.core.semantic_cache.quantize_entries).
+_ENTRY_BYTES = {"float32": 4, "int8": 1}
+_SCALE_BYTES = {"float32": 0, "int8": 2}
+
+
+def entry_row_bytes(sem_dim: int, entry_dtype: str = "float32") -> int:
+    """Bytes of one (layer, class) entry row: d elements + its scale."""
+    try:
+        return sem_dim * _ENTRY_BYTES[entry_dtype] + _SCALE_BYTES[entry_dtype]
+    except KeyError:
+        raise ValueError(f"unknown entry dtype: {entry_dtype!r}") from None
+
 
 def default_interpret() -> bool:
     """Interpret Pallas kernels unless we are on a real TPU backend."""
@@ -40,15 +54,17 @@ def _round_up(n: int, m: int) -> int:
 
 
 def lookup_single_pass_vmem_bytes(num_layers: int, num_classes: int,
-                                  sem_dim: int, b_tile: int = B_TILE) -> int:
+                                  sem_dim: int, b_tile: int = B_TILE,
+                                  entry_dtype: str = "float32") -> int:
     """Resident bytes of the single-pass fused lookup at one grid step.
 
-    The whole ``entries (L, I_pad, d)`` table, one batch tile of taps, and
-    the ``(B_TILE, I_pad)`` Eq.-1 accumulator all live in VMEM together —
-    this is the ceiling the class-tiled variant removes.
+    The whole ``entries (L, I_pad, d)`` table (plus its bf16 scale plane when
+    quantized), one batch tile of taps, and the ``(B_TILE, I_pad)`` Eq.-1
+    accumulator all live in VMEM together — this is the ceiling the
+    class-tiled variant removes.
     """
     ip = _round_up(max(num_classes, 1), I_TILE)
-    entries = num_layers * ip * sem_dim * _F32
+    entries = num_layers * ip * entry_row_bytes(sem_dim, entry_dtype)
     taps = b_tile * num_layers * sem_dim * _F32
     acc = b_tile * ip * _F32
     outs = b_tile * (2 * num_layers + 1) * _F32
@@ -56,11 +72,19 @@ def lookup_single_pass_vmem_bytes(num_layers: int, num_classes: int,
 
 
 def lookup_tiled_vmem_bytes(num_layers: int, i_block: int, sem_dim: int,
-                            b_tile: int = B_TILE) -> int:
+                            b_tile: int = B_TILE,
+                            entry_dtype: str = "float32") -> int:
     """Resident bytes of the class-tiled lookup at one grid step: one
-    ``(L, i_block, d)`` entries slab, one tile of taps, the per-block Eq.-1
-    accumulator, and the ``(B_TILE, L)`` running top-2/argmax scratch."""
-    entries = num_layers * i_block * sem_dim * _F32
+    ``(L, i_block, d)`` entries slab (+ scale plane when quantized), one tile
+    of taps, the per-block Eq.-1 accumulator, and the ``(B_TILE, L)`` running
+    top-2/argmax scratch.
+
+    The kernel double-buffers the slab DMA through a two-slot scratch; the
+    second slot occupies the same pipeline headroom ``VMEM_FRACTION`` always
+    reserved for Pallas' automatic input double-buffering, so the plannable
+    working set stays one slab.
+    """
+    entries = num_layers * i_block * entry_row_bytes(sem_dim, entry_dtype)
     taps = b_tile * num_layers * sem_dim * _F32
     acc = 2 * b_tile * i_block * _F32          # a_prev + candidate
     top2 = 3 * b_tile * num_layers * _F32
@@ -69,19 +93,25 @@ def lookup_tiled_vmem_bytes(num_layers: int, i_block: int, sem_dim: int,
 
 
 def single_pass_fits(num_layers: int, num_classes: int, sem_dim: int,
-                     b_tile: int = B_TILE) -> bool:
+                     b_tile: int = B_TILE,
+                     entry_dtype: str = "float32") -> bool:
     """Can the whole table stay VMEM-resident for the single-pass kernel?"""
     return (lookup_single_pass_vmem_bytes(num_layers, num_classes, sem_dim,
-                                          b_tile) <= vmem_budget_bytes())
+                                          b_tile, entry_dtype)
+            <= vmem_budget_bytes())
 
 
 def pick_class_block(num_layers: int, sem_dim: int,
-                     b_tile: int = B_TILE, max_block: int = 4096) -> int:
+                     b_tile: int = B_TILE, max_block: int = 4096,
+                     entry_dtype: str = "float32") -> int:
     """Largest I-block (multiple of ``I_TILE``, ≤ ``max_block``) whose tiled
-    working set fits the VMEM budget.  Always returns at least ``I_TILE``."""
+    working set fits the VMEM budget.  Always returns at least ``I_TILE``.
+    int8 entries shrink the slab ~4×, so the quantized block is never smaller
+    than the float32 one for the same budget (property-tested)."""
     block = max_block
     while block > I_TILE and (lookup_tiled_vmem_bytes(num_layers, block,
-                                                      sem_dim, b_tile)
+                                                      sem_dim, b_tile,
+                                                      entry_dtype)
                               > vmem_budget_bytes()):
         block -= I_TILE
     return max(block, I_TILE)

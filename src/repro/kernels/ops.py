@@ -17,6 +17,7 @@ from repro.kernels.cache_lookup import (cache_lookup_all_layers,  # noqa: F401
                                         cache_lookup_all_layers_tiled,
                                         cache_lookup_layer,
                                         default_interpret)
+from repro.kernels.cache_merge import cache_merge_round  # noqa: F401
 from repro.kernels.decode_attention import (combine_partials,  # noqa: F401
                                             decode_attention)
 from repro.kernels.flash_attention import flash_attention as _flash

@@ -72,7 +72,8 @@ def allocate_serving_table(server, policy, cache_cfg: CacheConfig,
         upsilon=np.asarray(jax.device_get(server.upsilon)),
         entry_sizes=cost_model.entry_sizes(), mem_budget=mem_budget,
         round_frames=round_frames)
-    return allocate_subtable(server.entries, jnp.asarray(policy.allocate(ctx)))
+    return allocate_subtable(server.entries, jnp.asarray(policy.allocate(ctx)),
+                             entry_dtype=cache_cfg.entry_dtype)
 
 
 def empty_serving_table(cfg: ModelConfig) -> CacheTable:

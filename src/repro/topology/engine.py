@@ -265,7 +265,8 @@ class TopologyCluster:
         x = np.zeros((cfg.num_layers, cfg.num_classes), bool)
         if st.recency and len(st.layers):
             x[np.ix_(st.layers, sorted(st.recency))] = True
-        return allocate_subtable(entries, jnp.asarray(x))
+        return allocate_subtable(entries, jnp.asarray(x),
+                                 entry_dtype=cfg.entry_dtype)
 
     # ------------------------------------------------------ placement state
     def _touch(self, name: str, cls: int) -> None:

@@ -53,3 +53,39 @@ def test_every_bench_artifact_names_its_emitter():
         assert path.exists(), f"{art.name}: generated_by {src!r} not on disk"
         assert path.parent == BENCH and path.stem in registered, \
             f"{art.name}: emitter {src!r} is not a registered benchmark"
+
+
+def _gate_modules(text: str) -> set[str]:
+    return set(re.findall(r"python -m benchmarks\.(\w+)", text))
+
+
+def test_ci_and_smoke_gates_are_registered_checkable_modules():
+    """Every ``python -m benchmarks.X`` wired into smoke.sh or CI must be a
+    registered module with a ``__main__`` block; modules that define
+    ``check()`` gates must also exit nonzero on violations (so the gate can
+    actually fail the build)."""
+    root = BENCH.parent
+    gates = _gate_modules((root / "scripts" / "smoke.sh").read_text()) | \
+        _gate_modules((root / ".github" / "workflows" / "ci.yml").read_text())
+    gates -= {"run"}                       # the aggregator, not a gate module
+    assert gates, "no benchmark gates wired into smoke.sh/ci.yml"
+    registered = set(_registered_modules())
+    for name in sorted(gates):
+        assert name in registered, f"gate {name} not in run.py MODULES"
+        src = (BENCH / f"{name}.py").read_text()
+        assert "__main__" in src, f"gate {name} has no CLI entry"
+        if "def check(" in src:
+            assert "sys.exit(1" in src, \
+                f"gate {name} defines check() but never exits nonzero"
+    # the merge gate specifically must be a failing check() gate
+    assert "def check(" in (BENCH / "merge_bench.py").read_text()
+
+
+def test_merge_gate_is_wired_into_both_smoke_profiles():
+    """merge_bench --quick runs in BOTH smoke.sh profiles (the full profile
+    also reaches it via ``benchmarks.run``) and in CI."""
+    root = BENCH.parent
+    smoke = (root / "scripts" / "smoke.sh").read_text()
+    assert smoke.count("benchmarks.merge_bench --quick") == 2
+    ci = (root / ".github" / "workflows" / "ci.yml").read_text()
+    assert "benchmarks.merge_bench --quick" in ci

@@ -340,6 +340,42 @@ def test_corruptors_shapes_and_semantics():
                                   np.asarray(table.entries)[:, keep])
 
 
+def test_quantized_corrupt_table_rejected_by_validation():
+    """int8 payloads can't encode NaN, so corrupt_table poisons the bf16
+    scale plane — validate_table/validate_upload must turn that away while
+    still accepting the clean quantized table."""
+    from repro.core.semantic_cache import quantize_table
+
+    sim, cm, server, tap_fn, labels = _world()
+    cluster = _play(_cluster(sim, cm, server), tap_fn, labels, rounds=1)
+    rng = np.random.default_rng(0)
+    table = quantize_table(cluster.allocate_tables()[0])
+    assert api.validate_table(table, sim.cache) is None
+    assert api.validate_upload(table, sim.cache) is None   # dispatches
+
+    bad = corrupt_table(table, rng)
+    assert bad.entries.dtype == np.int8                    # payload stays q
+    assert not np.isfinite(
+        np.asarray(bad.entry_scale, np.float32)).all()     # scales poisoned
+    err = api.validate_table(bad, sim.cache)
+    assert err is not None and "scale" in err
+    assert api.validate_upload(bad, sim.cache) == err
+
+    # a negative scale is equally un-servable
+    neg = table._replace(entry_scale=-jnp.abs(table.entry_scale))
+    assert api.validate_table(neg, sim.cache) is not None
+
+    # fp32 behaviour is unchanged by the new dispatch
+    fp_bad = corrupt_table(cluster.allocate_tables()[0], rng)
+    assert fp_bad.entry_scale is None
+
+    # truncation is dtype-preserving: lost rows become int8 zeros
+    part = truncate_table(table, 0.5)
+    assert part.entries.dtype == np.int8
+    keep = np.asarray(part.class_mask)
+    np.testing.assert_array_equal(np.asarray(part.entries)[:, ~keep], 0)
+
+
 # ---------------------------------------------------------------------------
 # engine seams: tables= / upload_mask=
 # ---------------------------------------------------------------------------

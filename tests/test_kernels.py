@@ -254,6 +254,57 @@ def test_lookup_dispatch_picks_tiled_past_vmem_ceiling():
 
 
 # ---------------------------------------------------------------------------
+# double-buffered DMA pipeline (manual async copies, two-slot scratch)
+# ---------------------------------------------------------------------------
+
+def test_tiled_lookup_odd_block_counts():
+    # 3 and 5 class blocks: the ping-pong slot sequence ends on either
+    # parity, and the final block's prefetch guard (t+1 == n) must not fire.
+    _tiled_case(24, 3 * 256, 4, 16, theta=0.02, seed=21, i_block=256)
+    _tiled_case(24, 5 * 128 - 40, 4, 16, theta=0.02, seed=22, i_block=128)
+
+
+def test_tiled_lookup_max_block_count_ping_pong():
+    # i_block == I_TILE gives the maximal block count: every step computes
+    # slot t%2 while the prefetch for t+1 lands in the opposite slot, so a
+    # slot-reuse bug (overwriting the block still being consumed) shows up
+    # as a parity break here.
+    _tiled_case(16, 9 * 128, 3, 16, theta=0.02, seed=23, i_block=128)
+
+
+def test_tiled_lookup_traces_once_across_rounds():
+    """The pipelined kernel is one jit trace per (table, batch) shape — a
+    round loop re-invoking it must NOT rebuild the DMA pipeline."""
+    from repro.core.semantic_cache import (CacheConfig, CacheTable,
+                                           l2_normalize)
+    from repro.kernels import cache_lookup as kmod
+    from tools.cocalint.sanitize import sentinel_tiled_lookup
+
+    counted, counter = sentinel_tiled_lookup()
+    B, I, L, d = 16, 512, 3, 16
+    cfg = CacheConfig(num_classes=I, num_layers=L, sem_dim=d, theta=0.03)
+    orig = kmod.cache_lookup_all_layers_tiled
+    kmod.cache_lookup_all_layers_tiled = counted
+    try:
+        for r in range(4):                      # 4 same-shape rounds
+            key = jax.random.PRNGKey(100 + r)
+            entries = l2_normalize(jnp.abs(jax.random.normal(key, (L, I, d))))
+            table = CacheTable(entries, jnp.ones(I, bool), jnp.ones(L, bool))
+            sems = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1),
+                                             (B, L, d)))
+            from repro.core.semantic_cache import lookup_all_layers
+            lookup_all_layers(table, sems, cfg, impl="fused_tiled")
+        # one extra distinct shape: a second compile is legitimate
+        sems2 = jnp.abs(jax.random.normal(jax.random.PRNGKey(9),
+                                          (2 * B, L, d)))
+        lookup_all_layers(table, sems2, cfg, impl="fused_tiled")
+    finally:
+        kmod.cache_lookup_all_layers_tiled = orig
+    assert counter.traces == 2, counter.keys
+    counter.assert_one_compile_per_shape()
+
+
+# ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
 

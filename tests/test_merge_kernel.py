@@ -1,0 +1,257 @@
+"""Fused Eq.-4/5 merge kernel vs. the scanned ``global_update_body`` oracle.
+
+The fused path (:func:`repro.kernels.cache_merge.cache_merge_round`) must be
+**bit-for-bit** identical to the sequential ``lax.scan`` over
+``global_update_body`` — the kernel reuses the exact reference expressions
+(including ``l2_normalize`` itself) per (class-tile, client) grid step, so
+any drift is a real bug, not float noise.  Both sides are driven through the
+production dispatcher :func:`repro.core.server.merge_round` so the r_est EMA
+and include-mask handling are covered too.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.client import ClientUpload
+from repro.core.semantic_cache import l2_normalize
+from repro.core.server import ServerConfig, ServerState, merge_round
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _server(key, L, I, d):
+    ks = jax.random.split(key, 4)
+    return ServerState(
+        entries=l2_normalize(jax.random.normal(ks[0], (L, I, d))),
+        phi_global=jnp.abs(jax.random.normal(ks[1], (I,))) * 10,
+        r_est=jnp.sort(jax.random.uniform(ks[2], (L,))),
+        upsilon=jnp.linspace(30.0, 5.0, L))
+
+
+def _uploads(key, K, L, I, d, *, touched_p=0.3, touched=None):
+    """Batched (K-leading) uploads, as ``make_upload`` emits them in
+    ``round_step``'s vectorized path."""
+    ks = jax.random.split(key, 6)
+    if touched is None:
+        touched = jax.random.bernoulli(ks[2], touched_p, (K, L, I))
+    return ClientUpload(
+        tau=jnp.zeros((K, I), jnp.int32),
+        phi=jax.random.randint(ks[0], (K, I), 0, 5),
+        u=jax.random.normal(ks[1], (K, L, I, d)),
+        u_touched=touched,
+        hit_counts=jax.random.randint(ks[3], (K, L), 0, 10),
+        lookup_counts=jax.random.randint(ks[4], (K, L), 0, 20))
+
+
+def _assert_states_equal(a: ServerState, b: ServerState):
+    for name in ServerState._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, name)),
+                                      np.asarray(getattr(b, name)),
+                                      err_msg=f"leaf {name!r} diverged")
+
+
+def _parity(K, L, I, d, seed, *, touched_p=0.3, touched=None, include=None):
+    key = jax.random.fold_in(KEY, seed)
+    server = _server(key, L, I, d)
+    uploads = _uploads(jax.random.fold_in(key, 1), K, L, I, d,
+                       touched_p=touched_p, touched=touched)
+    if include is None:
+        include = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.7, (K,))
+        include = include.at[0].set(True)      # at least one merge happens
+    ref = merge_round(server, uploads, include, ServerConfig(merge_impl="ref"))
+    fused = merge_round(server, uploads, include,
+                        ServerConfig(merge_impl="fused"))
+    _assert_states_equal(fused, ref)
+    return server, fused, ref
+
+
+# ---------------------------------------------------------------------------
+# shape sweep — unaligned I, multi-tile I, single client
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("K,L,I,d", [(3, 4, 100, 32),   # unaligned I
+                                     (1, 2, 128, 16),   # single client, 1 tile
+                                     (5, 3, 37, 8),     # tiny unaligned
+                                     (2, 5, 300, 64)])  # >2 class tiles
+def test_fused_merge_parity_shapes(K, L, I, d):
+    _parity(K, L, I, d, seed=K * 1000 + I)
+
+
+def test_fused_merge_zero_touched():
+    """No client touched anything: entries must come back bit-identical
+    (only phi / r_est move)."""
+    K, L, I, d = 3, 4, 50, 16
+    server, fused, ref = _parity(
+        K, L, I, d, seed=7, touched=jnp.zeros((K, L, I), bool))
+    np.testing.assert_array_equal(np.asarray(fused.entries),
+                                  np.asarray(server.entries))
+
+
+def test_fused_merge_all_excluded():
+    """include all-False (every upload rejected): state is unchanged."""
+    K, L, I, d = 4, 3, 40, 16
+    server, fused, _ = _parity(K, L, I, d, seed=9,
+                               include=jnp.zeros((K,), bool))
+    _assert_states_equal(fused, server)
+
+
+def test_fused_merge_duplicate_class_uploads():
+    """Every client touches the SAME few classes — the sequential
+    client-minor grid order must apply them in upload order, exactly like
+    the scan (later clients see earlier clients' merged entries)."""
+    K, L, I, d = 4, 3, 60, 16
+    touched = jnp.zeros((K, L, I), bool).at[:, :, :5].set(True)
+    _parity(K, L, I, d, seed=11, touched=touched)
+
+
+def test_fused_merge_dense_touched():
+    _parity(3, 4, 64, 32, seed=13, touched_p=1.0)
+
+
+def test_fused_merge_matches_sequential_body_scan():
+    """Belt-and-braces: fused against a hand-rolled *eager* python loop over
+    ``global_update_body`` (not via merge_round's ref branch).  Eager XLA
+    fuses the normalize chain differently from the jitted scan, so this
+    cross-check is allclose at float tolerance; the **bitwise** guarantee is
+    asserted against the production ``lax.scan`` path above."""
+    from repro.core.server import global_update_body
+    K, L, I, d = 3, 4, 33, 16
+    key = jax.random.fold_in(KEY, 99)
+    server = _server(key, L, I, d)
+    uploads = _uploads(jax.random.fold_in(key, 1), K, L, I, d)
+    include = jnp.asarray([True, False, True])
+    scfg = ServerConfig()
+
+    expect = server
+    for k in range(K):
+        up_k = jax.tree_util.tree_map(lambda x: x[k], uploads)
+        new = global_update_body(expect, up_k, scfg)
+        expect = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(include[k], n, o), new, expect)
+
+    fused = merge_round(server, uploads, include,
+                        ServerConfig(merge_impl="fused"))
+    for name in ServerState._fields:
+        np.testing.assert_allclose(np.asarray(getattr(fused, name)),
+                                   np.asarray(getattr(expect, name)),
+                                   rtol=1e-5, atol=1e-6,
+                                   err_msg=f"leaf {name!r} diverged")
+
+
+def test_merge_round_rejects_unknown_impl():
+    server = _server(KEY, 2, 8, 8)
+    uploads = _uploads(jax.random.fold_in(KEY, 1), 1, 2, 8, 8)
+    with pytest.raises(ValueError, match="unknown merge impl"):
+        merge_round(server, uploads, jnp.ones((1,), bool),
+                    ServerConfig(merge_impl="warp"))
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded entries
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_fused_merge_sharded_parity():
+    """The fused kernel consumes a class-sharded global table and still
+    matches the dense scan bit-for-bit (XLA replicates into the kernel;
+    correctness, not placement, is the contract here)."""
+    from tests.conftest import run_multidevice
+    run_multidevice("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.client import ClientUpload
+from repro.core.semantic_cache import l2_normalize
+from repro.core.server import ServerConfig, ServerState, merge_round
+from repro.distributed.sharding import shard_server_state
+
+K, L, I, d = 3, 4, 64, 16
+k = jax.random.PRNGKey(0)
+srv = ServerState(
+    entries=l2_normalize(jax.random.normal(k, (L, I, d))),
+    phi_global=jnp.abs(jax.random.normal(jax.random.fold_in(k, 1), (I,))) * 10,
+    r_est=jnp.linspace(0.1, 0.9, L),
+    upsilon=jnp.linspace(30, 5, L))
+ks = jax.random.split(jax.random.fold_in(k, 2), 5)
+up = ClientUpload(
+    tau=jnp.zeros((K, I), jnp.int32),
+    phi=jax.random.randint(ks[0], (K, I), 0, 5),
+    u=jax.random.normal(ks[1], (K, L, I, d)),
+    u_touched=jax.random.bernoulli(ks[2], 0.3, (K, L, I)),
+    hit_counts=jax.random.randint(ks[3], (K, L), 0, 10),
+    lookup_counts=jax.random.randint(ks[4], (K, L), 0, 20))
+inc = jnp.asarray([True, False, True])
+
+ref = merge_round(srv, up, inc, ServerConfig(merge_impl="ref"))
+
+mesh = jax.make_mesh((4,), ("data",))
+srv_sh = shard_server_state(srv, mesh)
+assert "data" in str(srv_sh.entries.sharding.spec), srv_sh.entries.sharding
+fused = merge_round(srv_sh, up, inc, ServerConfig(merge_impl="fused"))
+for name in ("entries", "phi_global", "r_est", "upsilon"):
+    np.testing.assert_array_equal(np.asarray(getattr(fused, name)),
+                                  np.asarray(getattr(ref, name)))
+print("FUSED MERGE SHARDED PARITY OK")
+""", devices=4)
+
+
+# ---------------------------------------------------------------------------
+# engine level: a full CocaCluster round with merge_impl="fused"
+# ---------------------------------------------------------------------------
+
+def test_cluster_fused_merge_bit_for_bit():
+    """Same world, same server, two clusters differing ONLY in
+    ``ServerConfig.merge_impl`` — per-round metrics and the final server
+    state must be bitwise identical."""
+    from repro import api
+    from repro.core import calibrate
+
+    I, L, D, F, K, R = 10, 4, 16, 24, 3, 3
+    cache = api.CacheConfig(num_classes=I, num_layers=L, sem_dim=D,
+                            theta=0.05)
+    cm = calibrate(np.linspace(2.0, 1.0, L + 1), np.full(L, D),
+                   head_cost=0.5)
+    key = jax.random.PRNGKey(0)
+    centroids = jax.random.normal(key, (L, I, D))
+
+    def taps_for(labels, seed):
+        k = jax.random.PRNGKey(seed)
+        lab = jnp.asarray(labels)
+        sems = centroids[:, lab, :].transpose(1, 0, 2) + \
+            0.6 * jax.random.normal(k, (len(labels), L, D))
+        logits = (jax.nn.one_hot(lab, I) * 4.0
+                  + jax.random.normal(jax.random.fold_in(k, 1),
+                                      (len(labels), I)))
+        return sems, logits
+
+    rng = np.random.default_rng(3)
+    labels = rng.integers(0, I, size=(R, K, F))
+    shared = np.tile(np.arange(I), 8)
+
+    results = {}
+    for impl in ("ref", "fused"):
+        sim = api.SimulationConfig(
+            cache=cache, round_frames=F, mem_budget=8_000.0,
+            server=api.ServerConfig(merge_impl=impl))
+        cluster = api.CocaCluster(sim, cm)
+        cluster.bootstrap(jax.random.PRNGKey(0),
+                          lambda lab: taps_for(lab, 999), shared)
+        for r in range(R):
+            cluster.step([api.FrameBatch(*taps_for(labels[r, k_],
+                                                   7 + 13 * r + 131 * k_),
+                                         labels=labels[r, k_])
+                          for k_ in range(K)])
+        results[impl] = cluster
+
+    ref_hist, fused_hist = results["ref"].history, results["fused"].history
+    assert len(ref_hist) == R
+    for m_ref, m_fused in zip(ref_hist, fused_hist):
+        np.testing.assert_array_equal(m_fused.pred, m_ref.pred)
+        np.testing.assert_array_equal(m_fused.hit, m_ref.hit)
+        np.testing.assert_array_equal(m_fused.latency, m_ref.latency)
+    res_ref = results["ref"].result()
+    res_fused = results["fused"].result()
+    assert res_fused.avg_latency == res_ref.avg_latency
+    assert res_fused.hit_ratio == res_ref.hit_ratio
+    assert res_ref.hit_ratio > 0           # the world must exercise merges
+    _assert_states_equal(res_fused.server, res_ref.server)

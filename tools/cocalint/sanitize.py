@@ -144,6 +144,16 @@ def sentinel_batched_lookup():
     return counted_jit(raw, static_argnames=("cfg",))
 
 
+def sentinel_tiled_lookup():
+    """Counted drop-in for the double-buffered class-tiled cache lookup
+    (``repro.kernels.cache_lookup.cache_lookup_all_layers_tiled``) — the
+    manual-DMA pipeline must trace once per table/batch shape, not once per
+    round; monkeypatch the ``cache_lookup`` module binding."""
+    from repro.kernels import cache_lookup as kmod
+    raw = kmod.cache_lookup_all_layers_tiled.__wrapped__
+    return counted_jit(raw, static_argnames=("alpha", "i_block", "interpret"))
+
+
 # ---------------------------------------------------------------------------
 # Checkify debug mode
 # ---------------------------------------------------------------------------
